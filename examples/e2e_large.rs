@@ -1,0 +1,112 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md §E2E): the full system on a real
+//! small workload, proving all layers compose.
+//!
+//! 1. Generates the SUSY-like dataset (500k x 18 by default; the paper's
+//!    SUSY is 5M x 18 — 10x scaled, see DESIGN.md §3), standardizes it,
+//!    shards it over 64 simulated workers.
+//! 2. Trains l2-logistic regression with CentralVR-Async until
+//!    rel-grad-norm <= 1e-5, logging the convergence curve
+//!    (results/e2e_susy.csv) against virtual cluster time with the
+//!    CALIBRATED cost model (per-gradient ns measured on this machine).
+//! 3. Re-runs CentralVR epochs through the AOT HLO engine
+//!    (jax -> Pallas -> HLO text -> PJRT) on a 1000x18 shard and checks
+//!    the iterate matches the native engine — the proof that the L1/L2
+//!    artifacts execute under the L3 coordinator.
+//!
+//! Run: `cargo run --release --example e2e_large [n_samples]`
+//! (needs `make artifacts` for step 3; skipped with a warning otherwise)
+
+use centralvr::algos::{CentralVr, SequentialSolver, SolverConfig};
+use centralvr::config::schema::Algorithm;
+use centralvr::data::shard::ShardedDataset;
+use centralvr::data::synth;
+use centralvr::dist::DistConfig;
+use centralvr::exec::simulator::{self, SimParams};
+use centralvr::hlo_exec::HloEngine;
+use centralvr::model::glm::Problem;
+use centralvr::util::math;
+
+fn main() {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(500_000);
+    let p = 64usize;
+    let tol = 1e-5;
+
+    println!("[1/3] generating susy-like dataset: {n} x 18 ...");
+    let t0 = std::time::Instant::now();
+    let mut data = synth::susy_like_n(n, 2026);
+    centralvr::data::normalize::standardize(&mut data);
+    let sharded = ShardedDataset::split(&data, p, 7);
+    println!("      done in {:.1}s; {p} shards of ~{}", t0.elapsed().as_secs_f64(), sharded.shard(0).n());
+
+    println!("[2/3] CentralVR-Async over {p} simulated workers (calibrated cost model) ...");
+    let cfg = DistConfig {
+        algorithm: Algorithm::CentralVrAsync,
+        p,
+        eta: 1.0 / 18.0,
+        lambda: 1e-4,
+        max_rounds: 100,
+        tol,
+        seed: 11,
+        record_every: p,
+        ..Default::default()
+    };
+    let rep = simulator::run(
+        Problem::Logistic,
+        &sharded,
+        cfg,
+        SimParams::calibrated(18),
+    );
+    println!(
+        "      converged={} virtual_time={:.3}s grad_evals={} server_events={} bytes={}",
+        rep.trace.converged,
+        rep.trace.elapsed_s,
+        rep.trace.grad_evals,
+        rep.counters.server_rounds,
+        rep.counters.bytes_communicated
+    );
+    println!("      convergence curve (virtual s, rel grad norm):");
+    for pt in rep
+        .trace
+        .series
+        .points
+        .iter()
+        .step_by((rep.trace.series.points.len() / 12).max(1))
+    {
+        println!("        t={:>9.3}  rel={:.3e}", pt.time_s, pt.rel_grad_norm);
+    }
+    std::fs::create_dir_all("results").ok();
+    rep.trace
+        .series
+        .write_csv("results/e2e_susy.csv")
+        .expect("write curve");
+    println!("      curve written to results/e2e_susy.csv");
+
+    println!("[3/3] AOT HLO path (jax/Pallas -> HLO text -> PJRT under rust) ...");
+    let dir = HloEngine::default_dir();
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        println!("      SKIPPED: no artifacts at {dir} (run `make artifacts`)");
+        return;
+    }
+    let shard1k = data.slice_rows(0, 1000);
+    let scfg = SolverConfig {
+        eta: 1.0 / 18.0,
+        lambda: 1e-4,
+        epochs: 8,
+        seed: 3,
+    };
+    let hlo = HloEngine::new(&dir).expect("hlo engine");
+    let mut s_hlo =
+        CentralVr::new(&shard1k, Problem::Logistic, scfg).with_engine(Box::new(hlo));
+    let t_hlo = s_hlo.run_to(0.0);
+    let mut s_nat = CentralVr::new(&shard1k, Problem::Logistic, scfg);
+    let t_nat = s_nat.run_to(0.0);
+    let diff = math::rel_l2_diff(&t_hlo.x, &t_nat.x);
+    println!(
+        "      8 epochs on a 1000x18 shard: native-vs-HLO iterate rel diff = {diff:.3e}"
+    );
+    assert!(diff < 1e-3, "HLO/native divergence");
+    println!("      OK — all three layers compose.");
+}

@@ -1,0 +1,44 @@
+//! Quickstart: train l2-regularized logistic regression with CentralVR
+//! (Algorithm 1) on the paper's toy classification problem and compare
+//! against SVRG/SAGA/SGD at the same gradient budget.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use centralvr::prelude::*;
+use centralvr::algos::{self, SequentialSolver};
+
+fn main() {
+    // Paper §6.1 toy setup: n=5000, d=20, two unit-variance gaussians one
+    // unit apart, lambda = 1e-4.
+    let data = synth::toy_classification(5000, 20, 42);
+    let tol = 1e-5; // "five digits of precision"
+
+    println!("CentralVR quickstart — toy logistic, n=5000 d=20, tol {tol:e}\n");
+    println!(
+        "{:<12} {:>10} {:>14} {:>12} {:>10}",
+        "algorithm", "converged", "grad evals", "final rel", "seconds"
+    );
+    for name in ["centralvr", "saga", "svrg", "sgd"] {
+        let cfg = SolverConfig {
+            eta: 0.1,
+            lambda: 1e-4,
+            epochs: 60,
+            seed: 7,
+        };
+        let mut solver = algos::by_name(name, &data, Problem::Logistic, cfg).unwrap();
+        let trace = solver.run_to(tol);
+        println!(
+            "{:<12} {:>10} {:>14} {:>12.3e} {:>10.3}",
+            name,
+            trace.converged,
+            trace
+                .grads_to(tol)
+                .map(|g| g.to_string())
+                .unwrap_or_else(|| "—".into()),
+            trace.series.final_rel(),
+            trace.elapsed_s
+        );
+    }
+    println!("\nExpected: CentralVR reaches tolerance with the fewest gradient");
+    println!("evaluations (Fig. 1 of the paper); plain SGD stalls at its noise floor.");
+}

@@ -1,0 +1,110 @@
+"""AOT compile path: lower every L2 graph to HLO *text* + manifest.json.
+
+HLO text (NOT ``lowered.compile().serialize()`` and NOT a serialized
+HloModuleProto) is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which the xla crate's bundled xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the HLO text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (from python/):
+
+    python -m compile.aot --out-dir ../artifacts --shapes 256x16,1000x18,1000x50
+
+The manifest records, per artifact: logical function name, problem, shard
+shape, parameter signature and output arity, so the Rust ArtifactStore can
+validate calls at load time.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return {"float32": "f32", "int32": "i32"}.get(str(dt), str(dt))
+
+
+def lower_entry(name, fn, args):
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, shapes, problems=model.PROBLEMS, verbose=True):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": 1, "interchange": "hlo-text", "artifacts": []}
+    for n, d in shapes:
+        for problem in problems:
+            for name, fn, args in model.entries(problem, n, d):
+                art = f"{name}_{problem}_n{n}_d{d}"
+                text = lower_entry(name, fn, args)
+                path = os.path.join(out_dir, art + ".hlo.txt")
+                with open(path, "w") as f:
+                    f.write(text)
+                out_arity = len(jax.eval_shape(fn, *args)) if isinstance(
+                    jax.eval_shape(fn, *args), tuple
+                ) else 1
+                manifest["artifacts"].append(
+                    {
+                        "name": art,
+                        "fn": name,
+                        "problem": problem,
+                        "n": n,
+                        "d": d,
+                        "file": art + ".hlo.txt",
+                        "params": [
+                            {"shape": list(a.shape), "dtype": _dtype_name(a.dtype)}
+                            for a in args
+                        ],
+                        "outputs": out_arity,
+                        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                    }
+                )
+                if verbose:
+                    print(f"  {art}: {len(text)} chars")
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"wrote {len(manifest['artifacts'])} artifacts + {mpath}")
+    return manifest
+
+
+def parse_shapes(s: str):
+    out = []
+    for part in s.split(","):
+        n, d = part.lower().split("x")
+        out.append((int(n), int(d)))
+    return out
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument(
+        "--shapes",
+        default="256x16,1000x18,1000x50",
+        help="comma-separated NxD per-worker shard shapes to specialize",
+    )
+    p.add_argument("--out", default=None, help=argparse.SUPPRESS)  # legacy
+    args = p.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    build(out_dir or ".", parse_shapes(args.shapes))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""L1 Pallas kernels for CentralVR (interpret=True on CPU).
+
+Exports:
+  centralvr.matvec          -- tiled A @ x
+  centralvr.vjp             -- tiled A^T c with cross-grid-step accumulation
+  centralvr.full_gradient   -- fused GLM full gradient
+  centralvr.vr_epoch        -- fused sequential CentralVR epoch
+  ref                       -- pure-jnp oracles for all of the above
+"""
+
+from . import centralvr, ref  # noqa: F401

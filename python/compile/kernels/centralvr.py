@@ -1,0 +1,228 @@
+"""L1 Pallas kernels for the CentralVR hot paths.
+
+All kernels run with ``interpret=True`` — the execution image only has the
+CPU PJRT plugin, and real-TPU lowering emits Mosaic custom-calls the CPU
+client cannot execute. Kernel *structure* is nevertheless written for TPU
+(see DESIGN.md §Hardware-Adaptation):
+
+* grids iterate sequentially on TPU, so full-size output blocks whose
+  index_map pins them to block 0 act as cross-step accumulators (the
+  standard revisiting/accumulator pattern);
+* row-blocks of A are streamed HBM->VMEM via BlockSpec; x, gbar and the
+  scalar-gradient table block always fit in VMEM (d*4B plus bn*4B, well
+  under the ~16 MB VMEM budget for every shape we compile);
+* the dense contractions (matvec / vjp / full_gradient) are phrased as
+  jnp.dot on (bn, d) tiles so the TPU backend would place them on the MXU.
+
+Scalar hyper-parameters (eta, lam, 1/n) are passed as shape-(1,) f32 arrays:
+rank-0 blocks are awkward across Pallas versions and SMEM placement is a
+TPU-only detail that interpret mode ignores.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK = 128
+
+
+def _pick_block(n: int, requested: int | None = None) -> int:
+    """Largest divisor of n that is <= requested (default 128)."""
+    cap = requested or DEFAULT_BLOCK
+    bn = min(n, cap)
+    while n % bn != 0:
+        bn -= 1
+    return bn
+
+
+# ---------------------------------------------------------------------------
+# matvec: z = A @ x
+# ---------------------------------------------------------------------------
+
+
+def _matvec_kernel(a_ref, x_ref, z_ref):
+    z_ref[...] = jnp.dot(a_ref[...], x_ref[...])
+
+
+def matvec(A, x, *, block: int | None = None):
+    """Tiled A @ x. Grid over row blocks; x resident in VMEM."""
+    n, d = A.shape
+    bn = _pick_block(n, block)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda g: (g, 0)),
+            pl.BlockSpec((d,), lambda g: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda g: (g,)),
+        out_shape=jax.ShapeDtypeStruct((n,), A.dtype),
+        interpret=True,
+    )(A, x)
+
+
+# ---------------------------------------------------------------------------
+# vjp: g = A^T c   (accumulated across sequential grid steps)
+# ---------------------------------------------------------------------------
+
+
+def _vjp_kernel(a_ref, c_ref, g_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    g_ref[...] += jnp.dot(c_ref[...], a_ref[...])
+
+
+def vjp(A, c, *, block: int | None = None):
+    """Tiled A^T c with a VMEM accumulator pinned across the grid."""
+    n, d = A.shape
+    bn = _pick_block(n, block)
+    return pl.pallas_call(
+        _vjp_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda g: (g, 0)),
+            pl.BlockSpec((bn,), lambda g: (g,)),
+        ],
+        out_specs=pl.BlockSpec((d,), lambda g: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), A.dtype),
+        interpret=True,
+    )(A, c)
+
+
+# ---------------------------------------------------------------------------
+# fused GLM full gradient: (1/n) A^T dloss(Ax, b) + 2 lam x
+# ---------------------------------------------------------------------------
+
+
+def _full_gradient_kernel(problem, a_ref, b_ref, x_ref, s_ref, g_ref):
+    """One row-block: z = A_blk x; c = dloss(z, b_blk); g += A_blk^T c / n.
+
+    s_ref holds (inv_n, lam). The 2*lam*x term is folded into the grid-step-0
+    initialization so the whole gradient comes out of a single kernel.
+    """
+    inv_n = s_ref[0]
+    lam = s_ref[1]
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        g_ref[...] = 2.0 * lam * x_ref[...]
+
+    z = jnp.dot(a_ref[...], x_ref[...])
+    c = ref.dloss(problem, z, b_ref[...])
+    g_ref[...] += inv_n * jnp.dot(c, a_ref[...])
+
+
+def full_gradient(problem, A, b, x, lam, *, block: int | None = None):
+    """Fused full gradient of the regularized GLM objective."""
+    n, d = A.shape
+    bn = _pick_block(n, block)
+    s = jnp.array([1.0 / n, lam], dtype=A.dtype)
+    kern = functools.partial(_full_gradient_kernel, problem)
+    return pl.pallas_call(
+        kern,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda g: (g, 0)),
+            pl.BlockSpec((bn,), lambda g: (g,)),
+            pl.BlockSpec((d,), lambda g: (0,)),
+            pl.BlockSpec((2,), lambda g: (0,)),
+        ],
+        out_specs=pl.BlockSpec((d,), lambda g: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), A.dtype),
+        interpret=True,
+    )(A, b, x, s)
+
+
+# ---------------------------------------------------------------------------
+# fused sequential CentralVR epoch
+# ---------------------------------------------------------------------------
+#
+# The per-sample update has a loop-carried dependence on x, so the kernel
+# keeps x (and the gtilde accumulator) resident in VMEM-backed output refs
+# for the entire epoch and streams row-blocks of the *pre-permuted* data in
+# via the grid. Pre-permuting (A[perm], b[perm], alpha[perm] at L2) turns the
+# random gather of Algorithm 1 into purely sequential HBM reads — the same
+# trick the paper plays at cluster scale, amortizing parameter traffic over
+# an epoch, applied to the HBM<->VMEM boundary.
+#
+# The kernel emits the per-row fresh scalars c (in permuted order); L2
+# scatters them back into the alpha table (alpha.at[perm].set(c)).
+
+
+def _vr_epoch_kernel(
+    problem, bn, a_ref, b_ref, al_ref, gbar_ref, x0_ref, s_ref,
+    x_ref, c_ref, gt_ref,
+):
+    eta = s_ref[0]
+    lam = s_ref[1]
+    inv_n = s_ref[2]
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        x_ref[...] = x0_ref[...]
+        gt_ref[...] = jnp.zeros_like(gt_ref)
+
+    gbar = gbar_ref[...]
+
+    def body(k, _):
+        a = pl.load(a_ref, (pl.ds(k, 1), slice(None)))[0]
+        x = x_ref[...]
+        z = jnp.dot(a, x)
+        c = ref.dloss(problem, z, pl.load(b_ref, (pl.ds(k, 1),))[0])
+        alpha_k = pl.load(al_ref, (pl.ds(k, 1),))[0]
+        g = (c - alpha_k) * a + gbar + 2.0 * lam * x
+        x_ref[...] = x - eta * g
+        pl.store(c_ref, (pl.ds(k, 1),), c[None])
+        gt_ref[...] += (inv_n * c) * a
+        return 0
+
+    jax.lax.fori_loop(0, bn, body, 0)
+
+
+def vr_epoch(problem, A_p, b_p, alpha_p, gbar, x, eta, lam, inv_n,
+             *, block: int | None = None):
+    """Fused CentralVR epoch over pre-permuted data.
+
+    Args:
+      A_p, b_p, alpha_p: data, labels and stored scalars gathered by the
+        epoch permutation (row k is the k-th sample visited).
+      gbar: data-part average gradient from the previous epoch (read-only).
+      x: iterate at epoch start.
+      eta, lam, inv_n: step size, l2 weight, 1/n for the gtilde accumulator.
+
+    Returns (x_out, c_out, gtilde): final iterate, fresh scalars in visit
+    order, and the accumulated next-epoch average gradient.
+    """
+    n, d = A_p.shape
+    bn = _pick_block(n, block)
+    s = jnp.array([eta, lam, inv_n], dtype=A_p.dtype)
+    kern = functools.partial(_vr_epoch_kernel, problem, bn)
+    return pl.pallas_call(
+        kern,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda g: (g, 0)),
+            pl.BlockSpec((bn,), lambda g: (g,)),
+            pl.BlockSpec((bn,), lambda g: (g,)),
+            pl.BlockSpec((d,), lambda g: (0,)),
+            pl.BlockSpec((d,), lambda g: (0,)),
+            pl.BlockSpec((3,), lambda g: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d,), lambda g: (0,)),
+            pl.BlockSpec((bn,), lambda g: (g,)),
+            pl.BlockSpec((d,), lambda g: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), A_p.dtype),
+            jax.ShapeDtypeStruct((n,), A_p.dtype),
+            jax.ShapeDtypeStruct((d,), A_p.dtype),
+        ],
+        interpret=True,
+    )(A_p, b_p, alpha_p, gbar, x, s)

@@ -1,0 +1,176 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and L2 epoch graphs.
+
+Everything here is written in the most direct jnp/lax style possible; the
+pytest suite asserts the Pallas kernels (kernels/centralvr.py) and the AOT'd
+L2 graphs (compile/model.py) match these to tight tolerances.
+
+GLM convention (see DESIGN.md §2):
+
+    f_i(x) = loss(a_i^T x, b_i) + lam * ||x||^2
+    grad f_i(x) = dloss(a_i^T x, b_i) * a_i + 2*lam*x
+
+The gradient table stores only the scalar ``alpha_i = dloss(a_i^T xtilde_i)``
+and ``gbar`` is the *data-part* average gradient (1/n) sum_j alpha_j a_j; the
+deterministic regularizer gradient 2*lam*x is applied exactly on every step,
+which preserves unbiasedness of the VR estimator (it has zero variance).
+"""
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# per-problem scalar losses
+# ---------------------------------------------------------------------------
+
+
+def dloss(problem: str, z, b):
+    """Derivative of the per-sample loss wrt the margin z = a^T x."""
+    if problem == "logistic":
+        # loss = log(1 + exp(-b z));  d/dz = -b * sigmoid(-b z)
+        return -b * jax.nn.sigmoid(-b * z)
+    if problem == "ridge":
+        # loss = (z - b)^2;  d/dz = 2 (z - b)
+        return 2.0 * (z - b)
+    raise ValueError(f"unknown problem {problem!r}")
+
+
+def loss(problem: str, z, b):
+    if problem == "logistic":
+        # log(1+exp(-bz)) computed stably
+        return jnp.logaddexp(0.0, -b * z)
+    if problem == "ridge":
+        return (z - b) ** 2
+    raise ValueError(f"unknown problem {problem!r}")
+
+
+# ---------------------------------------------------------------------------
+# linear-algebra oracles
+# ---------------------------------------------------------------------------
+
+
+def matvec(A, x):
+    """z = A @ x."""
+    return A @ x
+
+
+def vjp(A, c):
+    """g = A^T c."""
+    return A.T @ c
+
+
+def full_gradient(problem: str, A, b, x, lam):
+    """grad f(x) = (1/n) A^T dloss(Ax, b) + 2 lam x."""
+    n = A.shape[0]
+    c = dloss(problem, A @ x, b)
+    return (A.T @ c) / n + 2.0 * lam * x
+
+
+def metrics_partial(problem: str, A, b, x):
+    """Partial sums a central node combines across shards.
+
+    Returns (sum_i loss_i, sum_i dloss_i * a_i)  -- raw sums, unnormalized.
+    """
+    z = A @ x
+    return jnp.sum(loss(problem, z, b)), A.T @ dloss(problem, z, b)
+
+
+# ---------------------------------------------------------------------------
+# epoch oracles (lax.scan)
+# ---------------------------------------------------------------------------
+
+
+def centralvr_epoch(problem: str, A, b, perm, x, alpha, gbar, eta, lam):
+    """One CentralVR epoch (Algorithm 1, lines 4-11), permutation sampling.
+
+    Returns (x_out, alpha_out, gtilde) where gtilde is the freshly
+    accumulated data-part average gradient (the next epoch's gbar).
+    """
+    n = A.shape[0]
+
+    def step(carry, i):
+        x, alpha, gtilde = carry
+        a = A[i]
+        c = dloss(problem, jnp.dot(a, x), b[i])
+        g = (c - alpha[i]) * a + gbar + 2.0 * lam * x
+        x = x - eta * g
+        alpha = alpha.at[i].set(c)
+        gtilde = gtilde + c * a / n
+        return (x, alpha, gtilde), None
+
+    (x, alpha, gtilde), _ = jax.lax.scan(
+        step, (x, alpha, jnp.zeros_like(x)), perm
+    )
+    return x, alpha, gtilde
+
+
+def sgd_init_epoch(problem: str, A, b, perm, x, eta, lam):
+    """Plain-SGD initialization epoch (Algorithm 1, line 2).
+
+    Identical bookkeeping to centralvr_epoch but with no error-correction
+    term; fills the alpha table and accumulates the first gbar.
+    """
+    n = A.shape[0]
+
+    def step(carry, i):
+        x, alpha, gtilde = carry
+        a = A[i]
+        c = dloss(problem, jnp.dot(a, x), b[i])
+        x = x - eta * (c * a + 2.0 * lam * x)
+        alpha = alpha.at[i].set(c)
+        gtilde = gtilde + c * a / n
+        return (x, alpha, gtilde), None
+
+    (x, alpha, gtilde), _ = jax.lax.scan(
+        step, (x, jnp.zeros(n, A.dtype), jnp.zeros_like(x)), perm
+    )
+    return x, alpha, gtilde
+
+
+def sgd_epoch(problem: str, A, b, idx, x, eta, lam):
+    """Plain SGD over the given index sequence (EASGD local loop)."""
+
+    def step(x, i):
+        a = A[i]
+        c = dloss(problem, jnp.dot(a, x), b[i])
+        return x - eta * (c * a + 2.0 * lam * x), None
+
+    x, _ = jax.lax.scan(step, x, idx)
+    return x
+
+
+def svrg_inner(problem: str, A, b, idx, x, xbar, gbar, eta, lam):
+    """SVRG inner loop (Algorithm 4, lines 7-10).
+
+    gbar is the full *data-part* gradient at xbar: (1/n) A^T dloss(A xbar).
+    """
+
+    def step(x, i):
+        a = A[i]
+        c = dloss(problem, jnp.dot(a, x), b[i])
+        cbar = dloss(problem, jnp.dot(a, xbar), b[i])
+        g = (c - cbar) * a + gbar + 2.0 * lam * x
+        return x - eta * g, None
+
+    x, _ = jax.lax.scan(step, x, idx)
+    return x
+
+
+def saga_epoch(problem: str, A, b, idx, x, alpha, gbar, eta, lam, n_inv):
+    """SAGA steps with per-iteration gbar maintenance (Algorithm 5 inner).
+
+    n_inv = 1/n_global: the paper scales the running-average replacement by
+    the GLOBAL sample count (Section 5.2), not the shard size.
+    """
+
+    def step(carry, i):
+        x, alpha, gbar = carry
+        a = A[i]
+        c = dloss(problem, jnp.dot(a, x), b[i])
+        g = (c - alpha[i]) * a + gbar + 2.0 * lam * x
+        x = x - eta * g
+        gbar = gbar + n_inv * (c - alpha[i]) * a
+        alpha = alpha.at[i].set(c)
+        return (x, alpha, gbar), None
+
+    (x, alpha, gbar), _ = jax.lax.scan(step, (x, alpha, gbar), idx)
+    return x, alpha, gbar

@@ -1,0 +1,153 @@
+"""L2: epoch-level JAX compute graphs for every algorithm x problem.
+
+Each builder returns a jittable function over fixed shard shapes (n, d);
+``aot.py`` lowers them to HLO text once, and the Rust coordinator executes
+the artifacts from its hot path (rust/src/hlo_exec/).
+
+Unification onto the fused L1 kernel (kernels/centralvr.py::vr_epoch):
+
+  update        x <- x - eta * ((c - s_k) a_k + gbar + 2 lam x)
+
+  CentralVR     s_k = alpha[perm_k]   gbar = prev-epoch average   (Alg. 1)
+  SVRG inner    s_k = dloss(a_k xbar) gbar = full grad at xbar    (Alg. 4)
+  SGD           s_k = 0               gbar = 0                    (init epoch
+                                                                   + EASGD)
+
+so every sequential epoch except SAGA's runs through the same Pallas kernel.
+SAGA (Alg. 5) mutates gbar *and* the alpha table on every step with
+with-replacement sampling (duplicate indices must see fresh values), so it is
+expressed as a lax.scan with dynamic gather/scatter instead — it is a
+comparison baseline, not the paper's hot path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import centralvr as kernels
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# epoch graphs
+# ---------------------------------------------------------------------------
+
+
+def centralvr_epoch(problem, A, b, perm, x, alpha, gbar, eta, lam):
+    """Algorithm 1 inner epoch. perm must be a permutation (unique indices).
+
+    Returns (x', alpha', gtilde).
+    """
+    n = A.shape[0]
+    inv_n = jnp.asarray(1.0, A.dtype) / n
+    x_out, c_out, gtilde = kernels.vr_epoch(
+        problem, A[perm], b[perm], alpha[perm], gbar, x, eta, lam, inv_n
+    )
+    alpha_out = alpha.at[perm].set(c_out)
+    return x_out, alpha_out, gtilde
+
+
+def sgd_init_epoch(problem, A, b, perm, x, eta, lam):
+    """Plain-SGD epoch that also fills the scalar table and first gbar.
+
+    vr_epoch with alpha = 0, gbar = 0 degenerates to the vanilla SGD update,
+    so the init epoch reuses the fused kernel (Algorithm 1, line 2).
+    """
+    n = A.shape[0]
+    zeros_n = jnp.zeros_like(b)
+    zeros_d = jnp.zeros_like(x)
+    inv_n = jnp.asarray(1.0, A.dtype) / n
+    x_out, c_out, gtilde = kernels.vr_epoch(
+        problem, A[perm], b[perm], zeros_n[perm], zeros_d, x, eta, lam, inv_n
+    )
+    alpha_out = zeros_n.at[perm].set(c_out)
+    return x_out, alpha_out, gtilde
+
+
+def sgd_epoch(problem, A, b, idx, x, eta, lam):
+    """Plain SGD over an arbitrary index sequence (EASGD local loop)."""
+    T = idx.shape[0]
+    zeros_T = jnp.zeros((T,), A.dtype)
+    zeros_d = jnp.zeros_like(x)
+    inv_n = jnp.asarray(1.0, A.dtype) / T
+    x_out, _, _ = kernels.vr_epoch(
+        problem, A[idx], b[idx], zeros_T, zeros_d, x, eta, lam, inv_n
+    )
+    return x_out
+
+
+def svrg_inner(problem, A, b, idx, x, xbar, gbar, eta, lam):
+    """Algorithm 4 inner loop: the anchor scalars are precomputed in one
+    vectorized pass (xbar is fixed), then the sequential chain reuses the
+    fused kernel with s = cbar."""
+    A_g = A[idx]
+    b_g = b[idx]
+    cbar = ref.dloss(problem, kernels.matvec(A_g, xbar), b_g)
+    T = idx.shape[0]
+    inv_n = jnp.asarray(1.0, A.dtype) / T
+    x_out, _, _ = kernels.vr_epoch(
+        problem, A_g, b_g, cbar, gbar, x, eta, lam, inv_n
+    )
+    return x_out
+
+
+def saga_epoch(problem, A, b, idx, x, alpha, gbar, eta, lam, n_inv):
+    """Algorithm 5 inner loop (lax.scan; see module docstring)."""
+    return ref.saga_epoch(problem, A, b, idx, x, alpha, gbar, eta, lam, n_inv)
+
+
+def full_gradient(problem, A, b, x, lam):
+    """Fused full gradient (SVRG synchronization step)."""
+    return kernels.full_gradient(problem, A, b, x, lam)
+
+
+def metrics_partial(problem, A, b, x):
+    """(sum_i loss_i, sum_i dloss_i a_i) partial sums for one shard."""
+    z = kernels.matvec(A, x)
+    loss_sum = jnp.sum(ref.loss(problem, z, b))
+    gsum = kernels.vjp(A, ref.dloss(problem, z, b))
+    return loss_sum, gsum
+
+
+# ---------------------------------------------------------------------------
+# AOT entry table
+# ---------------------------------------------------------------------------
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entries(problem: str, n: int, d: int):
+    """(name, fn, example_args) for every artifact at shard shape (n, d).
+
+    Scalars (eta, lam, n_inv) are rank-0 f32 parameters so one artifact
+    serves every hyper-parameter setting.
+    """
+    A = _spec((n, d))
+    b = _spec((n,))
+    xs = _spec((d,))
+    al = _spec((n,))
+    ix = _spec((n,), I32)
+    sc = _spec(())
+
+    def fix(fn, *, out_tuple=True):
+        wrapped = functools.partial(fn, problem)
+        return wrapped
+
+    return [
+        ("centralvr_epoch", fix(centralvr_epoch), (A, b, ix, xs, al, xs, sc, sc)),
+        ("sgd_init_epoch", fix(sgd_init_epoch), (A, b, ix, xs, sc, sc)),
+        ("sgd_epoch", fix(sgd_epoch), (A, b, ix, xs, sc, sc)),
+        ("svrg_inner", fix(svrg_inner), (A, b, ix, xs, xs, xs, sc, sc)),
+        ("saga_epoch", fix(saga_epoch), (A, b, ix, xs, al, xs, sc, sc, sc)),
+        ("full_gradient", fix(full_gradient), (A, b, xs, sc)),
+        ("metrics_partial", fix(metrics_partial), (A, b, xs)),
+    ]
+
+
+PROBLEMS = ("logistic", "ridge")

@@ -1,0 +1,76 @@
+"""AOT path: HLO-text lowering and manifest structure.
+
+These tests exercise the exact code `make artifacts` runs, on a tiny shape
+so CI stays fast, and pin the interchange invariants the Rust loader
+depends on (text format, parameter ordering, output arity).
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.build(str(out), [(16, 4)], verbose=False)
+    return out, manifest
+
+
+def test_manifest_lists_all_entries(built):
+    out, manifest = built
+    assert manifest["interchange"] == "hlo-text"
+    names = {a["name"] for a in manifest["artifacts"]}
+    assert len(names) == 7 * len(model.PROBLEMS)
+    for problem in model.PROBLEMS:
+        for fn in ("centralvr_epoch", "full_gradient", "metrics_partial"):
+            assert f"{fn}_{problem}_n16_d4" in names
+
+
+def test_manifest_roundtrips_as_json(built):
+    out, _ = built
+    with open(os.path.join(out, "manifest.json")) as f:
+        loaded = json.load(f)
+    art = loaded["artifacts"][0]
+    assert set(art) >= {"name", "fn", "problem", "n", "d", "file", "params", "outputs", "sha256"}
+
+
+def test_hlo_files_are_text_with_entry(built):
+    out, manifest = built
+    for a in manifest["artifacts"]:
+        path = os.path.join(out, a["file"])
+        with open(path) as f:
+            text = f.read()
+        assert "HloModule" in text, a["name"]
+        # HLO text, never a serialized proto (see aot.py docstring)
+        assert text.isprintable() or "\n" in text
+
+
+def test_param_signature_matches_entry_table(built):
+    out, manifest = built
+    table = {
+        f"{name}_{problem}_n16_d4": args
+        for problem in model.PROBLEMS
+        for name, fn, args in model.entries(problem, 16, 4)
+    }
+    for a in manifest["artifacts"]:
+        args = table[a["name"]]
+        assert len(a["params"]) == len(args)
+        for rec, spec in zip(a["params"], args):
+            assert tuple(rec["shape"]) == tuple(spec.shape)
+
+
+def test_parse_shapes():
+    assert aot.parse_shapes("256x16,1000x18") == [(256, 16), (1000, 18)]
+    assert aot.parse_shapes("64X8") == [(64, 8)]
+
+
+def test_outputs_arity(built):
+    out, manifest = built
+    arity = {a["name"]: a["outputs"] for a in manifest["artifacts"]}
+    assert arity["centralvr_epoch_ridge_n16_d4"] == 3
+    assert arity["svrg_inner_ridge_n16_d4"] == 1
+    assert arity["metrics_partial_ridge_n16_d4"] == 2

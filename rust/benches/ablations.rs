@@ -1,0 +1,31 @@
+//! Bench: the §6.2 ablations — D-SAGA tau sweep, EASGD tau sweep,
+//! constant-vs-decaying steps, and the Theorem-1 contraction check.
+
+mod common;
+
+use centralvr::harness::ablations;
+
+fn main() {
+    let b = common::Bench::group("ablations");
+    for (tau, t, rel) in ablations::dsaga_tau_sweep(&[10, 100, 1000, 10000]) {
+        b.outcome(
+            &format!("dsaga_tau/{tau}"),
+            format!(
+                "t_to_tol={} best_rel={rel:.2e}",
+                t.map(|t| format!("{t:.3}s")).unwrap_or_else(|| "—".into())
+            ),
+        );
+    }
+    for (tau, rel) in ablations::easgd_tau_sweep(&[4, 16, 64]) {
+        b.outcome(&format!("easgd_tau/{tau}"), format!("best_rel={rel:.2e}"));
+    }
+    for (decay, rel) in ablations::decay_ablation() {
+        b.outcome(&format!("decay/{decay}"), format!("best_rel={rel:.2e}"));
+    }
+    for (eta, within, rate) in ablations::theorem1_check() {
+        b.outcome(
+            &format!("theorem1/eta{eta:.2e}"),
+            format!("within_bound={within} geo_mean_contraction={rate:.4}"),
+        );
+    }
+}

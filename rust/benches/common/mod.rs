@@ -1,0 +1,41 @@
+//! Shared bench harness (criterion is not in the offline vendor set):
+//! warmed-up repeated measurement with robust summaries, printed in a
+//! criterion-like format so `cargo bench | tee bench_output.txt` reads
+//! naturally.
+
+use centralvr::util::timer::{fmt_secs, measure, Summary};
+
+pub struct Bench {
+    group: &'static str,
+}
+
+impl Bench {
+    pub fn group(group: &'static str) -> Bench {
+        println!("\n== bench group: {group} ==");
+        Bench { group }
+    }
+
+    /// Measure a closure: `warmup` unrecorded + `samples` recorded runs.
+    pub fn case<T>(&self, name: &str, warmup: usize, samples: usize, f: impl FnMut() -> T) -> Summary {
+        let s = measure(warmup, samples, f);
+        println!(
+            "{}/{name}: median {} (p10 {}, p90 {}, n={})",
+            self.group,
+            fmt_secs(s.median),
+            fmt_secs(s.p10),
+            fmt_secs(s.p90),
+            s.samples
+        );
+        s
+    }
+
+    /// Report a derived throughput metric alongside a case.
+    pub fn metric(&self, name: &str, value: f64, unit: &str) {
+        println!("{}/{name}: {value:.3} {unit}", self.group);
+    }
+
+    /// Report a scalar experiment outcome (figure-regeneration benches).
+    pub fn outcome(&self, name: &str, value: String) {
+        println!("{}/{name}: {value}", self.group);
+    }
+}

@@ -1,0 +1,44 @@
+//! Bench: regenerates Fig 1 (single-worker CentralVR vs SVRG vs SAGA on
+//! four panels) at quick scale and reports gradient-evaluations-to-
+//! tolerance per algorithm — the paper's x-axis currency.
+
+mod common;
+
+use centralvr::harness::fig1;
+use centralvr::harness::Scale;
+
+fn main() {
+    let b = common::Bench::group("fig1");
+    let tol = 1e-5;
+    let results = fig1::run(Scale::Quick, tol);
+    for (panel, algo, trace) in &results {
+        b.outcome(
+            &format!("{panel}/{algo}"),
+            format!(
+                "grads_to_tol={} final_rel={:.2e} wall={:.2}s",
+                trace
+                    .grads_to(tol)
+                    .map(|g| g.to_string())
+                    .unwrap_or_else(|| "—".into()),
+                trace.series.final_rel(),
+                trace.elapsed_s
+            ),
+        );
+    }
+    // headline ratio per panel: CentralVR grads / best-baseline grads
+    for panel in ["toy-logistic", "toy-ridge", "ijcnn1-logistic", "millionsong-ridge"] {
+        let get = |a: &str| {
+            results
+                .iter()
+                .find(|(p, al, _)| p == panel && al == a)
+                .and_then(|(_, _, t)| t.grads_to(tol))
+        };
+        if let (Some(c), Some(s), Some(g)) = (get("centralvr"), get("svrg"), get("saga")) {
+            b.metric(
+                &format!("{panel}/cvr_vs_best_baseline"),
+                c as f64 / s.min(g) as f64,
+                "x (lower is better; paper ~0.33)",
+            );
+        }
+    }
+}

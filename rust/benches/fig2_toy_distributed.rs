@@ -1,0 +1,30 @@
+//! Bench: regenerates Fig 2 — toy distributed convergence (left panels)
+//! and weak scaling (right panels) on the simulated cluster.
+
+mod common;
+
+use centralvr::harness::fig2;
+use centralvr::harness::Scale;
+
+fn main() {
+    let b = common::Bench::group("fig2");
+    for (problem, algo, rep) in fig2::convergence(Scale::Quick) {
+        b.outcome(
+            &format!("conv/{}/{}", problem.name(), algo.name()),
+            format!(
+                "t_to_1e-5={} best_rel={:.2e}",
+                rep.trace
+                    .time_to(1e-5)
+                    .map(|t| format!("{t:.3}s"))
+                    .unwrap_or_else(|| "—".into()),
+                rep.trace.series.best_rel()
+            ),
+        );
+    }
+    for (problem, algo, p, t) in fig2::scaling(Scale::Quick) {
+        b.outcome(
+            &format!("scale/{}/{}/p{p}", problem.name(), algo.name()),
+            t.map(|t| format!("{t:.3}s")).unwrap_or_else(|| "—".into()),
+        );
+    }
+}

@@ -1,0 +1,30 @@
+//! Bench: regenerates Fig 3 — SUSY-like / MILLIONSONG-like convergence and
+//! strong scaling on the simulated cluster.
+
+mod common;
+
+use centralvr::harness::fig3;
+use centralvr::harness::Scale;
+
+fn main() {
+    let b = common::Bench::group("fig3");
+    for (panel, algo, rep) in fig3::convergence(Scale::Quick) {
+        b.outcome(
+            &format!("conv/{panel}/{}", algo.name()),
+            format!(
+                "t_to_1e-5={} best_rel={:.2e}",
+                rep.trace
+                    .time_to(1e-5)
+                    .map(|t| format!("{t:.3}s"))
+                    .unwrap_or_else(|| "—".into()),
+                rep.trace.series.best_rel()
+            ),
+        );
+    }
+    for (panel, algo, p, t) in fig3::scaling(Scale::Quick) {
+        b.outcome(
+            &format!("scale/{panel}/{}/p{p}", algo.name()),
+            t.map(|t| format!("{t:.3}s")).unwrap_or_else(|| "—".into()),
+        );
+    }
+}

@@ -1,0 +1,193 @@
+//! Bench: micro/hot-path measurements feeding EXPERIMENTS.md §Perf —
+//! per-gradient native cost across dimensions, fused vr_step vs a naive
+//! 3-pass update, whole native epochs, HLO-engine epochs (dispatch
+//! overhead of the AOT path), simulator event throughput, and server
+//! apply latency.
+
+mod common;
+
+use centralvr::config::schema::Algorithm;
+use centralvr::data::shard::ShardedDataset;
+use centralvr::data::synth;
+use centralvr::dist::messages::Upload;
+use centralvr::dist::server::ServerState;
+use centralvr::dist::DistConfig;
+use centralvr::exec::engine::{EpochEngine, NativeEngine};
+use centralvr::exec::simulator::{self, SimParams};
+use centralvr::hlo_exec::HloEngine;
+use centralvr::model::glm::Problem;
+use centralvr::util::math;
+use centralvr::util::rng::Pcg64;
+use centralvr::util::timer::black_box;
+
+fn naive_vr_step(x: &mut [f32], a: &[f32], gbar: &[f32], coef: f32, eta: f32, lam: f32) {
+    // 3-pass textbook version (allocates) — the §Perf baseline
+    let mut g: Vec<f32> = a.iter().map(|v| coef * v).collect();
+    for (gj, bj) in g.iter_mut().zip(gbar) {
+        *gj += bj;
+    }
+    for (gj, xj) in g.iter_mut().zip(x.iter()) {
+        *gj += 2.0 * lam * xj;
+    }
+    for (xj, gj) in x.iter_mut().zip(&g) {
+        *xj -= eta * gj;
+    }
+}
+
+fn main() {
+    let b = common::Bench::group("hot_paths");
+
+    // --- per-gradient native cost across d ---
+    for d in [20usize, 100, 1000] {
+        let n = 2000;
+        let ds = synth::toy_classification(n, d, 1);
+        let mut eng = NativeEngine::new();
+        let mut x = vec![0.0f32; d];
+        let mut alpha = vec![0.0f32; n];
+        let gbar = vec![0.0f32; d];
+        let mut gtilde = vec![0.0f32; d];
+        let perm: Vec<u32> = (0..n as u32).collect();
+        let s = b.case(&format!("native_epoch_d{d}"), 2, 10, || {
+            eng.centralvr_epoch(
+                Problem::Logistic,
+                &ds,
+                &perm,
+                &mut x,
+                &mut alpha,
+                &gbar,
+                &mut gtilde,
+                1e-3,
+                1e-4,
+            );
+            black_box(x[0])
+        });
+        b.metric(
+            &format!("native_ns_per_grad_d{d}"),
+            s.median * 1e9 / n as f64,
+            "ns/grad",
+        );
+        b.metric(
+            &format!("native_gflops_d{d}"),
+            (n * (8 * d + 20)) as f64 / s.median / 1e9,
+            "GFLOP/s effective",
+        );
+    }
+
+    // --- fused vr_step vs naive 3-pass ---
+    {
+        let d = 100;
+        let mut r = Pcg64::new(2);
+        let a: Vec<f32> = (0..d).map(|_| r.normal() as f32).collect();
+        let gbar: Vec<f32> = (0..d).map(|_| r.normal() as f32).collect();
+        let mut x = vec![0.1f32; d];
+        let fused = b.case("vr_step_fused_d100_x10k", 3, 20, || {
+            for _ in 0..10_000 {
+                math::vr_step(&mut x, &a, &gbar, 0.3, 1e-3, 1e-4);
+            }
+            black_box(x[0])
+        });
+        let mut x = vec![0.1f32; d];
+        let naive = b.case("vr_step_naive_d100_x10k", 3, 20, || {
+            for _ in 0..10_000 {
+                naive_vr_step(&mut x, &a, &gbar, 0.3, 1e-3, 1e-4);
+            }
+            black_box(x[0])
+        });
+        b.metric("vr_step_fused_speedup", naive.median / fused.median, "x");
+    }
+
+    // --- HLO engine epoch (AOT path dispatch cost) ---
+    let dir = HloEngine::default_dir();
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        let (n, d) = (256usize, 16usize);
+        let ds = synth::toy_classification(n, d, 3);
+        let mut hlo = HloEngine::new(&dir).expect("hlo");
+        let mut nat = NativeEngine::new();
+        let mut x = vec![0.0f32; d];
+        let mut alpha = vec![0.0f32; n];
+        let gbar = vec![0.0f32; d];
+        let mut gtilde = vec![0.0f32; d];
+        let perm: Vec<u32> = (0..n as u32).collect();
+        let h = b.case("hlo_epoch_n256_d16", 2, 10, || {
+            hlo.centralvr_epoch(
+                Problem::Logistic,
+                &ds,
+                &perm,
+                &mut x,
+                &mut alpha,
+                &gbar,
+                &mut gtilde,
+                1e-3,
+                1e-4,
+            );
+            black_box(x[0])
+        });
+        let mut x = vec![0.0f32; d];
+        let nn = b.case("native_epoch_n256_d16", 2, 10, || {
+            nat.centralvr_epoch(
+                Problem::Logistic,
+                &ds,
+                &perm,
+                &mut x,
+                &mut alpha,
+                &gbar,
+                &mut gtilde,
+                1e-3,
+                1e-4,
+            );
+            black_box(x[0])
+        });
+        b.metric("hlo_vs_native_epoch", h.median / nn.median, "x (HLO/native)");
+    } else {
+        println!("hot_paths/hlo_epoch: SKIPPED (run `make artifacts`)");
+    }
+
+    // --- server apply latency ---
+    {
+        let d = 1000;
+        let mut server = ServerState::new(d, 16, 0.9);
+        let up = Upload::Delta {
+            dx: vec![0.01; d],
+            dgbar: vec![0.01; d],
+        };
+        let s = b.case("server_apply_delta_d1000", 10, 50, || {
+            for _ in 0..1000 {
+                server.apply_delta(&up);
+            }
+            black_box(server.x[0])
+        });
+        b.metric("server_apply_ns", s.median * 1e9 / 1000.0, "ns/apply");
+    }
+
+    // --- simulator event throughput ---
+    {
+        let (p, n_per, d) = (16usize, 100usize, 20usize);
+        let data =
+            ShardedDataset::from_shards(synth::toy_least_squares_per_worker(p, n_per, d, 5));
+        let cfg = DistConfig {
+            algorithm: Algorithm::CentralVrAsync,
+            p,
+            eta: 0.125 / d as f32,
+            max_rounds: 40,
+            tol: 0.0,
+            record_every: 1_000_000, // metrics off: measure the engine
+            ..Default::default()
+        };
+        let mut events = 0u64;
+        let s = b.case("simulator_40rounds_p16", 1, 5, || {
+            let rep = simulator::run(Problem::Ridge, &data, cfg, SimParams::analytic(d));
+            events = rep.events;
+            black_box(rep.trace.grad_evals)
+        });
+        b.metric(
+            "simulator_events_per_s",
+            events as f64 / s.median,
+            "events/s",
+        );
+        b.metric(
+            "simulator_grads_per_s",
+            (40 * p * n_per) as f64 / s.median,
+            "grad evals/s",
+        );
+    }
+}

@@ -1,0 +1,19 @@
+//! Bench: regenerates Table 1 — measured algorithm properties (async?,
+//! gradients/iteration, storage) from instrumented simulator runs.
+
+mod common;
+
+use centralvr::harness::table1;
+
+fn main() {
+    let b = common::Bench::group("table1");
+    for row in table1::measure() {
+        b.outcome(
+            row.algorithm.name(),
+            format!(
+                "async={} grads_per_iter={:.2} storage={}",
+                row.asynchronous, row.grads_per_iter, row.storage
+            ),
+        );
+    }
+}

@@ -1,0 +1,229 @@
+//! CentralVR, single-worker case — Algorithm 1, the paper's core
+//! contribution.
+//!
+//! Differences from SAGA that matter (paper §2.3):
+//! * permutation sampling — each epoch visits every sample exactly once;
+//! * the average gradient `gbar` is FROZEN during an epoch and replaced at
+//!   the epoch boundary by the freshly accumulated `gtilde` (in the
+//!   distributed variants this is exactly what makes one-communication-
+//!   per-epoch possible);
+//! * initialization by one plain-SGD epoch that fills the scalar table and
+//!   the first `gbar` (Algorithm 1, line 2).
+
+use crate::algos::{SequentialSolver, SolverConfig};
+use crate::data::dataset::Dataset;
+use crate::exec::engine::{EpochEngine, NativeEngine};
+use crate::model::glm::Problem;
+use crate::util::rng::Pcg64;
+
+pub struct CentralVr<'a> {
+    data: &'a Dataset,
+    problem: Problem,
+    cfg: SolverConfig,
+    engine: Box<dyn EpochEngine + 'a>,
+    rng: Pcg64,
+    x: Vec<f32>,
+    /// Scalar gradient table alpha_i = dloss at the last visit of sample i.
+    alpha: Vec<f32>,
+    /// Epoch-frozen data-part average gradient.
+    gbar: Vec<f32>,
+    /// Accumulator reused across epochs (no hot-loop allocation).
+    gtilde: Vec<f32>,
+    initialized: bool,
+    grad_evals: u64,
+    iterations: u64,
+}
+
+impl<'a> CentralVr<'a> {
+    pub fn new(data: &'a Dataset, problem: Problem, cfg: SolverConfig) -> Self {
+        CentralVr {
+            data,
+            problem,
+            cfg,
+            engine: Box::new(NativeEngine::new()),
+            rng: Pcg64::new(cfg.seed),
+            x: vec![0.0; data.d()],
+            alpha: vec![0.0; data.n()],
+            gbar: vec![0.0; data.d()],
+            gtilde: vec![0.0; data.d()],
+            initialized: false,
+            grad_evals: 0,
+            iterations: 0,
+        }
+    }
+
+    pub fn with_engine(mut self, engine: Box<dyn EpochEngine + 'a>) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Expose internal state for the distributed drivers and tests.
+    pub fn state(&self) -> (&[f32], &[f32], &[f32]) {
+        (&self.x, &self.alpha, &self.gbar)
+    }
+
+    fn init_epoch(&mut self) {
+        let perm = self.rng.permutation(self.data.n());
+        self.engine.sgd_init_epoch(
+            self.problem,
+            self.data,
+            &perm,
+            &mut self.x,
+            &mut self.alpha,
+            &mut self.gtilde,
+            self.cfg.eta,
+            self.cfg.lambda,
+        );
+        self.gbar.copy_from_slice(&self.gtilde);
+        self.grad_evals += self.data.n() as u64;
+        self.iterations += self.data.n() as u64;
+        self.initialized = true;
+    }
+}
+
+impl<'a> SequentialSolver for CentralVr<'a> {
+    fn name(&self) -> &'static str {
+        "CentralVR"
+    }
+
+    fn run_epoch(&mut self) {
+        if !self.initialized {
+            self.init_epoch();
+            return;
+        }
+        let n = self.data.n();
+        let perm = self.rng.permutation(n);
+        self.engine.centralvr_epoch(
+            self.problem,
+            self.data,
+            &perm,
+            &mut self.x,
+            &mut self.alpha,
+            &self.gbar,
+            &mut self.gtilde,
+            self.cfg.eta,
+            self.cfg.lambda,
+        );
+        // gbar <- gtilde at the epoch boundary (Algorithm 1, line 11)
+        std::mem::swap(&mut self.gbar, &mut self.gtilde);
+        self.grad_evals += n as u64;
+        self.iterations += n as u64;
+    }
+
+    fn x(&self) -> &[f32] {
+        &self.x
+    }
+
+    fn grad_evals(&self) -> u64 {
+        self.grad_evals
+    }
+
+    fn iterations(&self) -> u64 {
+        self.iterations
+    }
+
+    fn stored_scalars(&self) -> u64 {
+        self.data.n() as u64
+    }
+
+    fn dataset(&self) -> &Dataset {
+        self.data
+    }
+
+    fn problem(&self) -> Problem {
+        self.problem
+    }
+
+    fn lambda(&self) -> f32 {
+        self.cfg.lambda
+    }
+
+    fn max_epochs(&self) -> usize {
+        self.cfg.epochs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn centralvr_converges_to_high_precision() {
+        let ds = synth::toy_least_squares(512, 8, 11);
+        let cfg = SolverConfig {
+            eta: 0.01,
+            epochs: 80,
+            seed: 1,
+            ..Default::default()
+        };
+        let mut s = CentralVr::new(&ds, Problem::Ridge, cfg);
+        // "five digits of precision" -- the paper's headline target; f32
+        // state floors the attainable rel-grad-norm not far below this
+        let trace = s.run_to(1e-5);
+        assert!(
+            trace.converged,
+            "final rel {}",
+            trace.series.final_rel()
+        );
+    }
+
+    #[test]
+    fn linear_convergence_contraction(){
+        // Theorem 1: per-epoch contraction of the gradient norm should be
+        // roughly geometric once the table is warm.
+        let ds = synth::toy_least_squares(512, 6, 5);
+        let cfg = SolverConfig {
+            eta: 0.008,
+            epochs: 30,
+            ..Default::default()
+        };
+        let mut s = CentralVr::new(&ds, Problem::Ridge, cfg);
+        let trace = s.run_to(1e-10);
+        let pts = &trace.series.points;
+        // collect per-epoch ratios after warmup, above the f32 noise floor
+        let mut ratios = Vec::new();
+        for w in pts.windows(2).skip(3) {
+            if w[1].rel_grad_norm > 1e-5 {
+                ratios.push(w[1].rel_grad_norm / w[0].rel_grad_norm);
+            }
+        }
+        assert!(!ratios.is_empty());
+        let worst = ratios.iter().cloned().fold(0.0f64, f64::max);
+        assert!(worst < 1.0, "no contraction: worst ratio {worst}");
+    }
+
+    #[test]
+    fn one_gradient_per_iteration() {
+        let ds = synth::toy_classification(128, 4, 1);
+        let mut s = CentralVr::new(&ds, Problem::Logistic, SolverConfig::default());
+        s.run_epoch(); // init epoch
+        s.run_epoch();
+        s.run_epoch();
+        assert_eq!(s.grad_evals(), 3 * 128);
+        assert_eq!(s.iterations(), 3 * 128);
+        assert_eq!(s.stored_scalars(), 128);
+    }
+
+    #[test]
+    fn beats_sgd_at_equal_gradient_budget() {
+        let ds = synth::toy_least_squares(512, 10, 3);
+        let epochs = 25;
+        let cfg = SolverConfig {
+            eta: 0.008,
+            epochs,
+            seed: 2,
+            ..Default::default()
+        };
+        let mut cvr = CentralVr::new(&ds, Problem::Ridge, cfg);
+        let mut sgd = crate::algos::sgd::Sgd::new(&ds, Problem::Ridge, cfg);
+        let t1 = cvr.run_to(0.0); // run the full budget
+        let t2 = sgd.run_to(0.0);
+        assert!(
+            t1.series.final_rel() < t2.series.final_rel() * 0.5,
+            "cvr={} sgd={}",
+            t1.series.final_rel(),
+            t2.series.final_rel()
+        );
+    }
+}

@@ -1,0 +1,174 @@
+//! Sequential (single-worker) solvers — the subjects of the paper's Fig. 1:
+//! plain SGD, SVRG, SAGA and the proposed CentralVR (Algorithm 1).
+//!
+//! All solvers run their math through an [`crate::exec::engine::EpochEngine`]
+//! so the same algorithm logic executes on the native path or the AOT HLO
+//! path, and they share the [`SequentialSolver`] trait whose provided
+//! [`SequentialSolver::run_to`] drives epochs until the paper's relative
+//! gradient-norm tolerance is met, recording the convergence curve.
+
+pub mod centralvr;
+pub mod saga;
+pub mod sgd;
+pub mod svrg;
+
+use crate::data::dataset::Dataset;
+use crate::metrics::convergence::ConvergenceCheck;
+use crate::metrics::recorder::{RunTrace, Sample, Series};
+use crate::model::glm::Problem;
+use crate::model::gradients;
+use crate::util::timer::Stopwatch;
+
+/// Hyper-parameters shared by every sequential solver.
+#[derive(Clone, Copy, Debug)]
+pub struct SolverConfig {
+    /// Constant step size (the paper uses constant steps throughout).
+    pub eta: f32,
+    /// l2 regularization weight (paper: 1e-4).
+    pub lambda: f32,
+    /// Maximum epochs for `run_to`.
+    pub epochs: usize,
+    /// RNG seed (permutations / sampling).
+    pub seed: u64,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        SolverConfig {
+            eta: 0.05,
+            lambda: 1e-4,
+            epochs: 100,
+            seed: 0,
+        }
+    }
+}
+
+/// A single-worker iterative solver advancing one epoch at a time.
+pub trait SequentialSolver {
+    fn name(&self) -> &'static str;
+
+    /// Perform one epoch (≈ n parameter updates).
+    fn run_epoch(&mut self);
+
+    /// Current iterate.
+    fn x(&self) -> &[f32];
+
+    /// Cumulative per-sample gradient evaluations.
+    fn grad_evals(&self) -> u64;
+
+    /// Cumulative parameter updates.
+    fn iterations(&self) -> u64;
+
+    /// Scalars persisted in gradient tables (Table 1 storage column).
+    fn stored_scalars(&self) -> u64 {
+        0
+    }
+
+    fn dataset(&self) -> &Dataset;
+    fn problem(&self) -> Problem;
+    fn lambda(&self) -> f32;
+    fn max_epochs(&self) -> usize;
+
+    /// Drive epochs until `||g||/||g0|| <= tol`, divergence, or the epoch
+    /// budget; records one curve point per epoch. Gradient-norm evaluation
+    /// is instrumentation and is NOT counted in `grad_evals` (the paper
+    /// compares algorithms by their own gradient work).
+    fn run_to(&mut self, tol: f64) -> RunTrace {
+        let sw = Stopwatch::start();
+        let mut series = Series::new(self.name());
+        let mut check = ConvergenceCheck::new(tol);
+        let ds_norm = |x: &[f32], p: Problem, ds: &Dataset, lam: f32| {
+            gradients::global_grad_norm(p, &[ds], x, lam)
+        };
+        let (p, lam) = (self.problem(), self.lambda());
+        let g0 = ds_norm(self.x(), p, self.dataset(), lam);
+        let mut rel = check.observe(g0);
+        series.push(Sample {
+            time_s: 0.0,
+            grad_evals: self.grad_evals(),
+            rel_grad_norm: rel,
+            objective: gradients::objective(p, &[self.dataset()], self.x(), lam),
+        });
+        let mut converged = check.converged(g0);
+        let mut epoch = 0;
+        while !converged && epoch < self.max_epochs() {
+            self.run_epoch();
+            epoch += 1;
+            let g = ds_norm(self.x(), p, self.dataset(), lam);
+            rel = check.observe(g);
+            series.push(Sample {
+                time_s: sw.elapsed_secs(),
+                grad_evals: self.grad_evals(),
+                rel_grad_norm: rel,
+                objective: gradients::objective(p, &[self.dataset()], self.x(), lam),
+            });
+            if check.diverged(g) {
+                break;
+            }
+            converged = check.converged(g);
+        }
+        let _ = rel;
+        RunTrace {
+            grad_evals: self.grad_evals(),
+            iterations: self.iterations(),
+            elapsed_s: sw.elapsed_secs(),
+            converged,
+            x: self.x().to_vec(),
+            series,
+        }
+    }
+}
+
+pub use centralvr::CentralVr;
+pub use saga::Saga;
+pub use sgd::Sgd;
+pub use svrg::Svrg;
+
+/// Construct any sequential solver by name (harness / CLI helper).
+pub fn by_name<'a>(
+    name: &str,
+    data: &'a Dataset,
+    problem: Problem,
+    cfg: SolverConfig,
+) -> Option<Box<dyn SequentialSolver + 'a>> {
+    match name.to_ascii_lowercase().as_str() {
+        "sgd" => Some(Box::new(Sgd::new(data, problem, cfg))),
+        "svrg" => Some(Box::new(Svrg::new(data, problem, cfg))),
+        "saga" => Some(Box::new(Saga::new(data, problem, cfg))),
+        "centralvr" | "cvr" => Some(Box::new(CentralVr::new(data, problem, cfg))),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn by_name_constructs_all() {
+        let ds = synth::toy_classification(64, 4, 1);
+        for name in ["sgd", "svrg", "saga", "centralvr"] {
+            let s = by_name(name, &ds, Problem::Logistic, SolverConfig::default());
+            assert!(s.is_some(), "{name}");
+        }
+        assert!(by_name("nope", &ds, Problem::Logistic, SolverConfig::default()).is_none());
+    }
+
+    #[test]
+    fn run_to_records_monotone_time_and_counts() {
+        let ds = synth::toy_least_squares(128, 6, 2);
+        let cfg = SolverConfig {
+            eta: 0.01,
+            epochs: 5,
+            ..Default::default()
+        };
+        let mut s = CentralVr::new(&ds, Problem::Ridge, cfg);
+        let trace = s.run_to(1e-12); // unreachable tol -> runs budget
+        assert_eq!(trace.series.points.len(), 6); // initial + 5 epochs
+        let times: Vec<f64> = trace.series.points.iter().map(|p| p.time_s).collect();
+        assert!(times.windows(2).all(|w| w[0] <= w[1]));
+        let evals: Vec<u64> = trace.series.points.iter().map(|p| p.grad_evals).collect();
+        assert!(evals.windows(2).all(|w| w[0] < w[1]));
+    }
+}

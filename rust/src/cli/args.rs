@@ -1,0 +1,134 @@
+//! Argument parsing: `subcommand [positional] [--flag [value]]...`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+pub const USAGE: &str = "\
+usage: centralvr <command> [options]
+
+commands:
+  train          run one experiment (presets, config files, or flags)
+  figure <id>    regenerate a paper table/figure: fig1 | fig2conv |
+                 fig2scale | fig3conv | fig3scale | table1 | ablations | all
+  artifacts <op> list | check the AOT-compiled HLO artifacts
+  calibrate      measure the simulator's per-gradient cost model
+  list-presets   show named experiment presets
+  help           this message
+
+common options:
+  --preset NAME        start from a named preset
+  --config FILE        load a TOML experiment config
+  --algorithm A        sgd|svrg|saga|centralvr|cvr-sync|cvr-async|d-svrg|
+                       d-saga|easgd|ps-svrg
+  --p N                worker count        --eta X       step size
+  --epochs N           epoch budget        --tau N       comm period
+  --tol X              rel-grad-norm tol   --seed N      RNG seed
+  --engine E           native|hlo          --threads     real threads
+  --scale S            quick|full (figure harnesses)
+  --d N                feature dim (calibrate)
+  --artifacts DIR      artifact directory (default: artifacts/)
+";
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+/// Flags that take no value.
+const SWITCHES: &[&str] = &["threads", "quick", "verbose", "help"];
+
+impl Args {
+    pub fn parse(argv: Vec<String>) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        args.command = it.next().unwrap_or_else(|| "help".to_string());
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if SWITCHES.contains(&name) {
+                    args.switches.push(name.to_string());
+                } else {
+                    match it.next() {
+                        Some(v) if !v.starts_with("--") => {
+                            args.flags.insert(name.to_string(), v);
+                        }
+                        _ => bail!("flag --{name} needs a value"),
+                    }
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse().map_err(|_| {
+                anyhow::anyhow!("--{name} expects an integer, got {v:?}")
+            })?)),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse().map_err(|_| {
+                anyhow::anyhow!("--{name} expects a number, got {v:?}")
+            })?)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|v| v.to_string()).collect()).unwrap()
+    }
+
+    #[test]
+    fn parses_command_flags_positional() {
+        let a = parse(&["figure", "fig1", "--scale", "quick", "--threads", "--eta=0.1"]);
+        assert_eq!(a.command, "figure");
+        assert_eq!(a.positional, vec!["fig1"]);
+        assert_eq!(a.get("scale"), Some("quick"));
+        assert_eq!(a.get("eta"), Some("0.1"));
+        assert!(a.has("threads"));
+        assert!(!a.has("quick"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["train", "--p", "8", "--tol", "1e-5"]);
+        assert_eq!(a.get_usize("p").unwrap(), Some(8));
+        assert_eq!(a.get_f64("tol").unwrap(), Some(1e-5));
+        assert_eq!(a.get_usize("missing").unwrap(), None);
+        let bad = parse(&["train", "--p", "x8"]);
+        assert!(bad.get_usize("p").is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(vec!["train".into(), "--eta".into()]).is_err());
+    }
+}

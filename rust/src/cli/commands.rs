@@ -1,0 +1,322 @@
+//! Subcommand implementations.
+
+use anyhow::{bail, Context, Result};
+
+use crate::algos::{self, SequentialSolver, SolverConfig};
+use crate::cli::args::{Args, USAGE};
+use crate::config::schema::{Algorithm, ExperimentConfig};
+use crate::config::presets;
+use crate::data::shard::ShardedDataset;
+use crate::dist::DistConfig;
+use crate::exec::cost_model::CostModel;
+use crate::exec::engine::EngineKind;
+use crate::exec::simulator::{self, SimParams};
+use crate::exec::threads;
+use crate::harness::{ablations, fig1, fig2, fig3, table1, Scale};
+use crate::hlo_exec::HloEngine;
+use crate::model::glm::Problem;
+
+pub fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "train" => train(args),
+        "figure" => figure(args),
+        "artifacts" => artifacts(args),
+        "calibrate" => calibrate(args),
+        "list-presets" => {
+            for name in presets::names() {
+                println!("{name}");
+            }
+            Ok(())
+        }
+        "help" | "-h" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}
+
+/// Build an ExperimentConfig from preset/config-file/flag layers.
+pub fn build_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = if let Some(preset) = args.get("preset") {
+        presets::by_name(preset)
+            .with_context(|| format!("unknown preset {preset:?} (see list-presets)"))?
+    } else if let Some(path) = args.get("config") {
+        ExperimentConfig::from_file(path)?
+    } else {
+        ExperimentConfig::default()
+    };
+    if let Some(a) = args.get("algorithm") {
+        cfg.algorithm = Algorithm::parse(a).with_context(|| format!("bad --algorithm {a:?}"))?;
+    }
+    if let Some(p) = args.get("problem") {
+        cfg.problem = Problem::parse(p).with_context(|| format!("bad --problem {p:?}"))?;
+    }
+    if let Some(v) = args.get_usize("p")? {
+        cfg.p = v;
+    }
+    if let Some(v) = args.get_f64("eta")? {
+        cfg.eta = v as f32;
+    }
+    if let Some(v) = args.get_f64("lambda")? {
+        cfg.lambda = v as f32;
+    }
+    if let Some(v) = args.get_usize("epochs")? {
+        cfg.epochs = v;
+    }
+    if let Some(v) = args.get_usize("tau")? {
+        cfg.tau = v;
+    }
+    if let Some(v) = args.get_f64("tol")? {
+        cfg.tol = v;
+    }
+    if let Some(v) = args.get_usize("seed")? {
+        cfg.seed = v as u64;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn train(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let engine = match args.get("engine") {
+        None => EngineKind::Native,
+        Some(e) => EngineKind::parse(e).with_context(|| format!("bad --engine {e:?}"))?,
+    };
+    println!(
+        "== {} | {} | {:?} | p={} eta={} lambda={} tol={} engine={engine:?}",
+        cfg.name,
+        cfg.algorithm.name(),
+        cfg.problem,
+        cfg.p,
+        cfg.eta,
+        cfg.lambda,
+        cfg.tol
+    );
+    let data = cfg.dataset.load(cfg.seed)?;
+    if !cfg.algorithm.is_distributed() {
+        let scfg = SolverConfig {
+            eta: cfg.eta,
+            lambda: cfg.lambda,
+            epochs: cfg.epochs,
+            seed: cfg.seed,
+        };
+        let name = cfg.algorithm.name().to_ascii_lowercase();
+        let trace = match engine {
+            EngineKind::Native => {
+                let mut solver = algos::by_name(&name, &data, cfg.problem, scfg).unwrap();
+                solver.run_to(cfg.tol)
+            }
+            EngineKind::Hlo => {
+                // only CentralVR gets the explicit HLO path in the CLI;
+                // other solvers via hlo run through integration tests
+                let hlo = HloEngine::new(HloEngine::default_dir())?;
+                let mut solver = algos::centralvr::CentralVr::new(&data, cfg.problem, scfg)
+                    .with_engine(Box::new(hlo));
+                solver.run_to(cfg.tol)
+            }
+        };
+        println!(
+            "converged={} rel={:.3e} grad_evals={} epochs~{} elapsed={:.3}s",
+            trace.converged,
+            trace.series.final_rel(),
+            trace.grad_evals,
+            trace.series.points.len().saturating_sub(1),
+            trace.elapsed_s
+        );
+    } else {
+        let sharded = ShardedDataset::split(&data, cfg.p, cfg.seed ^ 0xD15C);
+        let dcfg = DistConfig {
+            algorithm: cfg.algorithm,
+            p: cfg.p,
+            eta: cfg.eta,
+            lambda: cfg.lambda,
+            tau: cfg.tau,
+            max_rounds: cfg.epochs,
+            tol: cfg.tol,
+            seed: cfg.seed,
+            easgd_beta: cfg.easgd_beta,
+            decay: cfg.decay,
+            ps_batch: 10,
+            network: cfg.network,
+            record_every: cfg.p.max(1),
+        };
+        if args.has("threads") {
+            let trace = threads::run(cfg.problem, &sharded, dcfg);
+            println!(
+                "threads: converged={} rel={:.3e} grad_evals={} elapsed={:.3}s (wall)",
+                trace.converged,
+                trace.series.final_rel(),
+                trace.grad_evals,
+                trace.elapsed_s
+            );
+        } else {
+            let rep = simulator::run(
+                cfg.problem,
+                &sharded,
+                dcfg,
+                SimParams::calibrated(data.d()),
+            );
+            println!(
+                "sim: converged={} rel={:.3e} grad_evals={} t_virtual={:.4}s events={} bytes={}",
+                rep.trace.converged,
+                rep.trace.series.final_rel(),
+                rep.trace.grad_evals,
+                rep.trace.elapsed_s,
+                rep.events,
+                rep.counters.bytes_communicated
+            );
+        }
+    }
+    Ok(())
+}
+
+fn figure(args: &Args) -> Result<()> {
+    let scale = match args.get("scale") {
+        None => Scale::Full,
+        Some(s) => Scale::parse(s).with_context(|| format!("bad --scale {s:?}"))?,
+    };
+    let which = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    match which {
+        "fig1" => fig1::report(scale)?,
+        "fig2conv" => fig2::report_convergence(scale)?,
+        "fig2scale" => fig2::report_scaling(scale)?,
+        "fig3conv" => fig3::report_convergence(scale)?,
+        "fig3scale" => fig3::report_scaling(scale)?,
+        "table1" => table1::report(),
+        "ablations" | "theory" => ablations::report_all()?,
+        "all" => {
+            fig1::report(scale)?;
+            fig2::report_convergence(scale)?;
+            fig2::report_scaling(scale)?;
+            fig3::report_convergence(scale)?;
+            fig3::report_scaling(scale)?;
+            table1::report();
+            ablations::report_all()?;
+        }
+        other => bail!("unknown figure {other:?}"),
+    }
+    Ok(())
+}
+
+fn artifacts(args: &Args) -> Result<()> {
+    let dir = args
+        .get("artifacts")
+        .map(String::from)
+        .unwrap_or_else(HloEngine::default_dir);
+    let op = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("list");
+    match op {
+        "list" => {
+            let m = crate::runtime::artifacts::Manifest::load(&dir)?;
+            println!("{} artifacts in {dir}:", m.entries.len());
+            for e in &m.entries {
+                println!(
+                    "  {:40} fn={:16} {:8} n={:6} d={:4} params={} outputs={}",
+                    e.name,
+                    e.fn_name,
+                    e.problem,
+                    e.n,
+                    e.d,
+                    e.params.len(),
+                    e.outputs
+                );
+            }
+        }
+        "check" => {
+            // smoke-run one artifact end to end through the HloEngine
+            let m = crate::runtime::artifacts::Manifest::load(&dir)?;
+            let e = m
+                .entries
+                .iter()
+                .find(|e| e.fn_name == "full_gradient")
+                .context("no full_gradient artifact")?
+                .clone();
+            let problem = Problem::parse(&e.problem).unwrap();
+            let ds = crate::data::synth::toy_classification(e.n, e.d, 1);
+            let x = vec![0.1f32; e.d];
+            let mut g_hlo = vec![0.0f32; e.d];
+            let mut hlo = HloEngine::new(&dir)?;
+            use crate::exec::engine::EpochEngine;
+            hlo.full_gradient(problem, &ds, &x, 1e-4, &mut g_hlo);
+            let mut g_nat = vec![0.0f32; e.d];
+            crate::model::gradients::full_gradient(problem, &ds, &x, 1e-4, &mut g_nat);
+            let diff = crate::util::math::rel_l2_diff(&g_hlo, &g_nat);
+            println!("{}: native-vs-hlo rel diff = {diff:.3e}", e.name);
+            anyhow::ensure!(diff < 1e-4, "parity check failed");
+            println!("artifacts check OK");
+        }
+        other => bail!("unknown artifacts op {other:?}"),
+    }
+    Ok(())
+}
+
+fn calibrate(args: &Args) -> Result<()> {
+    let d = args.get_usize("d")?.unwrap_or(100);
+    let measured = CostModel::calibrate(d);
+    let analytic = CostModel::analytic(d);
+    println!(
+        "d={d}: measured {:.2} ns/grad, analytic {:.2} ns/grad",
+        measured.cost_per_grad_s * 1e9,
+        analytic.cost_per_grad_s * 1e9
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|v| v.to_string()).collect()).unwrap()
+    }
+
+    #[test]
+    fn build_config_layers_flags_over_preset() {
+        let args = parse(&["train", "--preset", "quickstart", "--eta", "0.2", "--epochs", "3"]);
+        let cfg = build_config(&args).unwrap();
+        assert_eq!(cfg.name, "quickstart");
+        assert_eq!(cfg.eta, 0.2);
+        assert_eq!(cfg.epochs, 3);
+    }
+
+    #[test]
+    fn unknown_preset_errors() {
+        let args = parse(&["train", "--preset", "zzz"]);
+        assert!(build_config(&args).is_err());
+    }
+
+    #[test]
+    fn dispatch_rejects_unknown_command() {
+        let args = parse(&["frobnicate"]);
+        assert!(dispatch(&args).is_err());
+    }
+
+    #[test]
+    fn train_tiny_sequential_runs() {
+        let args = parse(&[
+            "train", "--algorithm", "centralvr", "--eta", "0.05", "--epochs", "2", "--tol", "0",
+        ]);
+        // default dataset is the 5000x20 toy; shrink via config instead:
+        let mut cfg = build_config(&args).unwrap();
+        cfg.dataset = crate::config::schema::DatasetSpec::ToyClassification { n: 64, d: 4 };
+        // run through the same path train() uses, minus printing
+        let data = cfg.dataset.load(1).unwrap();
+        let scfg = SolverConfig {
+            eta: cfg.eta,
+            lambda: cfg.lambda,
+            epochs: cfg.epochs,
+            seed: 1,
+        };
+        let mut s = algos::by_name("centralvr", &data, cfg.problem, scfg).unwrap();
+        let trace = s.run_to(0.0);
+        assert_eq!(trace.series.points.len(), 3);
+    }
+}

@@ -1,0 +1,38 @@
+//! Command-line interface (hand-rolled; no `clap` in the offline vendor
+//! set). Subcommands:
+//!
+//! ```text
+//! centralvr train   [--preset NAME | --config FILE] [--algorithm A] [--p N]
+//!                   [--eta X] [--epochs N] [--tol X] [--engine native|hlo]
+//!                   [--threads]            run one experiment
+//! centralvr figure  <fig1|fig2conv|fig2scale|fig3conv|fig3scale|table1|
+//!                    ablations|all> [--scale quick|full]
+//! centralvr artifacts <list|check>         inspect / smoke-test AOT artifacts
+//! centralvr calibrate [--d N]              measure the simulator cost model
+//! centralvr list-presets
+//! ```
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+/// Entry point used by `main.rs`; returns the process exit code.
+pub fn run(argv: Vec<String>) -> i32 {
+    crate::util::logger::init_from_env();
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            eprintln!("{}", args::USAGE);
+            return 2;
+        }
+    };
+    match commands::dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}

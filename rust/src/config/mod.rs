@@ -1,0 +1,9 @@
+//! Configuration system: a TOML-subset parser (the offline vendor set has
+//! no `serde`/`toml`), a typed experiment schema, and named presets for
+//! every figure in the paper.
+
+pub mod presets;
+pub mod schema;
+pub mod toml;
+
+pub use schema::ExperimentConfig;

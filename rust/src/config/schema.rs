@@ -1,0 +1,401 @@
+//! Typed experiment configuration, parsed from the TOML subset
+//! ([`crate::config::toml`]) or built programmatically by the presets and
+//! harnesses.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::toml::Document;
+use crate::data::dataset::Dataset;
+use crate::data::synth;
+use crate::model::glm::Problem;
+
+/// Every algorithm the paper evaluates (sequential §6.1 + distributed §6.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    // sequential (Fig 1)
+    Sgd,
+    Svrg,
+    Saga,
+    CentralVr,
+    // distributed (Figs 2-3)
+    CentralVrSync,
+    CentralVrAsync,
+    DistSvrg,
+    DistSaga,
+    Easgd,
+    PsSvrg,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        match s.to_ascii_lowercase().replace(['_', ' '], "-").as_str() {
+            "sgd" => Some(Algorithm::Sgd),
+            "svrg" => Some(Algorithm::Svrg),
+            "saga" => Some(Algorithm::Saga),
+            "centralvr" | "cvr" => Some(Algorithm::CentralVr),
+            "centralvr-sync" | "cvr-sync" => Some(Algorithm::CentralVrSync),
+            "centralvr-async" | "cvr-async" => Some(Algorithm::CentralVrAsync),
+            "d-svrg" | "dist-svrg" | "dsvrg" => Some(Algorithm::DistSvrg),
+            "d-saga" | "dist-saga" | "dsaga" => Some(Algorithm::DistSaga),
+            "easgd" => Some(Algorithm::Easgd),
+            "ps-svrg" | "pssvrg" | "param-server-svrg" => Some(Algorithm::PsSvrg),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Sgd => "SGD",
+            Algorithm::Svrg => "SVRG",
+            Algorithm::Saga => "SAGA",
+            Algorithm::CentralVr => "CentralVR",
+            Algorithm::CentralVrSync => "CVR-Sync",
+            Algorithm::CentralVrAsync => "CVR-Async",
+            Algorithm::DistSvrg => "D-SVRG",
+            Algorithm::DistSaga => "D-SAGA",
+            Algorithm::Easgd => "EASGD",
+            Algorithm::PsSvrg => "PS-SVRG",
+        }
+    }
+
+    pub fn is_distributed(self) -> bool {
+        matches!(
+            self,
+            Algorithm::CentralVrSync
+                | Algorithm::CentralVrAsync
+                | Algorithm::DistSvrg
+                | Algorithm::DistSaga
+                | Algorithm::Easgd
+                | Algorithm::PsSvrg
+        )
+    }
+}
+
+/// Which dataset to run on (paper workloads + LIBSVM drop-in).
+#[derive(Clone, Debug, PartialEq)]
+pub enum DatasetSpec {
+    /// Paper §6.1 toy classification: two gaussians, unit separation.
+    ToyClassification { n: usize, d: usize },
+    /// Paper §6.1 toy least squares: b = Ax + eps.
+    ToyLeastSquares { n: usize, d: usize },
+    /// IJCNN1 stand-in (35k x 22, binary).
+    Ijcnn1Like,
+    /// SUSY stand-in (n x 18, binary; paper 5M, default 500k).
+    SusyLike { n: usize },
+    /// MILLIONSONG stand-in (n x 90, regression; paper 463k, default 46k).
+    MillionsongLike { n: usize },
+    /// Real LIBSVM file if available.
+    LibSvm { path: String, d: Option<usize> },
+}
+
+impl DatasetSpec {
+    /// Materialize the dataset (generators are seeded => reproducible).
+    pub fn load(&self, seed: u64) -> Result<Dataset> {
+        Ok(match self {
+            DatasetSpec::ToyClassification { n, d } => {
+                synth::toy_classification(*n, *d, seed)
+            }
+            DatasetSpec::ToyLeastSquares { n, d } => {
+                synth::toy_least_squares(*n, *d, seed)
+            }
+            DatasetSpec::Ijcnn1Like => synth::ijcnn1_like(seed),
+            DatasetSpec::SusyLike { n } => synth::susy_like_n(*n, seed),
+            DatasetSpec::MillionsongLike { n } => synth::millionsong_like_n(*n, seed),
+            DatasetSpec::LibSvm { path, d } => crate::data::libsvm::load(path, *d)?,
+        })
+    }
+
+    /// Natural problem type for the dataset (classification vs regression).
+    pub fn default_problem(&self) -> Problem {
+        match self {
+            DatasetSpec::ToyClassification { .. }
+            | DatasetSpec::Ijcnn1Like
+            | DatasetSpec::SusyLike { .. } => Problem::Logistic,
+            DatasetSpec::ToyLeastSquares { .. }
+            | DatasetSpec::MillionsongLike { .. } => Problem::Ridge,
+            DatasetSpec::LibSvm { .. } => Problem::Logistic,
+        }
+    }
+
+    pub fn parse(kind: &str, n: usize, d: usize, path: Option<&str>) -> Result<DatasetSpec> {
+        Ok(match kind.to_ascii_lowercase().as_str() {
+            "toy-class" | "toy-classification" => {
+                DatasetSpec::ToyClassification { n, d }
+            }
+            "toy-ls" | "toy-least-squares" => DatasetSpec::ToyLeastSquares { n, d },
+            "ijcnn1-like" | "ijcnn1" => DatasetSpec::Ijcnn1Like,
+            "susy-like" | "susy" => DatasetSpec::SusyLike { n },
+            "millionsong-like" | "millionsong" => DatasetSpec::MillionsongLike { n },
+            "libsvm" => DatasetSpec::LibSvm {
+                path: path.context("libsvm dataset needs a path")?.to_string(),
+                d: if d == 0 { None } else { Some(d) },
+            },
+            other => bail!("unknown dataset kind {other:?}"),
+        })
+    }
+}
+
+/// Network/latency model for the cluster simulator (DESIGN.md §3).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetworkModel {
+    /// One-way message latency, seconds.
+    pub latency_s: f64,
+    /// Link bandwidth, bytes/second (message transfer adds size/bandwidth).
+    pub bandwidth_bps: f64,
+    /// Central-server service time per update (lock-serialized, §6.2
+    /// "locked" async implementation).
+    pub server_service_s: f64,
+    /// Worker speed heterogeneity: speeds drawn log-uniform in
+    /// [1/spread, spread] (1.0 = homogeneous).
+    pub hetero_spread: f64,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        // Ballpark figures for a commodity cluster interconnect.
+        NetworkModel {
+            latency_s: 100e-6,
+            bandwidth_bps: 1.25e9, // 10 GbE
+            server_service_s: 5e-6,
+            hetero_spread: 1.0,
+        }
+    }
+}
+
+impl NetworkModel {
+    /// Transfer time of a message of `bytes`.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+}
+
+/// A full experiment description.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub algorithm: Algorithm,
+    pub problem: Problem,
+    pub dataset: DatasetSpec,
+    /// Worker count (1 for sequential algorithms).
+    pub p: usize,
+    pub eta: f32,
+    pub lambda: f32,
+    /// Communication period for D-SVRG / D-SAGA / EASGD (paper's tau).
+    pub tau: usize,
+    /// Epoch budget.
+    pub epochs: usize,
+    /// Relative gradient-norm tolerance (paper: 1e-5).
+    pub tol: f64,
+    pub seed: u64,
+    /// Per-epoch geometric step decay (1.0 = constant, the paper default).
+    pub decay: f32,
+    /// EASGD elastic coefficient (paper's alpha-like moving rate).
+    pub easgd_beta: f32,
+    pub network: NetworkModel,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "experiment".into(),
+            algorithm: Algorithm::CentralVr,
+            problem: Problem::Logistic,
+            dataset: DatasetSpec::ToyClassification { n: 5000, d: 20 },
+            p: 1,
+            eta: 0.05,
+            lambda: 1e-4,
+            tau: 0,
+            epochs: 100,
+            tol: 1e-5,
+            seed: 42,
+            decay: 1.0,
+            easgd_beta: 0.9,
+            network: NetworkModel::default(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from a TOML document; missing keys keep defaults.
+    pub fn from_document(doc: &Document) -> Result<ExperimentConfig> {
+        let mut cfg = ExperimentConfig::default();
+        if let Some(v) = doc.get_str("name") {
+            cfg.name = v.to_string();
+        }
+        if let Some(v) = doc.get_str("algorithm") {
+            cfg.algorithm =
+                Algorithm::parse(v).with_context(|| format!("unknown algorithm {v:?}"))?;
+        }
+        if let Some(v) = doc.get_str("problem") {
+            cfg.problem =
+                Problem::parse(v).with_context(|| format!("unknown problem {v:?}"))?;
+        }
+        if doc.get("dataset.kind").is_some() {
+            let kind = doc.get_str("dataset.kind").context("dataset.kind")?;
+            let n = doc.get_int("dataset.n").unwrap_or(5000) as usize;
+            let d = doc.get_int("dataset.d").unwrap_or(20) as usize;
+            cfg.dataset = DatasetSpec::parse(kind, n, d, doc.get_str("dataset.path"))?;
+            cfg.problem = cfg.dataset.default_problem();
+            // explicit problem key still wins
+            if let Some(v) = doc.get_str("problem") {
+                cfg.problem = Problem::parse(v).context("problem")?;
+            }
+        }
+        if let Some(v) = doc.get_int("p") {
+            cfg.p = v as usize;
+        }
+        if let Some(v) = doc.get_float("eta") {
+            cfg.eta = v as f32;
+        }
+        if let Some(v) = doc.get_float("lambda") {
+            cfg.lambda = v as f32;
+        }
+        if let Some(v) = doc.get_int("tau") {
+            cfg.tau = v as usize;
+        }
+        if let Some(v) = doc.get_int("epochs") {
+            cfg.epochs = v as usize;
+        }
+        if let Some(v) = doc.get_float("tol") {
+            cfg.tol = v;
+        }
+        if let Some(v) = doc.get_int("seed") {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = doc.get_float("decay") {
+            cfg.decay = v as f32;
+        }
+        if let Some(v) = doc.get_float("easgd_beta") {
+            cfg.easgd_beta = v as f32;
+        }
+        if let Some(v) = doc.get_float("network.latency_us") {
+            cfg.network.latency_s = v * 1e-6;
+        }
+        if let Some(v) = doc.get_float("network.bandwidth_gbps") {
+            cfg.network.bandwidth_bps = v * 0.125e9;
+        }
+        if let Some(v) = doc.get_float("network.server_service_us") {
+            cfg.network.server_service_s = v * 1e-6;
+        }
+        if let Some(v) = doc.get_float("network.hetero_spread") {
+            cfg.network.hetero_spread = v;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<ExperimentConfig> {
+        Self::from_document(&Document::parse(text)?)
+    }
+
+    pub fn from_file(path: &str) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {path}"))?;
+        Self::from_toml_str(&text)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.eta <= 0.0 {
+            bail!("eta must be positive");
+        }
+        if self.lambda < 0.0 {
+            bail!("lambda must be non-negative");
+        }
+        if self.p == 0 {
+            bail!("p must be >= 1");
+        }
+        if self.algorithm.is_distributed() && self.p < 2 {
+            bail!(
+                "{} is a distributed algorithm; need p >= 2",
+                self.algorithm.name()
+            );
+        }
+        if !(0.0..=1.0).contains(&(self.decay as f64)) {
+            bail!("decay must be in (0, 1]");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algorithm_parse_roundtrip() {
+        for a in [
+            Algorithm::Sgd,
+            Algorithm::Svrg,
+            Algorithm::Saga,
+            Algorithm::CentralVr,
+            Algorithm::CentralVrSync,
+            Algorithm::CentralVrAsync,
+            Algorithm::DistSvrg,
+            Algorithm::DistSaga,
+            Algorithm::Easgd,
+            Algorithm::PsSvrg,
+        ] {
+            assert_eq!(Algorithm::parse(a.name()), Some(a), "{}", a.name());
+        }
+    }
+
+    #[test]
+    fn full_toml_parse() {
+        let cfg = ExperimentConfig::from_toml_str(
+            r#"
+            name = "fig2-sync"
+            algorithm = "centralvr-sync"
+            p = 192
+            eta = 0.02
+            tau = 100
+            epochs = 50
+            tol = 1e-5
+            [dataset]
+            kind = "toy-ls"
+            n = 5000
+            d = 100
+            [network]
+            latency_us = 200
+            hetero_spread = 2.0
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.algorithm, Algorithm::CentralVrSync);
+        assert_eq!(cfg.p, 192);
+        assert_eq!(cfg.problem, Problem::Ridge); // inferred from dataset
+        assert!((cfg.network.latency_s - 200e-6).abs() < 1e-12);
+        assert_eq!(cfg.network.hetero_spread, 2.0);
+    }
+
+    #[test]
+    fn validation_catches_mistakes() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.eta = -1.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.algorithm = Algorithm::CentralVrSync;
+        cfg.p = 1;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn dataset_specs_load() {
+        let ds = DatasetSpec::ToyClassification { n: 50, d: 4 }
+            .load(1)
+            .unwrap();
+        assert_eq!((ds.n(), ds.d()), (50, 4));
+        let ds = DatasetSpec::SusyLike { n: 100 }.load(1).unwrap();
+        assert_eq!(ds.d(), 18);
+        assert!(DatasetSpec::parse("nope", 1, 1, None).is_err());
+    }
+
+    #[test]
+    fn network_transfer_time() {
+        let nm = NetworkModel {
+            latency_s: 1e-3,
+            bandwidth_bps: 1e6,
+            ..Default::default()
+        };
+        assert!((nm.transfer_time(1000) - 2e-3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,297 @@
+//! TOML-subset parser — enough for experiment config files.
+//!
+//! Supported: `[section]` and `[section.sub]` headers, `key = value` with
+//! strings ("..."), integers, floats, booleans, and homogeneous arrays of
+//! those; `#` comments; bare keys before any section land in the root
+//! table. Not supported (by design): dates, inline tables, multi-line
+//! strings, arrays-of-tables.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`eta = 1` works).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Flat document: dotted section path + key -> value. `get("dist.p")`
+/// retrieves `p = ...` under `[dist]`.
+#[derive(Clone, Debug, Default)]
+pub struct Document {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Document {
+    pub fn parse(text: &str) -> Result<Document> {
+        let mut doc = Document::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: malformed section header", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let value = parse_value(value.trim())
+                .with_context(|| format!("line {}: bad value", lineno + 1))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            doc.entries.insert(full, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+
+    pub fn get_str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(Value::as_str)
+    }
+
+    pub fn get_int(&self, path: &str) -> Option<i64> {
+        self.get(path).and_then(Value::as_int)
+    }
+
+    pub fn get_float(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(Value::as_float)
+    }
+
+    pub fn get_bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(Value::as_bool)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    /// All keys under a section prefix (for validation diagnostics).
+    pub fn section_keys<'a>(&'a self, section: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        let prefix = format!("{section}.");
+        self.entries
+            .keys()
+            .filter(move |k| k.starts_with(&prefix))
+            .map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(stripped) = s.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .context("unterminated string")?;
+        return Ok(Value::Str(unescape(inner)?));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        let inner = s
+            .strip_prefix('[')
+            .unwrap()
+            .strip_suffix(']')
+            .context("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    // numbers: underscores allowed
+    let cleaned = s.replace('_', "");
+    if let Ok(v) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(v) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+fn unescape(s: &str) -> Result<String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                other => bail!("bad escape \\{other:?}"),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    Ok(out)
+}
+
+/// Split on commas that are not nested inside brackets or strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, ch) in s.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Document::parse(
+            r#"
+            name = "fig1"   # comment
+            [solver]
+            eta = 0.05
+            epochs = 100
+            decay = 1
+            verbose = true
+            [dist.network]
+            latency_us = 50.0
+            taus = [10, 100, 1000]
+            labels = ["a", "b"]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("name"), Some("fig1"));
+        assert_eq!(doc.get_float("solver.eta"), Some(0.05));
+        assert_eq!(doc.get_int("solver.epochs"), Some(100));
+        assert_eq!(doc.get_float("solver.decay"), Some(1.0)); // int->float
+        assert_eq!(doc.get_bool("solver.verbose"), Some(true));
+        assert_eq!(doc.get_float("dist.network.latency_us"), Some(50.0));
+        let taus = doc.get("dist.network.taus").unwrap().as_array().unwrap();
+        assert_eq!(taus.len(), 3);
+        assert_eq!(taus[2].as_int(), Some(1000));
+    }
+
+    #[test]
+    fn string_escapes_and_hash_in_string() {
+        let doc = Document::parse("s = \"a#b\\nc\"\n").unwrap();
+        assert_eq!(doc.get_str("s"), Some("a#b\nc"));
+    }
+
+    #[test]
+    fn error_cases() {
+        assert!(Document::parse("[unclosed\n").is_err());
+        assert!(Document::parse("novalue =\n").is_err());
+        assert!(Document::parse("= 3\n").is_err());
+        assert!(Document::parse("x = \"unterminated\n").is_err());
+        assert!(Document::parse("x = [1, 2\n").is_err());
+        assert!(Document::parse("x = what\n").is_err());
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = Document::parse("n = 5_000_000\n").unwrap();
+        assert_eq!(doc.get_int("n"), Some(5_000_000));
+    }
+
+    #[test]
+    fn section_keys_iterates() {
+        let doc = Document::parse("[a]\nx = 1\ny = 2\n[b]\nz = 3\n").unwrap();
+        let keys: Vec<&str> = doc.section_keys("a").collect();
+        assert_eq!(keys, vec!["a.x", "a.y"]);
+    }
+}

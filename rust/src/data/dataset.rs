@@ -1,0 +1,210 @@
+//! Dense row-major dataset container.
+//!
+//! Rows are samples `a_i` (length `d`), `labels[i]` is `b_i`. Row-major
+//! layout keeps the per-sample gradient loop streaming contiguous memory —
+//! the same access pattern the L1 Pallas kernel gets by pre-permuting the
+//! shard (DESIGN.md §Hardware-Adaptation).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{ensure, Result};
+
+/// Process-unique dataset ids (cache keys must survive allocator reuse of
+/// freed buffers — raw pointers are NOT sufficient identity).
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// A dense supervised dataset: features `A (n x d)` + labels `b (n)`.
+#[derive(Debug)]
+pub struct Dataset {
+    features: Vec<f32>,
+    labels: Vec<f32>,
+    n: usize,
+    d: usize,
+    id: u64,
+}
+
+impl Clone for Dataset {
+    fn clone(&self) -> Self {
+        // a clone is a distinct buffer; give it a distinct identity
+        Dataset {
+            features: self.features.clone(),
+            labels: self.labels.clone(),
+            n: self.n,
+            d: self.d,
+            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+        }
+    }
+}
+
+impl Dataset {
+    /// Build from a flat row-major feature buffer.
+    pub fn from_flat(features: Vec<f32>, labels: Vec<f32>, d: usize) -> Result<Self> {
+        ensure!(d > 0, "d must be positive");
+        ensure!(
+            features.len() % d == 0,
+            "feature buffer length {} not a multiple of d={}",
+            features.len(),
+            d
+        );
+        let n = features.len() / d;
+        ensure!(
+            labels.len() == n,
+            "labels length {} != n {}",
+            labels.len(),
+            n
+        );
+        Ok(Dataset {
+            features,
+            labels,
+            n,
+            d,
+            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+        })
+    }
+
+    /// Allocate an all-zeros dataset (filled by generators).
+    pub fn zeros(n: usize, d: usize) -> Self {
+        Dataset {
+            features: vec![0.0; n * d],
+            labels: vec![0.0; n],
+            n,
+            d,
+            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+        }
+    }
+
+    /// Process-unique identity (stable cache key; see hlo_exec).
+    #[inline]
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Feature row for sample `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.n);
+        &self.features[i * self.d..(i + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let d = self.d;
+        &mut self.features[i * d..(i + 1) * d]
+    }
+
+    #[inline]
+    pub fn label(&self, i: usize) -> f32 {
+        self.labels[i]
+    }
+
+    #[inline]
+    pub fn label_mut(&mut self, i: usize) -> &mut f32 {
+        &mut self.labels[i]
+    }
+
+    /// Flat row-major feature buffer (what the HLO artifacts take).
+    pub fn features_flat(&self) -> &[f32] {
+        &self.features
+    }
+
+    pub fn labels(&self) -> &[f32] {
+        &self.labels
+    }
+
+    /// A new dataset containing the given row indices (used by sharding).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let mut out = Dataset::zeros(idx.len(), self.d);
+        for (k, &i) in idx.iter().enumerate() {
+            out.row_mut(k).copy_from_slice(self.row(i));
+            *out.label_mut(k) = self.label(i);
+        }
+        out
+    }
+
+    /// Contiguous row range `[start, end)` as a new dataset.
+    pub fn slice_rows(&self, start: usize, end: usize) -> Dataset {
+        assert!(start <= end && end <= self.n);
+        Dataset {
+            features: self.features[start * self.d..end * self.d].to_vec(),
+            labels: self.labels[start..end].to_vec(),
+            n: end - start,
+            d: self.d,
+            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+        }
+    }
+
+    /// Gather rows by `order` into a preallocated flat buffer (the native
+    /// engine's analogue of the kernel's pre-permutation; hot path).
+    pub fn gather_into(&self, order: &[u32], feat_out: &mut [f32], label_out: &mut [f32]) {
+        debug_assert_eq!(feat_out.len(), order.len() * self.d);
+        debug_assert_eq!(label_out.len(), order.len());
+        for (k, &i) in order.iter().enumerate() {
+            let i = i as usize;
+            feat_out[k * self.d..(k + 1) * self.d].copy_from_slice(self.row(i));
+            label_out[k] = self.labels[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Dataset {
+        Dataset::from_flat(
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            vec![1.0, -1.0, 1.0],
+            2,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn shape_accessors() {
+        let ds = small();
+        assert_eq!(ds.n(), 3);
+        assert_eq!(ds.d(), 2);
+        assert_eq!(ds.row(1), &[3.0, 4.0]);
+        assert_eq!(ds.label(2), 1.0);
+    }
+
+    #[test]
+    fn from_flat_validates() {
+        assert!(Dataset::from_flat(vec![1.0; 5], vec![0.0; 2], 2).is_err());
+        assert!(Dataset::from_flat(vec![1.0; 4], vec![0.0; 3], 2).is_err());
+        assert!(Dataset::from_flat(vec![], vec![], 0).is_err());
+    }
+
+    #[test]
+    fn subset_and_slice() {
+        let ds = small();
+        let sub = ds.subset(&[2, 0]);
+        assert_eq!(sub.row(0), &[5.0, 6.0]);
+        assert_eq!(sub.row(1), &[1.0, 2.0]);
+        assert_eq!(sub.label(1), 1.0);
+        let sl = ds.slice_rows(1, 3);
+        assert_eq!(sl.n(), 2);
+        assert_eq!(sl.row(0), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn gather_into_matches_subset() {
+        let ds = small();
+        let order = [1u32, 1, 0];
+        let mut feats = vec![0.0; 6];
+        let mut labels = vec![0.0; 3];
+        ds.gather_into(&order, &mut feats, &mut labels);
+        assert_eq!(feats, vec![3.0, 4.0, 3.0, 4.0, 1.0, 2.0]);
+        assert_eq!(labels, vec![-1.0, -1.0, 1.0]);
+    }
+}

@@ -1,0 +1,149 @@
+//! LIBSVM/SVMLight format loader.
+//!
+//! The paper's real datasets (IJCNN1, SUSY, MILLIONSONG from the LIBSVM
+//! collection) are not downloadable in the offline image, but this loader
+//! means they drop in unchanged: point a `DatasetSpec::LibSvm { path, d }`
+//! at the file and every experiment runs on the real data.
+//!
+//! Format: one sample per line, `label idx:val idx:val ...`, 1-based
+//! indices, omitted features are zero. Lines starting with `#` are skipped.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::dataset::Dataset;
+
+/// Parse one LIBSVM line into (label, pairs). Exposed for tests.
+pub fn parse_line(line: &str) -> Result<(f32, Vec<(usize, f32)>)> {
+    let mut it = line.split_ascii_whitespace();
+    let label: f32 = it
+        .next()
+        .context("empty line")?
+        .parse()
+        .context("bad label")?;
+    let mut pairs = Vec::new();
+    for tok in it {
+        if tok.starts_with('#') {
+            break; // trailing comment
+        }
+        let (idx, val) = tok
+            .split_once(':')
+            .with_context(|| format!("bad feature token {tok:?}"))?;
+        let idx: usize = idx.parse().with_context(|| format!("bad index {idx:?}"))?;
+        if idx == 0 {
+            bail!("LIBSVM indices are 1-based, got 0");
+        }
+        let val: f32 = val.parse().with_context(|| format!("bad value {val:?}"))?;
+        pairs.push((idx - 1, val));
+    }
+    Ok((label, pairs))
+}
+
+/// Load a LIBSVM file into a dense [`Dataset`].
+///
+/// `d` may be given explicitly (recommended for the real datasets) or
+/// inferred as the max feature index seen. Binary labels {0,1} are mapped
+/// to {-1,+1}; any other labels pass through (regression).
+pub fn load<P: AsRef<Path>>(path: P, d: Option<usize>) -> Result<Dataset> {
+    let f = File::open(&path)
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let reader = BufReader::new(f);
+    let mut rows: Vec<(f32, Vec<(usize, f32)>)> = Vec::new();
+    let mut max_idx = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        let (label, pairs) =
+            parse_line(trimmed).with_context(|| format!("line {}", lineno + 1))?;
+        for &(idx, _) in &pairs {
+            max_idx = max_idx.max(idx + 1);
+        }
+        rows.push((label, pairs));
+    }
+    let d = d.unwrap_or(max_idx);
+    if d < max_idx {
+        bail!("explicit d={d} smaller than max feature index {max_idx}");
+    }
+    // {0,1} -> {-1,+1} if labels are exactly a 0/1 set
+    let binary01 = rows
+        .iter()
+        .all(|(l, _)| *l == 0.0 || *l == 1.0)
+        && rows.iter().any(|(l, _)| *l == 0.0);
+    let mut ds = Dataset::zeros(rows.len(), d);
+    for (i, (label, pairs)) in rows.into_iter().enumerate() {
+        *ds.label_mut(i) = if binary01 {
+            if label == 0.0 {
+                -1.0
+            } else {
+                1.0
+            }
+        } else {
+            label
+        };
+        let row = ds.row_mut(i);
+        for (idx, val) in pairs {
+            row[idx] = val;
+        }
+    }
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_tmp(content: &str) -> std::path::PathBuf {
+        let path = std::env::temp_dir().join(format!(
+            "centralvr_libsvm_{}.txt",
+            std::process::id()
+        ));
+        let mut f = File::create(&path).unwrap();
+        f.write_all(content.as_bytes()).unwrap();
+        path
+    }
+
+    #[test]
+    fn parses_basic_file() {
+        let p = write_tmp("+1 1:0.5 3:2.0\n-1 2:1.5\n");
+        let ds = load(&p, None).unwrap();
+        assert_eq!((ds.n(), ds.d()), (2, 3));
+        assert_eq!(ds.row(0), &[0.5, 0.0, 2.0]);
+        assert_eq!(ds.row(1), &[0.0, 1.5, 0.0]);
+        assert_eq!(ds.labels(), &[1.0, -1.0]);
+    }
+
+    #[test]
+    fn maps_01_labels() {
+        let p = write_tmp("0 1:1\n1 1:2\n");
+        let ds = load(&p, Some(1)).unwrap();
+        assert_eq!(ds.labels(), &[-1.0, 1.0]);
+    }
+
+    #[test]
+    fn keeps_regression_labels() {
+        let p = write_tmp("3.7 1:1\n-2.5 1:2\n");
+        let ds = load(&p, None).unwrap();
+        assert_eq!(ds.labels(), &[3.7, -2.5]);
+    }
+
+    #[test]
+    fn rejects_zero_index_and_small_d() {
+        assert!(parse_line("1 0:5").is_err());
+        let p = write_tmp("1 5:1\n");
+        assert!(load(&p, Some(2)).is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blank_lines() {
+        let p = write_tmp("# header\n\n+1 1:1 # trailing\n");
+        let ds = load(&p, None).unwrap();
+        assert_eq!(ds.n(), 1);
+    }
+}

@@ -1,0 +1,13 @@
+//! Data pipeline: dense datasets, synthetic generators matching the paper's
+//! workloads, a LIBSVM-format loader for the real datasets (IJCNN1, SUSY,
+//! MILLIONSONG drop in if the files are present), feature normalization,
+//! and disjoint sharding across workers.
+
+pub mod dataset;
+pub mod libsvm;
+pub mod normalize;
+pub mod shard;
+pub mod synth;
+
+pub use dataset::Dataset;
+pub use shard::ShardedDataset;

@@ -1,0 +1,113 @@
+//! Feature normalization.
+//!
+//! Real tabular datasets (SUSY/MILLIONSONG-like) have feature scales
+//! spanning decades; per-feature standardization keeps the GLM Lipschitz
+//! constant sane so the paper's constant-step-size regimes apply.
+
+use crate::data::dataset::Dataset;
+
+/// Per-feature statistics computed in one pass.
+#[derive(Clone, Debug)]
+pub struct FeatureStats {
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+}
+
+/// Compute per-feature mean / std (population).
+pub fn feature_stats(ds: &Dataset) -> FeatureStats {
+    let d = ds.d();
+    let n = ds.n() as f64;
+    let mut mean = vec![0.0f64; d];
+    let mut sq = vec![0.0f64; d];
+    for i in 0..ds.n() {
+        for (j, &v) in ds.row(i).iter().enumerate() {
+            mean[j] += v as f64;
+            sq[j] += (v as f64) * (v as f64);
+        }
+    }
+    for j in 0..d {
+        mean[j] /= n;
+        sq[j] = (sq[j] / n - mean[j] * mean[j]).max(0.0).sqrt();
+    }
+    FeatureStats { mean, std: sq }
+}
+
+/// Standardize in place: `a_ij <- (a_ij - mean_j) / std_j` (std_j==0 kept).
+pub fn standardize(ds: &mut Dataset) -> FeatureStats {
+    let stats = feature_stats(ds);
+    apply(ds, &stats);
+    stats
+}
+
+/// Apply precomputed stats (used to normalize shards consistently: compute
+/// stats on one representative shard or the union, apply everywhere).
+pub fn apply(ds: &mut Dataset, stats: &FeatureStats) {
+    for i in 0..ds.n() {
+        let row = ds.row_mut(i);
+        for (j, v) in row.iter_mut().enumerate() {
+            let s = if stats.std[j] > 1e-12 { stats.std[j] } else { 1.0 };
+            *v = ((*v as f64 - stats.mean[j]) / s) as f32;
+        }
+    }
+}
+
+/// Scale every row to unit max-norm of the whole dataset (alternative,
+/// keeps sparsity patterns; used for LIBSVM data already roughly scaled).
+pub fn scale_by_max_abs(ds: &mut Dataset) -> f32 {
+    let mut m = 0.0f32;
+    for i in 0..ds.n() {
+        for &v in ds.row(i) {
+            m = m.max(v.abs());
+        }
+    }
+    if m > 0.0 {
+        let inv = 1.0 / m;
+        for i in 0..ds.n() {
+            for v in ds.row_mut(i) {
+                *v *= inv;
+            }
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn standardize_zeros_mean_units_std() {
+        let mut ds = synth::millionsong_like_n(2000, 4);
+        standardize(&mut ds);
+        let stats = feature_stats(&ds);
+        for j in 0..ds.d() {
+            assert!(stats.mean[j].abs() < 1e-4, "mean[{j}]={}", stats.mean[j]);
+            assert!((stats.std[j] - 1.0).abs() < 1e-3, "std[{j}]={}", stats.std[j]);
+        }
+    }
+
+    #[test]
+    fn constant_feature_survives() {
+        let mut ds = Dataset::zeros(10, 2);
+        for i in 0..10 {
+            ds.row_mut(i)[0] = 5.0; // constant
+            ds.row_mut(i)[1] = i as f32;
+        }
+        standardize(&mut ds);
+        for i in 0..10 {
+            assert!(ds.row(i)[0].abs() < 1e-6); // centered, not exploded
+            assert!(ds.row(i)[0].is_finite());
+        }
+    }
+
+    #[test]
+    fn max_abs_scaling() {
+        let mut ds = Dataset::zeros(2, 2);
+        ds.row_mut(0).copy_from_slice(&[2.0, -4.0]);
+        ds.row_mut(1).copy_from_slice(&[1.0, 0.5]);
+        let m = scale_by_max_abs(&mut ds);
+        assert_eq!(m, 4.0);
+        assert_eq!(ds.row(0), &[0.5, -1.0]);
+    }
+}

@@ -1,0 +1,134 @@
+//! Disjoint sharding of a dataset across `p` workers (the paper's
+//! {Omega_s} decomposition, §4) plus the "per-worker generator" path used
+//! by the toy distributed experiments where each worker owns freshly drawn
+//! data (§6.2).
+
+use crate::data::dataset::Dataset;
+use crate::util::rng::Pcg64;
+
+/// A dataset split into disjoint per-worker shards covering all samples.
+#[derive(Clone, Debug)]
+pub struct ShardedDataset {
+    shards: Vec<Dataset>,
+    n_total: usize,
+    d: usize,
+}
+
+impl ShardedDataset {
+    /// Split `ds` into `p` near-equal contiguous shards after a seeded
+    /// shuffle (so class structure doesn't correlate with worker id).
+    pub fn split(ds: &Dataset, p: usize, seed: u64) -> ShardedDataset {
+        assert!(p >= 1 && p <= ds.n(), "need 1 <= p <= n");
+        let mut rng = Pcg64::new(seed);
+        let order: Vec<usize> = rng.permutation(ds.n()).into_iter().map(|v| v as usize).collect();
+        let base = ds.n() / p;
+        let extra = ds.n() % p;
+        let mut shards = Vec::with_capacity(p);
+        let mut cursor = 0usize;
+        for s in 0..p {
+            let len = base + usize::from(s < extra);
+            let idx = &order[cursor..cursor + len];
+            shards.push(ds.subset(idx));
+            cursor += len;
+        }
+        ShardedDataset {
+            shards,
+            n_total: ds.n(),
+            d: ds.d(),
+        }
+    }
+
+    /// Wrap per-worker datasets produced by a generator (toy distributed
+    /// experiments: total data scales with p).
+    pub fn from_shards(shards: Vec<Dataset>) -> ShardedDataset {
+        assert!(!shards.is_empty());
+        let d = shards[0].d();
+        assert!(shards.iter().all(|s| s.d() == d), "inconsistent d");
+        let n_total = shards.iter().map(|s| s.n()).sum();
+        ShardedDataset {
+            shards,
+            n_total,
+            d,
+        }
+    }
+
+    pub fn p(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn n_total(&self) -> usize {
+        self.n_total
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn shard(&self, s: usize) -> &Dataset {
+        &self.shards[s]
+    }
+
+    pub fn shards(&self) -> &[Dataset] {
+        &self.shards
+    }
+
+    /// Weight of shard `s` in the global objective: |Omega_s| / n.
+    pub fn weight(&self, s: usize) -> f64 {
+        self.shards[s].n() as f64 / self.n_total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn split_covers_disjointly() {
+        let ds = synth::toy_classification(103, 4, 1);
+        let sh = ShardedDataset::split(&ds, 7, 2);
+        assert_eq!(sh.p(), 7);
+        assert_eq!(sh.n_total(), 103);
+        let total: usize = sh.shards().iter().map(|s| s.n()).sum();
+        assert_eq!(total, 103);
+        // near-equal: sizes differ by at most 1
+        let sizes: Vec<usize> = sh.shards().iter().map(|s| s.n()).collect();
+        let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(mx - mn <= 1, "{sizes:?}");
+    }
+
+    #[test]
+    fn split_is_a_partition_of_rows() {
+        // Reconstruct multiset of labels+first-feature to check coverage.
+        let ds = synth::toy_least_squares(50, 3, 5);
+        let sh = ShardedDataset::split(&ds, 4, 9);
+        let mut got: Vec<(u32, u32)> = Vec::new();
+        for s in sh.shards() {
+            for i in 0..s.n() {
+                got.push((s.label(i).to_bits(), s.row(i)[0].to_bits()));
+            }
+        }
+        let mut want: Vec<(u32, u32)> = (0..ds.n())
+            .map(|i| (ds.label(i).to_bits(), ds.row(i)[0].to_bits()))
+            .collect();
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn weights_sum_to_one() {
+        let ds = synth::toy_classification(100, 4, 1);
+        let sh = ShardedDataset::split(&ds, 6, 3);
+        let sum: f64 = (0..sh.p()).map(|s| sh.weight(s)).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_shards_totals() {
+        let shards = synth::toy_classification_per_worker(3, 40, 5, 7);
+        let sh = ShardedDataset::from_shards(shards);
+        assert_eq!(sh.n_total(), 120);
+        assert_eq!(sh.d(), 5);
+    }
+}

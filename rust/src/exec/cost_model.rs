@@ -1,0 +1,115 @@
+//! Compute-cost calibration for the cluster simulator.
+//!
+//! The paper's wall-clock axes come from an Intel Xeon E5 MPI cluster we
+//! don't have; the simulator instead charges each worker
+//! `grad_evals * cost_per_grad(d) * speed_s` virtual seconds of compute.
+//! `cost_per_grad` is *measured on this machine* (one dloss + dot + axpy
+//! chain per sample), so virtual time tracks what real per-core compute
+//! would cost, and the network model (latency/bandwidth/server-lock) adds
+//! the distributed part. DESIGN.md §3 documents the substitution.
+
+use crate::data::synth;
+use crate::exec::engine::{EpochEngine, NativeEngine};
+use crate::model::glm::Problem;
+use crate::util::timer::{black_box, Stopwatch};
+
+/// Seconds of compute per gradient evaluation at unit worker speed.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    pub cost_per_grad_s: f64,
+    /// Feature dimension the calibration ran at.
+    pub d: usize,
+}
+
+impl CostModel {
+    /// Measure the per-gradient cost for feature dimension `d` by timing
+    /// native CentralVR epochs on a synthetic shard.
+    pub fn calibrate(d: usize) -> CostModel {
+        let n = 2048.max(4 * d);
+        let ds = synth::toy_classification(n, d, 7);
+        let mut eng = NativeEngine::new();
+        let mut x = vec![0.0f32; d];
+        let mut alpha = vec![0.0f32; n];
+        let gbar = vec![0.0f32; d];
+        let mut gtilde = vec![0.0f32; d];
+        let perm: Vec<u32> = (0..n as u32).collect();
+        // warmup
+        eng.centralvr_epoch(
+            Problem::Logistic,
+            &ds,
+            &perm,
+            &mut x,
+            &mut alpha,
+            &gbar,
+            &mut gtilde,
+            1e-3,
+            1e-4,
+        );
+        let reps = 3;
+        let sw = Stopwatch::start();
+        for _ in 0..reps {
+            eng.centralvr_epoch(
+                Problem::Logistic,
+                &ds,
+                &perm,
+                &mut x,
+                &mut alpha,
+                &gbar,
+                &mut gtilde,
+                1e-3,
+                1e-4,
+            );
+        }
+        black_box(&x);
+        let cost = sw.elapsed_secs() / (reps * n) as f64;
+        CostModel {
+            cost_per_grad_s: cost.max(1e-12),
+            d,
+        }
+    }
+
+    /// Analytic fallback (no measurement): ~2 flops/feature for the dot,
+    /// ~6 for the fused update, at an assumed 2 GFLOP/s effective scalar
+    /// throughput. Used when callers want deterministic virtual time.
+    pub fn analytic(d: usize) -> CostModel {
+        let flops = 8.0 * d as f64 + 20.0;
+        CostModel {
+            cost_per_grad_s: flops / 2e9,
+            d,
+        }
+    }
+
+    /// Compute seconds for a block of `evals` gradient evaluations on a
+    /// worker with relative `speed` (>1 = slower machine).
+    pub fn block_time(&self, evals: u64, speed: f64) -> f64 {
+        evals as f64 * self.cost_per_grad_s * speed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_is_positive_and_sane() {
+        let cm = CostModel::calibrate(32);
+        assert!(cm.cost_per_grad_s > 0.0);
+        // a d=32 gradient should cost well under a millisecond
+        assert!(cm.cost_per_grad_s < 1e-3, "{}", cm.cost_per_grad_s);
+    }
+
+    #[test]
+    fn analytic_scales_with_d() {
+        let a = CostModel::analytic(10);
+        let b = CostModel::analytic(1000);
+        assert!(b.cost_per_grad_s > 10.0 * a.cost_per_grad_s);
+    }
+
+    #[test]
+    fn block_time_linear() {
+        let cm = CostModel::analytic(100);
+        let t1 = cm.block_time(1000, 1.0);
+        assert!((cm.block_time(2000, 1.0) - 2.0 * t1).abs() < 1e-12);
+        assert!((cm.block_time(1000, 2.0) - 2.0 * t1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,397 @@
+//! The epoch-granular compute interface shared by the native Rust path and
+//! the AOT-compiled HLO path.
+//!
+//! Every algorithm in `algos/` and `dist/` performs its local work through
+//! [`EpochEngine`], so switching `--engine native|hlo` changes *what
+//! executes the math* without touching algorithm logic, and the two
+//! implementations can be parity-tested epoch-by-epoch
+//! (`rust/tests/integration_hlo.rs`).
+//!
+//! Semantics are pinned to `python/compile/kernels/ref.py` — identical
+//! update order and f32 accumulation so the implementations agree to
+//! floating-point noise.
+
+use crate::data::dataset::Dataset;
+use crate::model::glm::Problem;
+use crate::model::gradients;
+use crate::util::math;
+
+/// Epoch-granular compute primitives (one call = one shard-local epoch or
+/// one shard-wide reduction). `idx`/`perm` index into the shard.
+pub trait EpochEngine {
+    /// Algorithm 1 inner epoch: sequential VR updates along `perm`
+    /// (a permutation of the shard), updating `x` and the scalar table
+    /// `alpha` in place and writing the freshly accumulated data-part
+    /// average gradient to `gtilde_out`.
+    #[allow(clippy::too_many_arguments)]
+    fn centralvr_epoch(
+        &mut self,
+        p: Problem,
+        shard: &Dataset,
+        perm: &[u32],
+        x: &mut [f32],
+        alpha: &mut [f32],
+        gbar: &[f32],
+        gtilde_out: &mut [f32],
+        eta: f32,
+        lam: f32,
+    );
+
+    /// Plain-SGD epoch that also fills `alpha`/`gtilde` (Algorithm 1 line 2).
+    #[allow(clippy::too_many_arguments)]
+    fn sgd_init_epoch(
+        &mut self,
+        p: Problem,
+        shard: &Dataset,
+        perm: &[u32],
+        x: &mut [f32],
+        alpha: &mut [f32],
+        gtilde_out: &mut [f32],
+        eta: f32,
+        lam: f32,
+    );
+
+    /// Plain SGD over an arbitrary index sequence (EASGD local loop).
+    fn sgd_epoch(
+        &mut self,
+        p: Problem,
+        shard: &Dataset,
+        idx: &[u32],
+        x: &mut [f32],
+        eta: f32,
+        lam: f32,
+    );
+
+    /// SVRG inner loop (Algorithm 4 lines 7-10): anchor `xbar`, full
+    /// data-part gradient `gbar` at `xbar`.
+    #[allow(clippy::too_many_arguments)]
+    fn svrg_inner(
+        &mut self,
+        p: Problem,
+        shard: &Dataset,
+        idx: &[u32],
+        x: &mut [f32],
+        xbar: &[f32],
+        gbar: &[f32],
+        eta: f32,
+        lam: f32,
+    );
+
+    /// SAGA steps with per-iteration `gbar` maintenance (Algorithm 5 inner).
+    /// `n_inv` = 1 / n_global (paper §5.2 scales by the GLOBAL count).
+    #[allow(clippy::too_many_arguments)]
+    fn saga_epoch(
+        &mut self,
+        p: Problem,
+        shard: &Dataset,
+        idx: &[u32],
+        x: &mut [f32],
+        alpha: &mut [f32],
+        gbar: &mut [f32],
+        eta: f32,
+        lam: f32,
+        n_inv: f32,
+    );
+
+    /// Full regularized gradient over the shard into `out`.
+    fn full_gradient(
+        &mut self,
+        p: Problem,
+        shard: &Dataset,
+        x: &[f32],
+        lam: f32,
+        out: &mut [f32],
+    );
+
+    /// Metrics partial sums: writes `sum_i dloss_i a_i` into `gsum`,
+    /// returns `sum_i loss_i`.
+    fn metrics_partial(
+        &mut self,
+        p: Problem,
+        shard: &Dataset,
+        x: &[f32],
+        gsum: &mut [f32],
+    ) -> f64;
+
+    /// Engine label for logs / traces.
+    fn label(&self) -> &'static str;
+}
+
+/// Hand-optimized native Rust implementation — the default engine and the
+/// subject of the §Perf pass (see `util::math::vr_step`).
+#[derive(Default)]
+pub struct NativeEngine;
+
+impl NativeEngine {
+    pub fn new() -> Self {
+        NativeEngine
+    }
+}
+
+impl EpochEngine for NativeEngine {
+    fn centralvr_epoch(
+        &mut self,
+        p: Problem,
+        shard: &Dataset,
+        perm: &[u32],
+        x: &mut [f32],
+        alpha: &mut [f32],
+        gbar: &[f32],
+        gtilde_out: &mut [f32],
+        eta: f32,
+        lam: f32,
+    ) {
+        math::zero(gtilde_out);
+        let inv_n = 1.0 / shard.n() as f32;
+        for &iu in perm {
+            let i = iu as usize;
+            let a = shard.row(i);
+            let c = p.dloss(math::dot(a, x), shard.label(i));
+            math::vr_step(x, a, gbar, c - alpha[i], eta, lam);
+            alpha[i] = c;
+            math::axpy(c * inv_n, a, gtilde_out);
+        }
+    }
+
+    fn sgd_init_epoch(
+        &mut self,
+        p: Problem,
+        shard: &Dataset,
+        perm: &[u32],
+        x: &mut [f32],
+        alpha: &mut [f32],
+        gtilde_out: &mut [f32],
+        eta: f32,
+        lam: f32,
+    ) {
+        math::zero(gtilde_out);
+        let inv_n = 1.0 / shard.n() as f32;
+        for &iu in perm {
+            let i = iu as usize;
+            let a = shard.row(i);
+            let c = p.dloss(math::dot(a, x), shard.label(i));
+            math::sgd_step(x, a, c, eta, lam);
+            alpha[i] = c;
+            math::axpy(c * inv_n, a, gtilde_out);
+        }
+    }
+
+    fn sgd_epoch(
+        &mut self,
+        p: Problem,
+        shard: &Dataset,
+        idx: &[u32],
+        x: &mut [f32],
+        eta: f32,
+        lam: f32,
+    ) {
+        for &iu in idx {
+            let i = iu as usize;
+            let a = shard.row(i);
+            let c = p.dloss(math::dot(a, x), shard.label(i));
+            math::sgd_step(x, a, c, eta, lam);
+        }
+    }
+
+    fn svrg_inner(
+        &mut self,
+        p: Problem,
+        shard: &Dataset,
+        idx: &[u32],
+        x: &mut [f32],
+        xbar: &[f32],
+        gbar: &[f32],
+        eta: f32,
+        lam: f32,
+    ) {
+        for &iu in idx {
+            let i = iu as usize;
+            let a = shard.row(i);
+            let c = p.dloss(math::dot(a, x), shard.label(i));
+            let cbar = p.dloss(math::dot(a, xbar), shard.label(i));
+            math::vr_step(x, a, gbar, c - cbar, eta, lam);
+        }
+    }
+
+    fn saga_epoch(
+        &mut self,
+        p: Problem,
+        shard: &Dataset,
+        idx: &[u32],
+        x: &mut [f32],
+        alpha: &mut [f32],
+        gbar: &mut [f32],
+        eta: f32,
+        lam: f32,
+        n_inv: f32,
+    ) {
+        for &iu in idx {
+            let i = iu as usize;
+            let a = shard.row(i);
+            let c = p.dloss(math::dot(a, x), shard.label(i));
+            let delta = c - alpha[i];
+            math::vr_step(x, a, gbar, delta, eta, lam);
+            math::axpy(n_inv * delta, a, gbar);
+            alpha[i] = c;
+        }
+    }
+
+    fn full_gradient(
+        &mut self,
+        p: Problem,
+        shard: &Dataset,
+        x: &[f32],
+        lam: f32,
+        out: &mut [f32],
+    ) {
+        gradients::full_gradient(p, shard, x, lam, out);
+    }
+
+    fn metrics_partial(
+        &mut self,
+        p: Problem,
+        shard: &Dataset,
+        x: &[f32],
+        gsum: &mut [f32],
+    ) -> f64 {
+        gradients::metrics_partial(p, shard, x, gsum)
+    }
+
+    fn label(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Which engine to construct (CLI/config selection).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    Native,
+    Hlo,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" | "rust" => Some(EngineKind::Native),
+            "hlo" | "pjrt" | "xla" => Some(EngineKind::Hlo),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    /// CentralVR epoch must telescope per eq. (7): summing the updates over
+    /// a full permutation epoch, x_end = x_start - eta * sum_j grad_data
+    /// f_j(xtilde_j) - eta*(n*gbar_old... actually with the scalar-table
+    /// formulation the telescoping identity becomes: the correction terms
+    /// (-alpha_old + gbar_old) cancel IN EXPECTATION only; what telescopes
+    /// exactly is the alpha table: after the epoch alpha[i] = dloss at the
+    /// iterate where i was visited. We check that invariant here.
+    #[test]
+    fn centralvr_epoch_refreshes_entire_table() {
+        let ds = synth::toy_classification(32, 4, 1);
+        let p = Problem::Logistic;
+        let mut eng = NativeEngine::new();
+        let mut x = vec![0.0f32; 4];
+        let mut alpha = vec![123.0f32; 32]; // sentinel values
+        let gbar = vec![0.0f32; 4];
+        let mut gtilde = vec![0.0f32; 4];
+        let perm: Vec<u32> = (0..32).rev().collect();
+        eng.centralvr_epoch(p, &ds, &perm, &mut x, &mut alpha, &gbar, &mut gtilde, 0.01, 1e-4);
+        assert!(alpha.iter().all(|&a| a != 123.0), "every entry refreshed");
+        // gtilde == (1/n) sum_i alpha_i a_i by construction
+        let mut expect = vec![0.0f32; 4];
+        for i in 0..32 {
+            math::axpy(alpha[i] / 32.0, ds.row(i), &mut expect);
+        }
+        assert!(math::max_abs_diff(&gtilde, &expect) < 1e-5);
+    }
+
+    /// With alpha == exact scalars at x and gbar == exact data-part average
+    /// gradient at x, the first VR step equals a full-gradient step.
+    #[test]
+    fn vr_correction_reduces_to_full_gradient_at_consistency() {
+        let ds = synth::toy_least_squares(16, 3, 2);
+        let p = Problem::Ridge;
+        let mut eng = NativeEngine::new();
+        let x0 = vec![0.25f32, -0.5, 0.1];
+        let lam = 0.0f32;
+        // exact table at x0
+        let mut alpha = vec![0.0f32; 16];
+        let mut gbar = vec![0.0f32; 3];
+        for i in 0..16 {
+            alpha[i] = gradients::grad_scalar(p, &ds, i, &x0);
+            math::axpy(alpha[i] / 16.0, ds.row(i), &mut gbar);
+        }
+        // one VR step on sample 5: (c - alpha[5]) a5 + gbar = gbar since c==alpha[5]
+        let mut x = x0.clone();
+        let eta = 0.1f32;
+        let mut gtilde = vec![0.0f32; 3];
+        let mut alpha2 = alpha.clone();
+        eng.centralvr_epoch(p, &ds, &[5], &mut x, &mut alpha2, &gbar, &mut gtilde, eta, lam);
+        let mut gfull = vec![0.0f32; 3];
+        gradients::full_gradient(p, &ds, &x0, lam, &mut gfull);
+        for j in 0..3 {
+            let expect = x0[j] - eta * gfull[j];
+            assert!((x[j] - expect).abs() < 1e-5, "j={j}");
+        }
+    }
+
+    /// SAGA's incremental gbar must equal the recomputed table average.
+    #[test]
+    fn saga_gbar_stays_consistent_with_table() {
+        let ds = synth::toy_classification(24, 5, 3);
+        let p = Problem::Logistic;
+        let mut eng = NativeEngine::new();
+        let x0 = vec![0.1f32; 5];
+        let n = 24;
+        // init table at x0
+        let mut alpha = vec![0.0f32; n];
+        let mut gbar = vec![0.0f32; 5];
+        for i in 0..n {
+            alpha[i] = gradients::grad_scalar(p, &ds, i, &x0);
+            math::axpy(alpha[i] / n as f32, ds.row(i), &mut gbar);
+        }
+        let mut x = x0.clone();
+        let idx: Vec<u32> = vec![3, 17, 3, 9, 21, 3]; // with duplicates
+        eng.saga_epoch(p, &ds, &idx, &mut x, &mut alpha, &mut gbar, 0.05, 1e-4, 1.0 / n as f32);
+        let mut expect = vec![0.0f32; 5];
+        for i in 0..n {
+            math::axpy(alpha[i] / n as f32, ds.row(i), &mut expect);
+        }
+        assert!(
+            math::max_abs_diff(&gbar, &expect) < 1e-5,
+            "incremental gbar drifted from table average"
+        );
+    }
+
+    /// SVRG with x == xbar takes exact full-gradient steps.
+    #[test]
+    fn svrg_at_anchor_is_full_gradient_step() {
+        let ds = synth::toy_least_squares(20, 4, 5);
+        let p = Problem::Ridge;
+        let mut eng = NativeEngine::new();
+        let xbar = vec![0.2f32; 4];
+        let lam = 1e-3f32;
+        let mut gbar = vec![0.0f32; 4];
+        gradients::full_gradient(p, &ds, &xbar, 0.0, &mut gbar); // data part only
+        let mut x = xbar.clone();
+        let eta = 0.05f32;
+        eng.svrg_inner(p, &ds, &[7], &mut x, &xbar, &gbar, eta, lam);
+        for j in 0..4 {
+            let expect = xbar[j] - eta * (gbar[j] + 2.0 * lam * xbar[j]);
+            assert!((x[j] - expect).abs() < 1e-6, "j={j}");
+        }
+    }
+
+    #[test]
+    fn engine_kind_parse() {
+        assert_eq!(EngineKind::parse("native"), Some(EngineKind::Native));
+        assert_eq!(EngineKind::parse("PJRT"), Some(EngineKind::Hlo));
+        assert_eq!(EngineKind::parse("?"), None);
+    }
+}

@@ -1,0 +1,17 @@
+//! Execution engines.
+//!
+//! * [`engine`] — the [`engine::EpochEngine`] trait: every epoch-granular
+//!   compute primitive an algorithm needs, implemented twice: natively in
+//!   Rust ([`engine::NativeEngine`], the profiled L3 hot path) and via the
+//!   AOT HLO artifacts (`crate::hlo_exec::HloEngine`).
+//! * [`threads`] — real `std::thread` workers + a shared central server
+//!   (validates the concurrent protocol on real parallelism).
+//! * [`simulator`] — discrete-event cluster simulator with virtual time,
+//!   the substitute for the paper's MPI cluster (DESIGN.md §3).
+//! * [`cost_model`] — calibrates the simulator's per-gradient compute cost
+//!   from measurements on this machine.
+
+pub mod cost_model;
+pub mod engine;
+pub mod simulator;
+pub mod threads;

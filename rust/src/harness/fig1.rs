@@ -1,0 +1,191 @@
+//! Figure 1 — single-worker comparison of CentralVR vs SVRG vs SAGA on
+//! four panels: toy logistic, toy ridge, IJCNN1(-like) logistic,
+//! MILLIONSONG(-like) ridge. x-axis: gradient computations; y-axis:
+//! relative gradient norm. The paper's headline: CentralVR needs less
+//! than ~1/3 of the gradient computations of the others.
+//!
+//! As in the paper (§6.1), each algorithm runs at the constant step size
+//! that converges fastest — we sweep a small grid around the preset value
+//! and keep the best run.
+
+use crate::algos::{self, SolverConfig};
+use crate::data::dataset::Dataset;
+use crate::data::synth;
+use crate::harness::report;
+use crate::harness::Scale;
+use crate::metrics::recorder::{RunTrace, Series};
+use crate::model::glm::Problem;
+
+pub struct Panel {
+    pub name: &'static str,
+    pub problem: Problem,
+    pub data: Dataset,
+    pub eta0: f32,
+    pub epochs: usize,
+}
+
+/// The four panels (scaled sizes under `Scale::Quick`).
+pub fn panels(scale: Scale) -> Vec<Panel> {
+    let (toy_n, ij, ms) = match scale {
+        Scale::Full => (5000, 35_000, 46_371),
+        Scale::Quick => (1000, 4000, 5000),
+    };
+    vec![
+        Panel {
+            name: "toy-logistic",
+            problem: Problem::Logistic,
+            data: synth::toy_classification(toy_n, 20, 11),
+            eta0: 0.1,
+            epochs: 50,
+        },
+        Panel {
+            name: "toy-ridge",
+            problem: Problem::Ridge,
+            data: synth::toy_least_squares(toy_n, 20, 12),
+            eta0: 0.004,
+            epochs: 50,
+        },
+        Panel {
+            name: "ijcnn1-logistic",
+            problem: Problem::Logistic,
+            data: {
+                let mut ds = if scale == Scale::Full {
+                    synth::ijcnn1_like(13)
+                } else {
+                    synth::toy_classification(ij, 22, 13)
+                };
+                crate::data::normalize::standardize(&mut ds);
+                ds
+            },
+            eta0: 0.1,
+            epochs: 40,
+        },
+        Panel {
+            name: "millionsong-ridge",
+            problem: Problem::Ridge,
+            data: {
+                let mut ds = synth::millionsong_like_n(ms, 14);
+                crate::data::normalize::standardize(&mut ds);
+                ds
+            },
+            eta0: 0.002,
+            epochs: 40,
+        },
+    ]
+}
+
+/// Best-of-grid run for one algorithm on one panel.
+fn best_run(name: &str, panel: &Panel, tol: f64) -> RunTrace {
+    let mut best: Option<RunTrace> = None;
+    for mult in [0.5f32, 1.0, 2.0] {
+        let cfg = SolverConfig {
+            eta: panel.eta0 * mult,
+            lambda: 1e-4,
+            epochs: panel.epochs,
+            seed: 7,
+        };
+        let mut solver = algos::by_name(name, &panel.data, panel.problem, cfg).unwrap();
+        let trace = solver.run_to(tol);
+        let better = match &best {
+            None => true,
+            Some(b) => {
+                // prefer converged with fewer grads; else lower final rel
+                match (trace.grads_to(tol), b.grads_to(tol)) {
+                    (Some(a), Some(c)) => a < c,
+                    (Some(_), None) => true,
+                    (None, Some(_)) => false,
+                    (None, None) => trace.series.final_rel() < b.series.final_rel(),
+                }
+            }
+        };
+        if better {
+            best = Some(trace);
+        }
+    }
+    best.unwrap()
+}
+
+/// Run the full figure; returns (panel, algorithm, trace) triples.
+pub fn run(scale: Scale, tol: f64) -> Vec<(String, String, RunTrace)> {
+    let mut out = Vec::new();
+    for panel in panels(scale) {
+        for algo in ["centralvr", "svrg", "saga"] {
+            let trace = best_run(algo, &panel, tol);
+            out.push((panel.name.to_string(), algo.to_string(), trace));
+        }
+    }
+    out
+}
+
+/// Print the paper-style comparison and save the curves.
+pub fn report(scale: Scale) -> anyhow::Result<()> {
+    let tol = 1e-5;
+    let results = run(scale, tol);
+    let mut rows = Vec::new();
+    let mut series: Vec<Series> = Vec::new();
+    for (panel, algo, trace) in &results {
+        rows.push(vec![
+            panel.clone(),
+            algo.clone(),
+            report::fmt_opt_u64(trace.grads_to(tol)),
+            report::sci(trace.series.final_rel()),
+            format!("{}", trace.converged),
+        ]);
+        let mut s = trace.series.clone();
+        s.name = format!("{panel}_{algo}");
+        series.push(s);
+    }
+    report::md_table(
+        "Fig 1 — single worker: gradient computations to rel-grad-norm 1e-5",
+        &["panel", "algorithm", "grads to tol", "final rel", "converged"],
+        &rows,
+    );
+    report::save_series("fig1", &series)?;
+    // headline check: CentralVR needs the fewest gradients on each panel
+    for panel in results.iter().map(|(p, _, _)| p.clone()).collect::<std::collections::BTreeSet<_>>() {
+        let get = |algo: &str| {
+            results
+                .iter()
+                .find(|(p, a, _)| *p == panel && a == algo)
+                .and_then(|(_, _, t)| t.grads_to(tol))
+        };
+        let (cvr, svrg, saga) = (get("centralvr"), get("svrg"), get("saga"));
+        println!(
+            "  [{panel}] CentralVR={} SVRG={} SAGA={}  -> CentralVR wins: {}",
+            report::fmt_opt_u64(cvr),
+            report::fmt_opt_u64(svrg),
+            report::fmt_opt_u64(saga),
+            matches!((cvr, svrg), (Some(c), Some(s)) if c <= s)
+                && matches!((cvr, saga), (Some(c), Some(s)) if c <= s)
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_panels_have_paper_dims() {
+        let ps = panels(Scale::Quick);
+        assert_eq!(ps.len(), 4);
+        assert_eq!(ps[0].data.d(), 20);
+        assert_eq!(ps[2].data.d(), 22);
+        assert_eq!(ps[3].data.d(), 90);
+    }
+
+    #[test]
+    fn centralvr_beats_baselines_on_quick_toy() {
+        // Reproduction smoke of the Fig 1 headline on the small toy.
+        let panel = &panels(Scale::Quick)[1]; // toy ridge
+        let tol = 1e-4;
+        let cvr = best_run("centralvr", panel, tol);
+        let svrg = best_run("svrg", panel, tol);
+        let (c, s) = (cvr.grads_to(tol), svrg.grads_to(tol));
+        assert!(c.is_some(), "CentralVR did not converge");
+        if let (Some(c), Some(s)) = (c, s) {
+            assert!(c <= s, "CentralVR={c} SVRG={s}");
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! Experiment harnesses: one module per paper table/figure, each
+//! regenerating the corresponding rows/series (DESIGN.md §5 maps every
+//! experiment id to its module). Output goes to stdout as markdown and to
+//! `results/*.csv` for re-plotting.
+
+pub mod ablations;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod report;
+pub mod table1;
+
+/// Scale knob shared by the harnesses: `full` approaches the paper's sizes
+/// (minutes on this box), `quick` shrinks datasets/worker counts ~4x for
+/// benches and CI (seconds). Both keep the experimental *geometry*
+/// (constant data per worker, same algorithm set, same tolerances).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Quick,
+    Full,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s.to_ascii_lowercase().as_str() {
+            "quick" | "q" => Some(Scale::Quick),
+            "full" | "f" => Some(Scale::Full),
+            _ => None,
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! Markdown/CSV emission helpers shared by the figure harnesses.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::metrics::recorder::Series;
+
+/// Results directory (`results/`, overridable via CENTRALVR_RESULTS).
+pub fn results_dir() -> PathBuf {
+    PathBuf::from(
+        std::env::var("CENTRALVR_RESULTS").unwrap_or_else(|_| "results".to_string()),
+    )
+}
+
+/// Print a markdown table.
+pub fn md_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n### {title}\n");
+    println!("| {} |", header.join(" | "));
+    println!("|{}|", header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+    for row in rows {
+        println!("| {} |", row.join(" | "));
+    }
+}
+
+/// Save a set of convergence series as `<prefix>_<name>.csv`.
+pub fn save_series(prefix: &str, series: &[Series]) -> Result<()> {
+    let dir = results_dir();
+    for s in series {
+        let safe: String = s
+            .name
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect();
+        s.write_csv(dir.join(format!("{prefix}_{safe}.csv")))?;
+    }
+    Ok(())
+}
+
+/// Format an optional time/count as a cell.
+pub fn fmt_opt_f64(v: Option<f64>) -> String {
+    match v {
+        Some(v) => format!("{v:.3}"),
+        None => "—".to_string(),
+    }
+}
+
+pub fn fmt_opt_u64(v: Option<u64>) -> String {
+    match v {
+        Some(v) => format!("{v}"),
+        None => "—".to_string(),
+    }
+}
+
+/// Scientific-ish compact float.
+pub fn sci(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 0.01 && v.abs() < 1000.0 {
+        format!("{v:.3}")
+    } else {
+        format!("{v:.2e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_opt_f64(None), "—");
+        assert_eq!(fmt_opt_f64(Some(1.5)), "1.500");
+        assert_eq!(fmt_opt_u64(Some(7)), "7");
+        assert_eq!(sci(0.0), "0");
+        assert!(sci(1e-7).contains('e'));
+        assert_eq!(sci(12.3456), "12.346");
+    }
+}

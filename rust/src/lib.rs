@@ -1,0 +1,64 @@
+//! # CentralVR — Efficient Distributed SGD with Variance Reduction
+//!
+//! Production-quality reproduction of De & Goldstein, *"Efficient
+//! Distributed SGD with Variance Reduction"* (arXiv 2015/2017), as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the distributed coordinator: central server,
+//!   worker orchestration (real threads and a discrete-event cluster
+//!   simulator), every algorithm from the paper (CentralVR single-worker,
+//!   CentralVR-Sync, CentralVR-Async, Distributed SVRG, Distributed SAGA)
+//!   plus the baselines it compares against (SGD, SVRG, SAGA, EASGD,
+//!   parameter-server SVRG), the data pipeline, metrics, and the figure
+//!   harnesses that regenerate every table and figure in the paper.
+//! * **L2 (python/compile/model.py)** — epoch-level JAX compute graphs,
+//!   AOT-lowered once to HLO text in `artifacts/`.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the hot paths.
+//!
+//! The [`runtime`] module loads the AOT artifacts via PJRT (the `xla`
+//! crate) and [`hlo_exec`] exposes them behind the same [`engine`]
+//! abstraction as the hand-optimized native Rust math in [`model`], so
+//! every experiment can run on either engine and the two are parity-tested
+//! against each other.
+//!
+//! Quickstart (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use centralvr::prelude::*;
+//!
+//! let data = synth::toy_classification(5000, 20, 42);
+//! let cfg = SolverConfig { eta: 0.05, lambda: 1e-4, epochs: 30, seed: 7 };
+//! let mut solver = CentralVr::new(&data, Problem::Logistic, cfg);
+//! let trace = solver.run_to(1e-5);
+//! println!("converged after {} gradient computations", trace.grad_evals);
+//! ```
+
+pub mod util;
+pub mod config;
+pub mod data;
+pub mod model;
+pub mod algos;
+pub mod dist;
+pub mod exec;
+pub mod metrics;
+pub mod runtime;
+pub mod hlo_exec;
+pub mod harness;
+pub mod cli;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::algos::{
+        centralvr::CentralVr, saga::Saga, sgd::Sgd, svrg::Svrg, SolverConfig,
+        SequentialSolver,
+    };
+    pub use crate::config::schema::{
+        Algorithm, DatasetSpec, ExperimentConfig, NetworkModel,
+    };
+    pub use crate::data::{dataset::Dataset, shard::ShardedDataset, synth};
+    pub use crate::dist::DistConfig;
+    pub use crate::exec::simulator::SimParams;
+    pub use crate::metrics::recorder::{RunTrace, Series};
+    pub use crate::model::glm::Problem;
+    pub use crate::util::rng::Pcg64;
+}

@@ -1,0 +1,5 @@
+//! CLI entrypoint; see `centralvr::cli`.
+fn main() {
+    let code = centralvr::cli::run(std::env::args().skip(1).collect());
+    std::process::exit(code);
+}

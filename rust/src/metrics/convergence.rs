@@ -1,0 +1,92 @@
+//! Convergence criterion used throughout the paper's evaluation: the
+//! *relative gradient norm* `||grad f(x^k)|| / ||grad f(x^0)||`, with the
+//! headline target of 1e-5 ("five digits of precision").
+
+/// Tracks the initial gradient norm and decides convergence/divergence.
+#[derive(Clone, Debug)]
+pub struct ConvergenceCheck {
+    initial: Option<f64>,
+    target_rel: f64,
+    best_rel: f64,
+    diverged_at: f64,
+}
+
+impl ConvergenceCheck {
+    /// `target_rel`: stop when ||g||/||g0|| <= this (paper: 1e-5).
+    pub fn new(target_rel: f64) -> Self {
+        ConvergenceCheck {
+            initial: None,
+            target_rel,
+            best_rel: f64::INFINITY,
+            diverged_at: 1e6,
+        }
+    }
+
+    /// Feed a gradient norm; returns the relative norm.
+    pub fn observe(&mut self, grad_norm: f64) -> f64 {
+        let g0 = *self.initial.get_or_insert(grad_norm.max(1e-300));
+        let rel = grad_norm / g0;
+        self.best_rel = self.best_rel.min(rel);
+        rel
+    }
+
+    pub fn initial(&self) -> Option<f64> {
+        self.initial
+    }
+
+    pub fn best_rel(&self) -> f64 {
+        self.best_rel
+    }
+
+    pub fn converged(&self, grad_norm: f64) -> bool {
+        match self.initial {
+            Some(g0) => grad_norm / g0 <= self.target_rel,
+            None => false,
+        }
+    }
+
+    /// Heuristic divergence alarm: rel-norm exploding past 1e6 or NaN.
+    pub fn diverged(&self, grad_norm: f64) -> bool {
+        !grad_norm.is_finite()
+            || self
+                .initial
+                .map(|g0| grad_norm / g0 > self.diverged_at)
+                .unwrap_or(false)
+    }
+
+    pub fn target(&self) -> f64 {
+        self.target_rel
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_observation_sets_baseline() {
+        let mut c = ConvergenceCheck::new(1e-3);
+        assert_eq!(c.observe(10.0), 1.0);
+        assert_eq!(c.observe(5.0), 0.5);
+        assert!(!c.converged(5.0));
+        assert!(c.converged(0.009));
+    }
+
+    #[test]
+    fn divergence_detection() {
+        let mut c = ConvergenceCheck::new(1e-3);
+        c.observe(1.0);
+        assert!(!c.diverged(100.0));
+        assert!(c.diverged(1e7));
+        assert!(c.diverged(f64::NAN));
+    }
+
+    #[test]
+    fn best_rel_tracks_minimum() {
+        let mut c = ConvergenceCheck::new(1e-9);
+        c.observe(4.0);
+        c.observe(1.0);
+        c.observe(2.0);
+        assert_eq!(c.best_rel(), 0.25);
+    }
+}

@@ -1,0 +1,127 @@
+//! Cost counters behind Table 1: gradient evaluations, stored scalars,
+//! bytes exchanged with the central server, and server interactions. Every
+//! algorithm increments these through a shared handle so the table is
+//! *measured*, not transcribed.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Thread-safe cost counters (shared across workers).
+#[derive(Debug, Default)]
+pub struct Counters {
+    /// Per-sample gradient evaluations (dloss computations).
+    pub grad_evals: AtomicU64,
+    /// Parameter-vector updates (x assignments).
+    pub iterations: AtomicU64,
+    /// f32 scalars persisted in gradient tables (storage requirement).
+    pub stored_scalars: AtomicU64,
+    /// Bytes sent worker->server plus server->worker.
+    pub bytes_communicated: AtomicU64,
+    /// Round-trips with the central server.
+    pub server_rounds: AtomicU64,
+}
+
+impl Counters {
+    pub fn new() -> Arc<Counters> {
+        Arc::new(Counters::default())
+    }
+
+    #[inline]
+    pub fn add_grad_evals(&self, n: u64) {
+        self.grad_evals.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_iterations(&self, n: u64) {
+        self.iterations.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn set_stored_scalars(&self, n: u64) {
+        self.stored_scalars.store(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_bytes(&self, n: u64) {
+        self.bytes_communicated.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_server_round(&self) {
+        self.server_rounds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> CounterSnapshot {
+        CounterSnapshot {
+            grad_evals: self.grad_evals.load(Ordering::Relaxed),
+            iterations: self.iterations.load(Ordering::Relaxed),
+            stored_scalars: self.stored_scalars.load(Ordering::Relaxed),
+            bytes_communicated: self.bytes_communicated.load(Ordering::Relaxed),
+            server_rounds: self.server_rounds.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Immutable snapshot of [`Counters`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub grad_evals: u64,
+    pub iterations: u64,
+    pub stored_scalars: u64,
+    pub bytes_communicated: u64,
+    pub server_rounds: u64,
+}
+
+impl CounterSnapshot {
+    /// Gradients per iteration — the Table 1 column.
+    pub fn grads_per_iteration(&self) -> f64 {
+        if self.iterations == 0 {
+            0.0
+        } else {
+            self.grad_evals as f64 / self.iterations as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulation_and_snapshot() {
+        let c = Counters::new();
+        c.add_grad_evals(10);
+        c.add_iterations(5);
+        c.add_bytes(128);
+        c.add_server_round();
+        c.set_stored_scalars(1000);
+        let s = c.snapshot();
+        assert_eq!(s.grad_evals, 10);
+        assert_eq!(s.grads_per_iteration(), 2.0);
+        assert_eq!(s.bytes_communicated, 128);
+        assert_eq!(s.server_rounds, 1);
+        assert_eq!(s.stored_scalars, 1000);
+    }
+
+    #[test]
+    fn zero_iterations_guard() {
+        assert_eq!(CounterSnapshot::default().grads_per_iteration(), 0.0);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let c = Counters::new();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let c2 = Arc::clone(&c);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    c2.add_grad_evals(1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.snapshot().grad_evals, 4000);
+    }
+}

@@ -1,0 +1,7 @@
+//! Run instrumentation: convergence detection (the paper's relative
+//! gradient-norm criterion), time-series recording for the figure
+//! harnesses, and cost counters backing Table 1.
+
+pub mod convergence;
+pub mod counters;
+pub mod recorder;

@@ -1,0 +1,147 @@
+//! Time-series recording of a run: (virtual or wall) time, gradient
+//! evaluations, relative gradient norm, objective value. The figure
+//! harnesses turn these into the paper's curves.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::csvio::CsvWriter;
+
+/// One measurement point along a run.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    /// Seconds (wall-clock for thread runs, virtual for simulator runs).
+    pub time_s: f64,
+    /// Cumulative per-sample gradient evaluations (global).
+    pub grad_evals: u64,
+    /// Relative gradient norm ||g||/||g0||.
+    pub rel_grad_norm: f64,
+    /// Objective value f(x).
+    pub objective: f64,
+}
+
+/// A named convergence curve.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<Sample>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Series {
+        Series {
+            name: name.into(),
+            points: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, s: Sample) {
+        self.points.push(s);
+    }
+
+    /// First time at which the relative gradient norm reached `tol`
+    /// (None = never within the recorded horizon).
+    pub fn time_to_tolerance(&self, tol: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|s| s.rel_grad_norm <= tol)
+            .map(|s| s.time_s)
+    }
+
+    /// First gradient-evaluation count at which `tol` was reached.
+    pub fn grads_to_tolerance(&self, tol: f64) -> Option<u64> {
+        self.points
+            .iter()
+            .find(|s| s.rel_grad_norm <= tol)
+            .map(|s| s.grad_evals)
+    }
+
+    pub fn final_rel(&self) -> f64 {
+        self.points.last().map(|s| s.rel_grad_norm).unwrap_or(1.0)
+    }
+
+    pub fn best_rel(&self) -> f64 {
+        self.points
+            .iter()
+            .map(|s| s.rel_grad_norm)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Write the series as CSV (time,grad_evals,rel_grad_norm,objective).
+    pub fn write_csv<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &["time_s", "grad_evals", "rel_grad_norm", "objective"],
+        )?;
+        for s in &self.points {
+            w.row(&[s.time_s, s.grad_evals as f64, s.rel_grad_norm, s.objective])?;
+        }
+        w.finish()
+    }
+}
+
+/// Complete result of a run: the curve plus summary statistics.
+#[derive(Clone, Debug)]
+pub struct RunTrace {
+    pub series: Series,
+    /// Total per-sample gradient evaluations.
+    pub grad_evals: u64,
+    /// Total parameter updates.
+    pub iterations: u64,
+    /// Wall/virtual seconds for the whole run.
+    pub elapsed_s: f64,
+    /// Did the run hit the requested tolerance?
+    pub converged: bool,
+    /// Final iterate.
+    pub x: Vec<f32>,
+}
+
+impl RunTrace {
+    pub fn time_to(&self, tol: f64) -> Option<f64> {
+        self.series.time_to_tolerance(tol)
+    }
+
+    pub fn grads_to(&self, tol: f64) -> Option<u64> {
+        self.series.grads_to_tolerance(tol)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(rel: &[f64]) -> Series {
+        let mut s = Series::new("t");
+        for (i, &r) in rel.iter().enumerate() {
+            s.push(Sample {
+                time_s: i as f64,
+                grad_evals: (i * 100) as u64,
+                rel_grad_norm: r,
+                objective: r,
+            });
+        }
+        s
+    }
+
+    #[test]
+    fn tolerance_queries() {
+        let s = mk(&[1.0, 0.1, 0.01, 0.001]);
+        assert_eq!(s.time_to_tolerance(0.05), Some(2.0));
+        assert_eq!(s.grads_to_tolerance(0.05), Some(200));
+        assert_eq!(s.time_to_tolerance(1e-9), None);
+        assert_eq!(s.final_rel(), 0.001);
+        assert_eq!(s.best_rel(), 0.001);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let s = mk(&[1.0, 0.5]);
+        let path = std::env::temp_dir().join("centralvr_series_test.csv");
+        s.write_csv(&path).unwrap();
+        let (h, rows) = crate::util::csvio::read_numeric(&path).unwrap();
+        assert_eq!(h[2], "rel_grad_norm");
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1][2], 0.5);
+    }
+}

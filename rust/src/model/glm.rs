@@ -1,0 +1,146 @@
+//! The two regularized GLM objectives from the paper (§6):
+//!
+//! * logistic:  `f_i(x) = log(1 + exp(-b_i a_i^T x)) + lam ||x||^2`
+//! * ridge:     `f_i(x) = (a_i^T x - b_i)^2 + lam ||x||^2`
+//!
+//! Everything an algorithm needs is the scalar pair (`loss`, `dloss`) at a
+//! margin `z = a_i^T x`; the gradient is `dloss(z, b) * a_i + 2 lam x`.
+//! Storing only `dloss` scalars per sample is what gives CentralVR/SAGA
+//! their O(n)-scalars gradient table (paper §2.3, DESIGN.md §2).
+
+/// Which GLM objective is being minimized.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Problem {
+    Logistic,
+    Ridge,
+}
+
+impl Problem {
+    /// Per-sample loss at margin `z` with label `b`.
+    #[inline]
+    pub fn loss(self, z: f32, b: f32) -> f32 {
+        match self {
+            // log(1+exp(-bz)) computed stably
+            Problem::Logistic => {
+                let m = -b * z;
+                if m > 0.0 {
+                    m + (1.0 + (-m).exp()).ln()
+                } else {
+                    (1.0 + m.exp()).ln_1p_stable()
+                }
+            }
+            Problem::Ridge => {
+                let r = z - b;
+                r * r
+            }
+        }
+    }
+
+    /// d loss / d z. This is the scalar stored in the gradient table.
+    #[inline]
+    pub fn dloss(self, z: f32, b: f32) -> f32 {
+        match self {
+            // -b * sigmoid(-b z), computed without overflow
+            Problem::Logistic => {
+                let m = b * z;
+                // sigmoid(-m) = 1/(1+exp(m))
+                let s = if m >= 0.0 {
+                    let e = (-m).exp();
+                    e / (1.0 + e)
+                } else {
+                    1.0 / (1.0 + m.exp())
+                };
+                -b * s
+            }
+            Problem::Ridge => 2.0 * (z - b),
+        }
+    }
+
+    /// Parse from CLI/config strings.
+    pub fn parse(s: &str) -> Option<Problem> {
+        match s.to_ascii_lowercase().as_str() {
+            "logistic" | "logreg" | "classification" => Some(Problem::Logistic),
+            "ridge" | "least-squares" | "ls" | "regression" => Some(Problem::Ridge),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Problem::Logistic => "logistic",
+            Problem::Ridge => "ridge",
+        }
+    }
+}
+
+/// `ln(x)` helper trait so the stable branch above reads cleanly.
+trait Ln1pStable {
+    fn ln_1p_stable(self) -> f32;
+}
+
+impl Ln1pStable for f32 {
+    #[inline]
+    fn ln_1p_stable(self) -> f32 {
+        // here `self` is already 1 + exp(m) with m <= 0; plain ln is fine,
+        // the name just documents the call site.
+        self.ln()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finite_diff_dloss(p: Problem, z: f32, b: f32) -> f32 {
+        let h = 1e-3f32;
+        (p.loss(z + h, b) - p.loss(z - h, b)) / (2.0 * h)
+    }
+
+    #[test]
+    fn dloss_matches_finite_differences() {
+        for p in [Problem::Logistic, Problem::Ridge] {
+            for &z in &[-3.0f32, -0.5, 0.0, 0.7, 2.5] {
+                for &b in &[-1.0f32, 1.0, 2.0] {
+                    let fd = finite_diff_dloss(p, z, b);
+                    let an = p.dloss(z, b);
+                    assert!(
+                        (fd - an).abs() < 2e-2 * (1.0 + an.abs()),
+                        "{p:?} z={z} b={b}: fd={fd} an={an}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn logistic_is_stable_at_extreme_margins() {
+        let p = Problem::Logistic;
+        for &z in &[-1e4f32, -100.0, 100.0, 1e4] {
+            for &b in &[-1.0f32, 1.0] {
+                assert!(p.loss(z, b).is_finite(), "loss z={z} b={b}");
+                assert!(p.dloss(z, b).is_finite(), "dloss z={z} b={b}");
+            }
+        }
+        // correct asymptotics: confident correct prediction => ~0 loss
+        assert!(p.loss(100.0, 1.0) < 1e-6);
+        assert!(p.dloss(100.0, 1.0).abs() < 1e-6);
+        // confident wrong prediction => |dloss| -> 1
+        assert!((p.dloss(-100.0, 1.0) + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ridge_basics() {
+        let p = Problem::Ridge;
+        assert_eq!(p.loss(3.0, 1.0), 4.0);
+        assert_eq!(p.dloss(3.0, 1.0), 4.0);
+        assert_eq!(p.dloss(1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Problem::parse("Logistic"), Some(Problem::Logistic));
+        assert_eq!(Problem::parse("ls"), Some(Problem::Ridge));
+        assert_eq!(Problem::parse("x"), None);
+        assert_eq!(Problem::Logistic.name(), "logistic");
+    }
+}

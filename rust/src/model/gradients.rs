@@ -1,0 +1,156 @@
+//! Gradient operators over datasets/shards: single-sample scalars, full
+//! gradients, objective values, and the partial sums a central node
+//! combines across shards — the native twins of `model.py`'s
+//! `full_gradient` / `metrics_partial`.
+
+use crate::data::dataset::Dataset;
+use crate::model::glm::Problem;
+use crate::util::math;
+
+/// Margin `z_i = a_i^T x` for one sample.
+#[inline]
+pub fn margin(ds: &Dataset, i: usize, x: &[f32]) -> f32 {
+    math::dot(ds.row(i), x)
+}
+
+/// Table scalar `c_i = dloss(a_i^T x, b_i)` for one sample.
+#[inline]
+pub fn grad_scalar(p: Problem, ds: &Dataset, i: usize, x: &[f32]) -> f32 {
+    p.dloss(margin(ds, i, x), ds.label(i))
+}
+
+/// Full data-part gradient of one shard: `sum_i dloss_i * a_i` (UNnormalized
+/// sum; callers divide by the global n and add `2 lam x`).
+pub fn grad_sum(p: Problem, ds: &Dataset, x: &[f32], out: &mut [f32]) {
+    math::zero(out);
+    for i in 0..ds.n() {
+        let c = grad_scalar(p, ds, i, x);
+        math::axpy(c, ds.row(i), out);
+    }
+}
+
+/// Full gradient of the regularized objective over a single dataset:
+/// `(1/n) sum_i dloss_i a_i + 2 lam x`.
+pub fn full_gradient(p: Problem, ds: &Dataset, x: &[f32], lam: f32, out: &mut [f32]) {
+    grad_sum(p, ds, x, out);
+    let inv_n = 1.0 / ds.n() as f32;
+    math::scal(inv_n, out);
+    math::axpy(2.0 * lam, x, out);
+}
+
+/// Partial sums for distributed metrics: `(sum_i loss_i, sum_i dloss_i a_i)`.
+pub fn metrics_partial(p: Problem, ds: &Dataset, x: &[f32], gsum: &mut [f32]) -> f64 {
+    math::zero(gsum);
+    let mut loss_sum = 0.0f64;
+    for i in 0..ds.n() {
+        let z = margin(ds, i, x);
+        let b = ds.label(i);
+        loss_sum += p.loss(z, b) as f64;
+        math::axpy(p.dloss(z, b), ds.row(i), gsum);
+    }
+    loss_sum
+}
+
+/// Objective value `f(x) = (1/n) sum loss_i + lam ||x||^2` over shards.
+pub fn objective(p: Problem, shards: &[&Dataset], x: &[f32], lam: f32) -> f64 {
+    let mut loss = 0.0f64;
+    let mut n = 0usize;
+    for ds in shards {
+        for i in 0..ds.n() {
+            loss += p.loss(margin(ds, i, x), ds.label(i)) as f64;
+        }
+        n += ds.n();
+    }
+    loss / n as f64 + lam as f64 * math::norm2_sq(x)
+}
+
+/// Global gradient norm across shards (the paper's y-axis is
+/// `||grad f(x)|| / ||grad f(x_0)||`).
+pub fn global_grad_norm(p: Problem, shards: &[&Dataset], x: &[f32], lam: f32) -> f64 {
+    let d = x.len();
+    let mut gsum = vec![0.0f32; d];
+    let mut acc = vec![0.0f64; d];
+    let mut n = 0usize;
+    for ds in shards {
+        grad_sum(p, ds, x, &mut gsum);
+        for (a, &g) in acc.iter_mut().zip(&gsum) {
+            *a += g as f64;
+        }
+        n += ds.n();
+    }
+    let inv_n = 1.0 / n as f64;
+    let mut sq = 0.0f64;
+    for (j, a) in acc.iter().enumerate() {
+        let g = a * inv_n + 2.0 * lam as f64 * x[j] as f64;
+        sq += g * g;
+    }
+    sq.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    /// Finite-difference check of the full gradient.
+    #[test]
+    fn full_gradient_matches_finite_differences() {
+        for p in [Problem::Logistic, Problem::Ridge] {
+            let ds = synth::toy_classification(60, 6, 3);
+            let x: Vec<f32> = (0..6).map(|i| 0.1 * i as f32 - 0.2).collect();
+            let lam = 1e-2f32;
+            let mut g = vec![0.0f32; 6];
+            full_gradient(p, &ds, &x, lam, &mut g);
+            for j in 0..6 {
+                let h = 1e-2f32;
+                let mut xp = x.clone();
+                xp[j] += h;
+                let mut xm = x.clone();
+                xm[j] -= h;
+                let fd = (objective(p, &[&ds], &xp, lam)
+                    - objective(p, &[&ds], &xm, lam))
+                    / (2.0 * h as f64);
+                assert!(
+                    (fd - g[j] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "{p:?} j={j}: fd={fd} g={}",
+                    g[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_metrics_equal_monolithic() {
+        let ds = synth::toy_least_squares(90, 5, 8);
+        let x = vec![0.3f32; 5];
+        let lam = 1e-3;
+        let whole = global_grad_norm(Problem::Ridge, &[&ds], &x, lam);
+        let sh = crate::data::shard::ShardedDataset::split(&ds, 4, 1);
+        let parts: Vec<&Dataset> = sh.shards().iter().collect();
+        let split = global_grad_norm(Problem::Ridge, &parts, &x, lam);
+        assert!(
+            (whole - split).abs() < 1e-5 * (1.0 + whole),
+            "whole={whole} split={split}"
+        );
+        let o1 = objective(Problem::Ridge, &[&ds], &x, lam);
+        let o2 = objective(Problem::Ridge, &parts, &x, lam);
+        assert!((o1 - o2).abs() < 1e-9 * (1.0 + o1.abs()));
+    }
+
+    #[test]
+    fn metrics_partial_consistency() {
+        let ds = synth::toy_classification(40, 4, 2);
+        let x = vec![0.1f32; 4];
+        let mut gsum = vec![0.0f32; 4];
+        let loss_sum = metrics_partial(Problem::Logistic, &ds, &x, &mut gsum);
+        // objective = loss_sum/n + lam||x||^2
+        let obj = objective(Problem::Logistic, &[&ds], &x, 0.0);
+        assert!((loss_sum / 40.0 - obj).abs() < 1e-6);
+        // gradient = gsum/n at lam=0
+        let mut g = vec![0.0f32; 4];
+        full_gradient(Problem::Logistic, &ds, &x, 0.0, &mut g);
+        for j in 0..4 {
+            assert!((gsum[j] / 40.0 - g[j]).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! GLM problem definitions and gradient operators — the native (L3) twin of
+//! `python/compile/kernels/ref.py`. The parity tests in
+//! `rust/tests/integration_hlo.rs` pin these two implementations together.
+
+pub mod glm;
+pub mod gradients;
+
+pub use glm::Problem;

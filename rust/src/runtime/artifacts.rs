@@ -1,0 +1,166 @@
+//! Artifact manifest: what `python/compile/aot.py` built, with parameter
+//! signatures so calls are validated before they reach PJRT.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One AOT-compiled function specialization.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    /// Full artifact name, e.g. `centralvr_epoch_logistic_n256_d16`.
+    pub name: String,
+    /// Logical function (`centralvr_epoch`, `full_gradient`, ...).
+    pub fn_name: String,
+    /// `logistic` or `ridge`.
+    pub problem: String,
+    pub n: usize,
+    pub d: usize,
+    /// HLO text file, relative to the artifact dir.
+    pub file: String,
+    /// Parameter shapes+dtypes in call order (dtype: `f32`/`i32`).
+    pub params: Vec<(Vec<usize>, String)>,
+    /// Number of tuple outputs.
+    pub outputs: usize,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts` first)", path.display()))?;
+        let json = Json::parse(&text).context("parse manifest.json")?;
+        if json.get("interchange").and_then(Json::as_str) != Some("hlo-text") {
+            bail!("manifest interchange is not hlo-text");
+        }
+        let mut entries = Vec::new();
+        for a in json
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest: artifacts[]")?
+        {
+            let get_str = |k: &str| -> Result<String> {
+                Ok(a.get(k)
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("artifact field {k}"))?
+                    .to_string())
+            };
+            let get_num = |k: &str| -> Result<usize> {
+                a.get(k)
+                    .and_then(Json::as_usize)
+                    .with_context(|| format!("artifact field {k}"))
+            };
+            let mut params = Vec::new();
+            for p in a
+                .get("params")
+                .and_then(Json::as_arr)
+                .context("artifact params")?
+            {
+                let shape: Vec<usize> = p
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .context("param shape")?
+                    .iter()
+                    .map(|v| v.as_usize().context("shape dim"))
+                    .collect::<Result<_>>()?;
+                let dtype = p
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .context("param dtype")?
+                    .to_string();
+                params.push((shape, dtype));
+            }
+            entries.push(ArtifactEntry {
+                name: get_str("name")?,
+                fn_name: get_str("fn")?,
+                problem: get_str("problem")?,
+                n: get_num("n")?,
+                d: get_num("d")?,
+                file: get_str("file")?,
+                params,
+                outputs: get_num("outputs")?,
+            });
+        }
+        Ok(Manifest { dir, entries })
+    }
+
+    /// Find a specialization by (logical fn, problem, shard shape).
+    pub fn find(&self, fn_name: &str, problem: &str, n: usize, d: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.fn_name == fn_name && e.problem == problem && e.n == n && e.d == d)
+    }
+
+    /// All (n, d) specializations available for a fn/problem.
+    pub fn shapes(&self, fn_name: &str, problem: &str) -> Vec<(usize, usize)> {
+        self.entries
+            .iter()
+            .filter(|e| e.fn_name == fn_name && e.problem == problem)
+            .map(|e| (e.n, e.d))
+            .collect()
+    }
+
+    pub fn path_of(&self, e: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    #[test]
+    fn loads_and_finds() {
+        let dir = std::env::temp_dir().join("centralvr_manifest_test");
+        write_manifest(
+            &dir,
+            r#"{"format": 1, "interchange": "hlo-text", "artifacts": [
+                {"name": "full_gradient_ridge_n64_d8", "fn": "full_gradient",
+                 "problem": "ridge", "n": 64, "d": 8,
+                 "file": "full_gradient_ridge_n64_d8.hlo.txt",
+                 "params": [{"shape": [64, 8], "dtype": "f32"},
+                            {"shape": [64], "dtype": "f32"},
+                            {"shape": [8], "dtype": "f32"},
+                            {"shape": [], "dtype": "f32"}],
+                 "outputs": 1}]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.find("full_gradient", "ridge", 64, 8).unwrap();
+        assert_eq!(e.params.len(), 4);
+        assert_eq!(e.params[0].0, vec![64, 8]);
+        assert_eq!(e.params[3].0, Vec::<usize>::new());
+        assert!(m.find("full_gradient", "ridge", 65, 8).is_none());
+        assert_eq!(m.shapes("full_gradient", "ridge"), vec![(64, 8)]);
+    }
+
+    #[test]
+    fn rejects_wrong_interchange() {
+        let dir = std::env::temp_dir().join("centralvr_manifest_test2");
+        write_manifest(&dir, r#"{"interchange": "proto", "artifacts": []}"#);
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_helpful_error() {
+        let err = Manifest::load("/nonexistent/dir").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

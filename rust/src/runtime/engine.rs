@@ -1,0 +1,119 @@
+//! The PJRT execution engine: compile cache over the artifact manifest.
+//!
+//! One [`PjrtEngine`] owns a CPU PJRT client and lazily compiles each HLO
+//! artifact the first time it is invoked (compilation is the expensive
+//! step; execution afterwards is a cheap dispatch). All artifacts are
+//! lowered by jax with `return_tuple=True`, so every execution returns a
+//! tuple literal which we decompose for callers.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::artifacts::{ArtifactEntry, Manifest};
+
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executions performed (profiling / tests).
+    pub executions: u64,
+    /// Artifact compilations performed (cache effectiveness).
+    pub compilations: u64,
+}
+
+impl PjrtEngine {
+    /// Create against an artifact directory containing `manifest.json`.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<PjrtEngine> {
+        let manifest = Manifest::load(&artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(PjrtEngine {
+            client,
+            manifest,
+            cache: HashMap::new(),
+            executions: 0,
+            compilations: 0,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Find the artifact entry for (fn, problem, n, d) or a helpful error.
+    pub fn entry(&self, fn_name: &str, problem: &str, n: usize, d: usize) -> Result<ArtifactEntry> {
+        match self.manifest.find(fn_name, problem, n, d) {
+            Some(e) => Ok(e.clone()),
+            None => {
+                let shapes = self.manifest.shapes(fn_name, problem);
+                bail!(
+                    "no artifact for {fn_name}/{problem} at n={n} d={d}; \
+                     available shapes: {shapes:?} (re-run `make artifacts ARTIFACT_SHAPES={n}x{d}`)"
+                )
+            }
+        }
+    }
+
+    fn compile_if_needed(&mut self, e: &ArtifactEntry) -> Result<()> {
+        if self.cache.contains_key(&e.name) {
+            return Ok(());
+        }
+        let path = self.manifest.path_of(e);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile {}", e.name))?;
+        self.compilations += 1;
+        self.cache.insert(e.name.clone(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with positional literal inputs; returns the
+    /// decomposed output tuple.
+    pub fn execute(&mut self, e: &ArtifactEntry, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            inputs.len() == e.params.len(),
+            "{}: expected {} inputs, got {}",
+            e.name,
+            e.params.len(),
+            inputs.len()
+        );
+        self.compile_if_needed(e)?;
+        let exe = self.cache.get(&e.name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("execute {}", e.name))?;
+        self.executions += 1;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        let outs = tuple.to_tuple().context("decompose output tuple")?;
+        anyhow::ensure!(
+            outs.len() == e.outputs,
+            "{}: manifest says {} outputs, got {}",
+            e.name,
+            e.outputs,
+            outs.len()
+        );
+        Ok(outs)
+    }
+
+    /// Convenience: look up and execute in one call.
+    pub fn call(
+        &mut self,
+        fn_name: &str,
+        problem: &str,
+        n: usize,
+        d: usize,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let e = self.entry(fn_name, problem, n, d)?;
+        self.execute(&e, inputs)
+    }
+}

@@ -1,0 +1,62 @@
+//! Conversions between Rust slices and XLA literals.
+
+use anyhow::{Context, Result};
+
+/// f32 slice -> rank-1 literal.
+pub fn f32_vec(xs: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(xs)
+}
+
+/// f32 slice -> rank-2 literal (row-major `n x d`).
+pub fn f32_mat(xs: &[f32], n: usize, d: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(xs.len() == n * d, "buffer {} != {}x{}", xs.len(), n, d);
+    xla::Literal::vec1(xs)
+        .reshape(&[n as i64, d as i64])
+        .context("reshape to matrix")
+}
+
+/// u32 indices -> rank-1 i32 literal (jax lowers index args as i32).
+pub fn i32_vec(xs: &[u32]) -> xla::Literal {
+    let v: Vec<i32> = xs.iter().map(|&x| x as i32).collect();
+    xla::Literal::vec1(&v)
+}
+
+/// Rank-0 f32 scalar literal.
+pub fn f32_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Literal -> Vec<f32>.
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("literal to f32 vec")
+}
+
+/// Rank-0 f32 literal -> scalar.
+pub fn to_f32_scalar(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().context("literal scalar")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_vec_and_scalar() {
+        let lit = f32_vec(&[1.0, 2.5, -3.0]);
+        assert_eq!(to_f32_vec(&lit).unwrap(), vec![1.0, 2.5, -3.0]);
+        let s = f32_scalar(7.25);
+        assert_eq!(to_f32_scalar(&s).unwrap(), 7.25);
+    }
+
+    #[test]
+    fn matrix_shape_checked() {
+        assert!(f32_mat(&[1.0; 6], 2, 3).is_ok());
+        assert!(f32_mat(&[1.0; 5], 2, 3).is_err());
+    }
+
+    #[test]
+    fn i32_conversion() {
+        let lit = i32_vec(&[0, 5, 9]);
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![0, 5, 9]);
+    }
+}

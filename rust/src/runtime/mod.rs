@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the HLO-text artifacts that `python/compile/aot.py`
+//! produced and executes them on the CPU PJRT client via the `xla` crate.
+//!
+//! Interchange is HLO TEXT — jax >= 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md §1).
+
+pub mod artifacts;
+pub mod engine;
+pub mod literal;
+
+pub use artifacts::{ArtifactEntry, Manifest};
+pub use engine::PjrtEngine;

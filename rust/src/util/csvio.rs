@@ -1,0 +1,144 @@
+//! Tiny CSV writer/reader for experiment outputs.
+//!
+//! The figure harnesses emit every series as CSV under `results/` so the
+//! curves can be re-plotted outside this repo; the reader exists so tests
+//! can round-trip what the harness wrote.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Streaming CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let f = File::create(&path)
+            .with_context(|| format!("create {}", path.as_ref().display()))?;
+        let mut out = BufWriter::new(f);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter {
+            out,
+            cols: header.len(),
+        })
+    }
+
+    pub fn row(&mut self, values: &[f64]) -> Result<()> {
+        anyhow::ensure!(
+            values.len() == self.cols,
+            "row has {} values, header has {}",
+            values.len(),
+            self.cols
+        );
+        let mut first = true;
+        for v in values {
+            if !first {
+                write!(self.out, ",")?;
+            }
+            write!(self.out, "{v}")?;
+            first = false;
+        }
+        writeln!(self.out)?;
+        Ok(())
+    }
+
+    pub fn row_mixed(&mut self, values: &[CsvValue]) -> Result<()> {
+        anyhow::ensure!(values.len() == self.cols, "column count mismatch");
+        let strs: Vec<String> = values.iter().map(|v| v.render()).collect();
+        writeln!(self.out, "{}", strs.join(","))?;
+        Ok(())
+    }
+
+    pub fn finish(mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// A CSV cell: string or number.
+pub enum CsvValue {
+    Num(f64),
+    Int(i64),
+    Str(String),
+}
+
+impl CsvValue {
+    fn render(&self) -> String {
+        match self {
+            CsvValue::Num(v) => format!("{v}"),
+            CsvValue::Int(v) => format!("{v}"),
+            CsvValue::Str(s) => {
+                if s.contains(',') || s.contains('"') {
+                    format!("\"{}\"", s.replace('"', "\"\""))
+                } else {
+                    s.clone()
+                }
+            }
+        }
+    }
+}
+
+/// Read a numeric CSV produced by [`CsvWriter`]: returns (header, rows).
+pub fn read_numeric<P: AsRef<Path>>(path: P) -> Result<(Vec<String>, Vec<Vec<f64>>)> {
+    let f = File::open(&path)
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let mut lines = BufReader::new(f).lines();
+    let header = lines
+        .next()
+        .context("empty csv")??
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    let mut rows = Vec::new();
+    for line in lines {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        rows.push(
+            line.split(',')
+                .map(|v| v.trim().parse::<f64>().map_err(Into::into))
+                .collect::<Result<Vec<f64>>>()?,
+        );
+    }
+    Ok((header, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("centralvr_csv_test");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&[1.0, 2.5]).unwrap();
+        w.row(&[-3.0, 4.0]).unwrap();
+        w.finish().unwrap();
+        let (h, rows) = read_numeric(&path).unwrap();
+        assert_eq!(h, vec!["a", "b"]);
+        assert_eq!(rows, vec![vec![1.0, 2.5], vec![-3.0, 4.0]]);
+    }
+
+    #[test]
+    fn rejects_wrong_arity() {
+        let dir = std::env::temp_dir().join("centralvr_csv_test2");
+        let mut w = CsvWriter::create(dir.join("t.csv"), &["a"]).unwrap();
+        assert!(w.row(&[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn quotes_strings_with_commas() {
+        assert_eq!(CsvValue::Str("a,b".into()).render(), "\"a,b\"");
+        assert_eq!(CsvValue::Str("plain".into()).render(), "plain");
+    }
+}

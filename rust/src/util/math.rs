@@ -1,0 +1,263 @@
+//! Hot-path vector math for the native (L3) engine.
+//!
+//! The per-sample VR update is `dot` + a fused 3-term `axpy` chain over
+//! `d`-length `f32` slices; these kernels are the innermost loops of every
+//! experiment, so they are written allocation-free with 8-wide manual
+//! unrolling over `chunks_exact` (bounds-check free, auto-vectorizable).
+//! Accumulation is in `f32` to match the AOT'd JAX graphs bit-for-bit-ish
+//! (parity tests in `rust/tests/integration_hlo.rs` rely on this).
+
+/// Dot product with 8-wide unrolled accumulation.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let ca = a.chunks_exact(8);
+    let cb = b.chunks_exact(8);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        for k in 0..8 {
+            acc[k] = xa[k].mul_add(xb[k], acc[k]);
+        }
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3])
+        + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for (xa, xb) in ra.iter().zip(rb) {
+        s = xa.mul_add(*xb, s);
+    }
+    s
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let cx = x.chunks_exact(8);
+    let rx = cx.remainder();
+    let cy = y.chunks_exact_mut(8);
+    for (ya, xa) in cy.zip(cx) {
+        for k in 0..8 {
+            ya[k] = xa[k].mul_add(alpha, ya[k]);
+        }
+    }
+    let n = x.len() - rx.len();
+    for (ya, xa) in y[n..].iter_mut().zip(rx) {
+        *ya = xa.mul_add(alpha, *ya);
+    }
+}
+
+/// The fused CentralVR step:
+///   `x -= eta * (coef * a + gbar + 2*lam*x)`
+/// i.e. `x = (1 - 2*eta*lam) * x - eta*coef*a - eta*gbar`.
+/// One pass over the three slices; this is THE hot loop of the repo.
+#[inline]
+pub fn vr_step(x: &mut [f32], a: &[f32], gbar: &[f32], coef: f32, eta: f32, lam: f32) {
+    debug_assert_eq!(x.len(), a.len());
+    debug_assert_eq!(x.len(), gbar.len());
+    let scale = 1.0 - 2.0 * eta * lam;
+    let ca = -eta * coef;
+    let d = x.len();
+    let (xc, xr) = x.split_at_mut(d - d % 8);
+    let mut ai = a.chunks_exact(8);
+    let mut gi = gbar.chunks_exact(8);
+    for xa in xc.chunks_exact_mut(8) {
+        let av = ai.next().unwrap();
+        let gv = gi.next().unwrap();
+        for k in 0..8 {
+            xa[k] = av[k].mul_add(ca, xa[k].mul_add(scale, -eta * gv[k]));
+        }
+    }
+    let base = d - d % 8;
+    for (k, xv) in xr.iter_mut().enumerate() {
+        let i = base + k;
+        *xv = a[i].mul_add(ca, xv.mul_add(scale, -eta * gbar[i]));
+    }
+}
+
+/// Plain-SGD step: `x -= eta * (coef * a + 2*lam*x)`.
+#[inline]
+pub fn sgd_step(x: &mut [f32], a: &[f32], coef: f32, eta: f32, lam: f32) {
+    let scale = 1.0 - 2.0 * eta * lam;
+    let ca = -eta * coef;
+    for (xv, av) in x.iter_mut().zip(a) {
+        *xv = av.mul_add(ca, *xv * scale);
+    }
+}
+
+/// x *= alpha
+#[inline]
+pub fn scal(alpha: f32, x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// Squared Euclidean norm (f64 accumulation: used for metrics/convergence,
+/// where precision matters more than speed).
+#[inline]
+pub fn norm2_sq(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum()
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(x: &[f32]) -> f64 {
+    norm2_sq(x).sqrt()
+}
+
+/// Elementwise `dst = src`.
+#[inline]
+pub fn copy(src: &[f32], dst: &mut [f32]) {
+    dst.copy_from_slice(src);
+}
+
+/// dst += src
+#[inline]
+pub fn add_assign(dst: &mut [f32], src: &[f32]) {
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+/// dst -= src
+#[inline]
+pub fn sub_assign(dst: &mut [f32], src: &[f32]) {
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d -= s;
+    }
+}
+
+/// out = a - b (allocating; metrics path only)
+pub fn sub(a: &[f32], b: &[f32]) -> Vec<f32> {
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// Fill with zeros.
+#[inline]
+pub fn zero(x: &mut [f32]) {
+    x.iter_mut().for_each(|v| *v = 0.0);
+}
+
+/// Mean of several equal-length vectors into `out`.
+pub fn mean_into(vs: &[&[f32]], out: &mut [f32]) {
+    zero(out);
+    for v in vs {
+        add_assign(out, v);
+    }
+    let inv = 1.0 / vs.len() as f32;
+    scal(inv, out);
+}
+
+/// Maximum absolute difference between two slices (parity tests).
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+/// Relative L2 difference: ||a-b|| / max(||b||, eps).
+pub fn rel_l2_diff(a: &[f32], b: &[f32]) -> f64 {
+    let num: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt();
+    num / norm2(b).max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn randvec(r: &mut Pcg64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| r.normal() as f32).collect()
+    }
+
+    #[test]
+    fn dot_matches_naive_all_lengths() {
+        let mut r = Pcg64::new(1);
+        for n in [0, 1, 3, 7, 8, 9, 16, 31, 100, 257] {
+            let a = randvec(&mut r, n);
+            let b = randvec(&mut r, n);
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!(
+                (dot(&a, &b) - naive).abs() <= 1e-4 * (1.0 + naive.abs()),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn axpy_matches_naive() {
+        let mut r = Pcg64::new(2);
+        for n in [1, 5, 8, 13, 64, 100] {
+            let x = randvec(&mut r, n);
+            let mut y = randvec(&mut r, n);
+            let expect: Vec<f32> =
+                y.iter().zip(&x).map(|(yv, xv)| yv + 0.37 * xv).collect();
+            axpy(0.37, &x, &mut y);
+            assert!(max_abs_diff(&y, &expect) < 1e-5, "n={n}");
+        }
+    }
+
+    #[test]
+    fn vr_step_matches_decomposed_update() {
+        let mut r = Pcg64::new(3);
+        for d in [1, 4, 8, 20, 50, 129] {
+            let a = randvec(&mut r, d);
+            let gbar = randvec(&mut r, d);
+            let x0 = randvec(&mut r, d);
+            let (eta, lam, coef) = (0.05f32, 1e-4f32, 0.7f32);
+            // reference: g = coef*a + gbar + 2 lam x; x -= eta g
+            let expect: Vec<f32> = x0
+                .iter()
+                .zip(&a)
+                .zip(&gbar)
+                .map(|((xv, av), gv)| {
+                    xv - eta * (coef * av + gv + 2.0 * lam * xv)
+                })
+                .collect();
+            let mut x = x0.clone();
+            vr_step(&mut x, &a, &gbar, coef, eta, lam);
+            assert!(max_abs_diff(&x, &expect) < 1e-5, "d={d}");
+        }
+    }
+
+    #[test]
+    fn sgd_step_matches_decomposed_update() {
+        let mut r = Pcg64::new(4);
+        let d = 33;
+        let a = randvec(&mut r, d);
+        let x0 = randvec(&mut r, d);
+        let (eta, lam, coef) = (0.1f32, 1e-3f32, -0.4f32);
+        let expect: Vec<f32> = x0
+            .iter()
+            .zip(&a)
+            .map(|(xv, av)| xv - eta * (coef * av + 2.0 * lam * xv))
+            .collect();
+        let mut x = x0.clone();
+        sgd_step(&mut x, &a, coef, eta, lam);
+        assert!(max_abs_diff(&x, &expect) < 1e-6);
+    }
+
+    #[test]
+    fn norms_and_means() {
+        assert_eq!(norm2_sq(&[3.0, 4.0]), 25.0);
+        assert_eq!(norm2(&[3.0, 4.0]), 5.0);
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 6.0];
+        let mut out = [0.0f32; 2];
+        mean_into(&[&a, &b], &mut out);
+        assert_eq!(out, [2.0, 4.0]);
+    }
+
+    #[test]
+    fn rel_diff_zero_for_identical() {
+        let a = [1.0f32, -2.0, 3.0];
+        assert!(rel_l2_diff(&a, &a) < 1e-12);
+        assert!(max_abs_diff(&a, &a) == 0.0);
+    }
+}

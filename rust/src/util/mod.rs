@@ -1,0 +1,12 @@
+//! Foundation utilities: RNG, vector math, logging, CSV I/O, timing, and a
+//! small property-testing framework (the execution image has no `rand`,
+//! `proptest`, or `criterion`; these modules are the substrates that fill
+//! those gaps — see DESIGN.md §3).
+
+pub mod csvio;
+pub mod json;
+pub mod logger;
+pub mod math;
+pub mod propcheck;
+pub mod rng;
+pub mod timer;

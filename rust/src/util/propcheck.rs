@@ -1,0 +1,264 @@
+//! Mini property-based testing framework (proptest is not in the offline
+//! vendor set; see DESIGN.md §3).
+//!
+//! Features: seeded deterministic generation (failures print the case seed
+//! so they replay exactly), configurable case count via
+//! `CENTRALVR_PROPTEST_CASES`, and greedy shrinking for types implementing
+//! [`Shrink`].
+//!
+//! ```no_run
+//! use centralvr::util::propcheck::*;
+//! use centralvr::util::rng::Pcg64;
+//!
+//! forall("reverse twice is identity", |r: &mut Pcg64| gen_vec_f32(r, 0..50),
+//!     |v| {
+//!         let mut w = v.clone();
+//!         w.reverse();
+//!         w.reverse();
+//!         ensure(w == *v, "mismatch")
+//!     });
+//! ```
+
+use std::ops::Range;
+
+use crate::util::rng::Pcg64;
+
+/// Result of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Helper for readable property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Number of cases to run per property (default 64; override with env).
+pub fn default_cases() -> usize {
+    std::env::var("CENTRALVR_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Types that can propose strictly "smaller" variants of themselves.
+pub trait Shrink: Sized {
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![0, self / 2, self - 1]
+        }
+    }
+}
+
+impl Shrink for u32 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![0, self / 2, self - 1]
+        }
+    }
+}
+
+impl Shrink for f32 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0.0 {
+            vec![]
+        } else {
+            vec![0.0, self / 2.0]
+        }
+    }
+}
+
+impl<T: Clone> Shrink for Vec<T> {
+    /// Shrinks by dropping halves and single elements (element values are
+    /// not shrunk — good enough to localize most failures).
+    fn shrink(&self) -> Vec<Self> {
+        let n = self.len();
+        if n == 0 {
+            return vec![];
+        }
+        let mut out = vec![self[..n / 2].to_vec(), self[n / 2..].to_vec()];
+        if n <= 8 {
+            for i in 0..n {
+                let mut v = self.clone();
+                v.remove(i);
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Run `prop` on `default_cases()` generated values; panic with a replayable
+/// report on the first failure. No shrinking (use [`forall_shrink`]).
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> PropResult,
+) {
+    let base_seed = 0xC0FFEE_u64;
+    for case in 0..default_cases() {
+        let mut rng = Pcg64::new(base_seed.wrapping_add(case as u64));
+        let value = gen(&mut rng);
+        if let Err(msg) = prop(&value) {
+            panic!(
+                "property '{name}' failed (case {case}, seed {}):\n  value: {value:?}\n  {msg}",
+                base_seed.wrapping_add(case as u64)
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but greedily shrinks the failing input first.
+pub fn forall_shrink<T: std::fmt::Debug + Shrink + Clone>(
+    name: &str,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> PropResult,
+) {
+    let base_seed = 0xC0FFEE_u64;
+    for case in 0..default_cases() {
+        let mut rng = Pcg64::new(base_seed.wrapping_add(case as u64));
+        let value = gen(&mut rng);
+        if let Err(first_msg) = prop(&value) {
+            // greedy shrink loop
+            let mut best = value.clone();
+            let mut msg = first_msg;
+            let mut improved = true;
+            let mut rounds = 0;
+            while improved && rounds < 200 {
+                improved = false;
+                rounds += 1;
+                for cand in best.shrink() {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        msg = m;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}):\n  original: {value:?}\n  shrunk:   {best:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// generators
+// ---------------------------------------------------------------------------
+
+pub fn gen_usize(r: &mut Pcg64, range: Range<usize>) -> usize {
+    range.start + r.index(range.end - range.start)
+}
+
+pub fn gen_f32(r: &mut Pcg64, lo: f32, hi: f32) -> f32 {
+    lo + (hi - lo) * r.next_f32()
+}
+
+/// Standard-normal f32 vector with random length in `len`.
+pub fn gen_vec_f32(r: &mut Pcg64, len: Range<usize>) -> Vec<f32> {
+    let n = gen_usize(r, len);
+    (0..n).map(|_| r.normal() as f32).collect()
+}
+
+/// Fixed-length standard-normal f32 vector.
+pub fn gen_vec_f32_fixed(r: &mut Pcg64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| r.normal() as f32).collect()
+}
+
+/// A random permutation of 0..n.
+pub fn gen_permutation(r: &mut Pcg64, n: usize) -> Vec<u32> {
+    r.permutation(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            "usize halving is monotone",
+            |r| gen_usize(r, 0..1000),
+            |&n| {
+                count += 1;
+                ensure(n / 2 <= n, "half bigger than whole")
+            },
+        );
+        assert_eq!(count, default_cases());
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_name() {
+        forall("always fails", |r| gen_usize(r, 0..10), |_| {
+            ensure(false, "nope")
+        });
+    }
+
+    #[test]
+    fn shrinking_localizes_failure() {
+        // property: no element is >= 100. Generate vectors where one large
+        // element is planted; shrunk counterexample should be tiny.
+        let result = std::panic::catch_unwind(|| {
+            forall_shrink(
+                "all elements small",
+                |r| {
+                    let mut v: Vec<f32> =
+                        (0..gen_usize(r, 5..30)).map(|_| gen_f32(r, 0.0, 1.0)).collect();
+                    let idx = r.index(v.len());
+                    v[idx] = 500.0;
+                    v
+                },
+                |v| ensure(v.iter().all(|&x| x < 100.0), "big element"),
+            );
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("shrunk"), "{msg}");
+        // the shrunk vector should have at most 2 elements
+        let shrunk_part = msg.split("shrunk:").nth(1).unwrap();
+        let count = shrunk_part
+            .split(']')
+            .next()
+            .unwrap()
+            .matches("500")
+            .count();
+        assert!(count >= 1);
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut r = Pcg64::new(1);
+        for _ in 0..100 {
+            let n = gen_usize(&mut r, 3..7);
+            assert!((3..7).contains(&n));
+            let f = gen_f32(&mut r, -1.0, 1.0);
+            assert!((-1.0..=1.0).contains(&f));
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Wall-clock timing helpers and the measurement core used by the custom
+//! bench harness (`rust/benches/common/`) — criterion is not available in
+//! the offline image, so this module provides warmed-up, repeated,
+//! robust-summarized measurement.
+
+use std::time::Instant;
+
+/// A simple stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ns(&self) -> u128 {
+        self.start.elapsed().as_nanos()
+    }
+}
+
+/// Robust summary of repeated timing samples (seconds).
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub samples: usize,
+    pub median: f64,
+    pub mean: f64,
+    pub p10: f64,
+    pub p90: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn from_samples(mut xs: Vec<f64>) -> Summary {
+        assert!(!xs.is_empty());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| -> f64 {
+            let idx = (p * (xs.len() - 1) as f64).round() as usize;
+            xs[idx]
+        };
+        Summary {
+            samples: xs.len(),
+            median: q(0.5),
+            mean: xs.iter().sum::<f64>() / xs.len() as f64,
+            p10: q(0.1),
+            p90: q(0.9),
+            min: xs[0],
+            max: xs[xs.len() - 1],
+        }
+    }
+}
+
+/// Measure `f` with `warmup` unrecorded runs then `samples` recorded runs.
+/// Returns per-run seconds. `f` should return something observable to keep
+/// the optimizer honest; we black-box it.
+pub fn measure<T>(warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> Summary {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut xs = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        black_box(f());
+        xs.push(t.elapsed().as_secs_f64());
+    }
+    Summary::from_samples(xs)
+}
+
+/// Stable black_box (std::hint::black_box is stable since 1.66).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Human-readable duration.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_quantiles() {
+        let s = Summary::from_samples(vec![5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.samples, 5);
+    }
+
+    #[test]
+    fn measure_runs_and_counts() {
+        let mut count = 0;
+        let s = measure(2, 5, || {
+            count += 1;
+            count
+        });
+        assert_eq!(count, 7);
+        assert_eq!(s.samples, 5);
+        assert!(s.min >= 0.0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(2e-9).contains("ns"));
+        assert!(fmt_secs(2e-6).contains("µs"));
+        assert!(fmt_secs(2e-3).contains("ms"));
+        assert!(fmt_secs(2.0).contains(" s"));
+    }
+}

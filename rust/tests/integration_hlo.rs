@@ -1,0 +1,220 @@
+//! Native-vs-HLO engine parity — the strongest end-to-end check of the AOT
+//! bridge: the same epoch semantics must come out of the hand-written Rust
+//! math and the jax->Pallas->HLO->PJRT pipeline.
+//!
+//! Requires `make artifacts` (shape 256x16 is in the default set); tests
+//! skip with a message if artifacts are missing so `cargo test` stays
+//! usable before the Python step.
+
+use centralvr::algos::{CentralVr, SequentialSolver, SolverConfig};
+use centralvr::data::synth;
+use centralvr::exec::engine::{EpochEngine, NativeEngine};
+use centralvr::hlo_exec::HloEngine;
+use centralvr::model::glm::Problem;
+use centralvr::util::math;
+use centralvr::util::rng::Pcg64;
+
+const N: usize = 256;
+const D: usize = 16;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("CENTRALVR_ARTIFACTS").unwrap_or_else(|_| {
+        // tests run from the crate root
+        "artifacts".to_string()
+    });
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir}; run `make artifacts`");
+        None
+    }
+}
+
+fn problems() -> [Problem; 2] {
+    [Problem::Logistic, Problem::Ridge]
+}
+
+fn dataset(p: Problem) -> centralvr::data::dataset::Dataset {
+    match p {
+        Problem::Logistic => synth::toy_classification(N, D, 42),
+        Problem::Ridge => synth::toy_least_squares(N, D, 42),
+    }
+}
+
+#[test]
+fn full_gradient_parity() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut hlo = HloEngine::new(&dir).unwrap();
+    let mut native = NativeEngine::new();
+    for p in problems() {
+        let ds = dataset(p);
+        let x: Vec<f32> = (0..D).map(|j| 0.05 * j as f32 - 0.3).collect();
+        let mut g_h = vec![0.0f32; D];
+        let mut g_n = vec![0.0f32; D];
+        hlo.full_gradient(p, &ds, &x, 1e-4, &mut g_h);
+        native.full_gradient(p, &ds, &x, 1e-4, &mut g_n);
+        let diff = math::rel_l2_diff(&g_h, &g_n);
+        assert!(diff < 1e-5, "{p:?}: rel diff {diff}");
+    }
+}
+
+#[test]
+fn metrics_partial_parity() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut hlo = HloEngine::new(&dir).unwrap();
+    let mut native = NativeEngine::new();
+    for p in problems() {
+        let ds = dataset(p);
+        let x = vec![0.07f32; D];
+        let mut gs_h = vec![0.0f32; D];
+        let mut gs_n = vec![0.0f32; D];
+        let loss_h = hlo.metrics_partial(p, &ds, &x, &mut gs_h);
+        let loss_n = native.metrics_partial(p, &ds, &x, &mut gs_n);
+        assert!(
+            (loss_h - loss_n).abs() < 1e-3 * (1.0 + loss_n.abs()),
+            "{p:?}: loss {loss_h} vs {loss_n}"
+        );
+        assert!(math::rel_l2_diff(&gs_h, &gs_n) < 1e-5, "{p:?}");
+    }
+}
+
+#[test]
+fn centralvr_epoch_parity() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut hlo = HloEngine::new(&dir).unwrap();
+    let mut native = NativeEngine::new();
+    for p in problems() {
+        let ds = dataset(p);
+        let mut rng = Pcg64::new(9);
+        let perm = rng.permutation(N);
+        let x0: Vec<f32> = (0..D).map(|_| rng.normal() as f32 * 0.1).collect();
+        let alpha0: Vec<f32> = (0..N).map(|_| rng.normal() as f32 * 0.05).collect();
+        let gbar: Vec<f32> = (0..D).map(|_| rng.normal() as f32 * 0.01).collect();
+        let (eta, lam) = (0.01f32, 1e-4f32);
+
+        let mut x_h = x0.clone();
+        let mut a_h = alpha0.clone();
+        let mut gt_h = vec![0.0f32; D];
+        hlo.centralvr_epoch(p, &ds, &perm, &mut x_h, &mut a_h, &gbar, &mut gt_h, eta, lam);
+
+        let mut x_n = x0.clone();
+        let mut a_n = alpha0.clone();
+        let mut gt_n = vec![0.0f32; D];
+        native.centralvr_epoch(p, &ds, &perm, &mut x_n, &mut a_n, &gbar, &mut gt_n, eta, lam);
+
+        assert!(
+            math::rel_l2_diff(&x_h, &x_n) < 2e-4,
+            "{p:?} x: {}",
+            math::rel_l2_diff(&x_h, &x_n)
+        );
+        assert!(math::rel_l2_diff(&gt_h, &gt_n) < 2e-4, "{p:?} gtilde");
+        assert!(math::max_abs_diff(&a_h, &a_n) < 1e-3, "{p:?} alpha");
+    }
+}
+
+#[test]
+fn sgd_and_svrg_epoch_parity() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut hlo = HloEngine::new(&dir).unwrap();
+    let mut native = NativeEngine::new();
+    for p in problems() {
+        let ds = dataset(p);
+        let mut rng = Pcg64::new(10);
+        let idx = rng.indices_with_replacement(N, N);
+        let x0: Vec<f32> = (0..D).map(|_| rng.normal() as f32 * 0.1).collect();
+        let (eta, lam) = (0.01f32, 1e-4f32);
+
+        // sgd_epoch
+        let mut x_h = x0.clone();
+        let mut x_n = x0.clone();
+        hlo.sgd_epoch(p, &ds, &idx, &mut x_h, eta, lam);
+        native.sgd_epoch(p, &ds, &idx, &mut x_n, eta, lam);
+        assert!(math::rel_l2_diff(&x_h, &x_n) < 2e-4, "{p:?} sgd");
+
+        // svrg_inner
+        let xbar: Vec<f32> = (0..D).map(|_| rng.normal() as f32 * 0.1).collect();
+        let mut gbar = vec![0.0f32; D];
+        native.full_gradient(p, &ds, &xbar, 0.0, &mut gbar);
+        let mut x_h = x0.clone();
+        let mut x_n = x0.clone();
+        hlo.svrg_inner(p, &ds, &idx, &mut x_h, &xbar, &gbar, eta, lam);
+        native.svrg_inner(p, &ds, &idx, &mut x_n, &xbar, &gbar, eta, lam);
+        assert!(math::rel_l2_diff(&x_h, &x_n) < 2e-4, "{p:?} svrg");
+    }
+}
+
+#[test]
+fn saga_epoch_parity_with_duplicates() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut hlo = HloEngine::new(&dir).unwrap();
+    let mut native = NativeEngine::new();
+    for p in problems() {
+        let ds = dataset(p);
+        let mut rng = Pcg64::new(11);
+        // force duplicate indices: sample from a small range
+        let idx: Vec<u32> = (0..N).map(|_| (rng.index(32)) as u32).collect();
+        let x0 = vec![0.05f32; D];
+        let mut alpha0 = vec![0.0f32; N];
+        let mut gbar0 = vec![0.0f32; D];
+        for i in 0..N {
+            alpha0[i] = centralvr::model::gradients::grad_scalar(p, &ds, i, &x0);
+            math::axpy(alpha0[i] / N as f32, ds.row(i), &mut gbar0);
+        }
+        let (eta, lam, n_inv) = (0.005f32, 1e-4f32, 1.0 / N as f32);
+
+        let mut x_h = x0.clone();
+        let mut a_h = alpha0.clone();
+        let mut g_h = gbar0.clone();
+        hlo.saga_epoch(p, &ds, &idx, &mut x_h, &mut a_h, &mut g_h, eta, lam, n_inv);
+
+        let mut x_n = x0.clone();
+        let mut a_n = alpha0.clone();
+        let mut g_n = gbar0.clone();
+        native.saga_epoch(p, &ds, &idx, &mut x_n, &mut a_n, &mut g_n, eta, lam, n_inv);
+
+        assert!(math::rel_l2_diff(&x_h, &x_n) < 2e-4, "{p:?} saga x");
+        assert!(math::rel_l2_diff(&g_h, &g_n) < 2e-4, "{p:?} saga gbar");
+        assert!(math::max_abs_diff(&a_h, &a_n) < 1e-3, "{p:?} saga alpha");
+    }
+}
+
+/// Whole-solver equivalence: CentralVR driven by the HLO engine converges
+/// to the same solution as the native engine.
+#[test]
+fn centralvr_solver_on_hlo_engine_converges() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ds = synth::toy_least_squares(N, D, 77);
+    let cfg = SolverConfig {
+        eta: 0.008,
+        lambda: 1e-4,
+        epochs: 25,
+        seed: 3,
+    };
+    let hlo = HloEngine::new(&dir).unwrap();
+    let mut s_h = CentralVr::new(&ds, Problem::Ridge, cfg).with_engine(Box::new(hlo));
+    let t_h = s_h.run_to(1e-4);
+    assert!(t_h.converged, "hlo rel={}", t_h.series.final_rel());
+
+    let mut s_n = CentralVr::new(&ds, Problem::Ridge, cfg);
+    let t_n = s_n.run_to(1e-4);
+    // same seeds, same permutations -> nearly identical trajectories
+    assert!(
+        math::rel_l2_diff(&t_h.x, &t_n.x) < 1e-3,
+        "solutions diverged: {}",
+        math::rel_l2_diff(&t_h.x, &t_n.x)
+    );
+}
+
+/// The HLO engine must reject index sequences it was not specialized for.
+#[test]
+fn hlo_engine_rejects_wrong_tau() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut hlo = HloEngine::new(&dir).unwrap();
+    let ds = synth::toy_classification(N, D, 1);
+    let mut x = vec![0.0f32; D];
+    let idx = vec![0u32; 10]; // wrong length
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        hlo.sgd_epoch(Problem::Logistic, &ds, &idx, &mut x, 0.01, 1e-4);
+    }));
+    assert!(result.is_err());
+}

@@ -1,0 +1,271 @@
+//! Property-based tests over the coordinator's invariants (DESIGN.md §6),
+//! using the in-repo propcheck framework (no proptest in the offline
+//! vendor set).
+
+use centralvr::data::dataset::Dataset;
+use centralvr::data::shard::ShardedDataset;
+use centralvr::data::synth;
+use centralvr::dist::messages::Upload;
+use centralvr::dist::server::ServerState;
+use centralvr::exec::engine::{EpochEngine, NativeEngine};
+use centralvr::model::glm::Problem;
+use centralvr::model::gradients;
+use centralvr::util::math;
+use centralvr::util::propcheck::*;
+use centralvr::util::rng::Pcg64;
+
+/// Sharding always produces a disjoint cover with near-equal sizes.
+#[test]
+fn prop_shard_partition_is_disjoint_cover() {
+    forall(
+        "shard partition",
+        |r: &mut Pcg64| {
+            let n = gen_usize(r, 10..200);
+            let p = gen_usize(r, 1..n.min(16));
+            (n, p)
+        },
+        |&(n, p)| {
+            let ds = synth::toy_classification(n, 3, 7);
+            let sh = ShardedDataset::split(&ds, p, 5);
+            let total: usize = sh.shards().iter().map(|s| s.n()).sum();
+            ensure(total == n, format!("cover: {total} != {n}"))?;
+            let sizes: Vec<usize> = sh.shards().iter().map(|s| s.n()).collect();
+            let (mn, mx) = (
+                *sizes.iter().min().unwrap(),
+                *sizes.iter().max().unwrap(),
+            );
+            ensure(mx - mn <= 1, format!("balance: {sizes:?}"))?;
+            let wsum: f64 = (0..p).map(|s| sh.weight(s)).sum();
+            ensure((wsum - 1.0).abs() < 1e-9, "weights don't sum to 1")
+        },
+    );
+}
+
+/// The async delta protocol keeps server x equal to the mean of the
+/// workers' latest uploaded values REGARDLESS of arrival order.
+#[test]
+fn prop_delta_protocol_is_order_independent_mean() {
+    forall(
+        "delta protocol mean",
+        |r: &mut Pcg64| {
+            let p = gen_usize(r, 2..8);
+            let rounds = gen_usize(r, 1..5);
+            // values[worker][round]
+            let values: Vec<Vec<f32>> = (0..p)
+                .map(|_| (0..rounds).map(|_| gen_f32(r, -10.0, 10.0)).collect())
+                .collect();
+            // random interleaving: (worker, round) pairs shuffled within
+            // round-order constraints (a worker's rounds stay ordered)
+            let mut order: Vec<usize> = (0..p * rounds).map(|k| k % p).collect();
+            r.shuffle(&mut order);
+            (values, order)
+        },
+        |(values, order)| {
+            let p = values.len();
+            let mut server = ServerState::new(1, p, 0.9);
+            let mut sent = vec![0.0f32; p]; // last uploaded value per worker
+            let mut next_round = vec![0usize; p];
+            for &s in order {
+                let r = next_round[s];
+                if r >= values[s].len() {
+                    continue;
+                }
+                next_round[s] = r + 1;
+                let v = values[s][r];
+                server.apply_delta(&Upload::Delta {
+                    dx: vec![v - sent[s]],
+                    dgbar: vec![0.0],
+                });
+                sent[s] = v;
+            }
+            let mean: f32 = sent.iter().sum::<f32>() / p as f32;
+            ensure(
+                (server.x[0] - mean).abs() < 1e-3,
+                format!("server {} != mean {}", server.x[0], mean),
+            )
+        },
+    );
+}
+
+/// The CentralVR gradient estimator is unbiased: averaging v over all
+/// choices of i equals the full data-part gradient plus regularizer.
+#[test]
+fn prop_vr_estimator_is_unbiased() {
+    forall(
+        "vr estimator unbiased",
+        |r: &mut Pcg64| {
+            let n = gen_usize(r, 8..40);
+            let d = gen_usize(r, 2..8);
+            let seed = r.next_u64();
+            (n, d, seed)
+        },
+        |&(n, d, seed)| {
+            let ds = synth::toy_least_squares(n, d, seed);
+            let mut rng = Pcg64::new(seed ^ 1);
+            let p = Problem::Ridge;
+            let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32 * 0.3).collect();
+            // arbitrary table + CONSISTENT gbar = (1/n) sum alpha_i a_i
+            let alpha: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let mut gbar = vec![0.0f32; d];
+            for i in 0..n {
+                math::axpy(alpha[i] / n as f32, ds.row(i), &mut gbar);
+            }
+            let lam = 1e-3f32;
+            // E_i[v] = (1/n) sum_i [(c_i - alpha_i) a_i] + gbar + 2 lam x
+            let mut mean_v = vec![0.0f64; d];
+            for i in 0..n {
+                let c = gradients::grad_scalar(p, &ds, i, &x);
+                for j in 0..d {
+                    let v = (c - alpha[i]) * ds.row(i)[j] + gbar[j] + 2.0 * lam * x[j];
+                    mean_v[j] += v as f64 / n as f64;
+                }
+            }
+            let mut gfull = vec![0.0f32; d];
+            gradients::full_gradient(p, &ds, &x, lam, &mut gfull);
+            for j in 0..d {
+                let diff = (mean_v[j] - gfull[j] as f64).abs();
+                if diff > 1e-4 * (1.0 + gfull[j].abs() as f64) {
+                    return Err(format!("bias at j={j}: {diff}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// After any CentralVR epoch, gtilde equals the table average exactly
+/// (the invariant that makes epoch-boundary gbar swaps correct).
+#[test]
+fn prop_gtilde_matches_table_average() {
+    forall(
+        "gtilde == table average",
+        |r: &mut Pcg64| {
+            let n = gen_usize(r, 8..64);
+            let d = gen_usize(r, 2..10);
+            (n, d, r.next_u64())
+        },
+        |&(n, d, seed)| {
+            let ds = synth::toy_classification(n, d, seed);
+            let mut eng = NativeEngine::new();
+            let mut rng = Pcg64::new(seed);
+            let perm = rng.permutation(n);
+            let mut x = vec![0.0f32; d];
+            let mut alpha: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+            let gbar: Vec<f32> = (0..d).map(|_| rng.normal() as f32 * 0.01).collect();
+            let mut gtilde = vec![0.0f32; d];
+            eng.centralvr_epoch(
+                Problem::Logistic,
+                &ds,
+                &perm,
+                &mut x,
+                &mut alpha,
+                &gbar,
+                &mut gtilde,
+                0.01,
+                1e-4,
+            );
+            let mut expect = vec![0.0f32; d];
+            for i in 0..n {
+                math::axpy(alpha[i] / n as f32, ds.row(i), &mut expect);
+            }
+            ensure(
+                math::max_abs_diff(&gtilde, &expect) < 1e-4,
+                "gtilde drifted from table average",
+            )
+        },
+    );
+}
+
+/// Gradient of the objective matches finite differences for random data,
+/// random iterates, and both problems.
+#[test]
+fn prop_gradient_matches_finite_differences() {
+    forall(
+        "gradient vs finite differences",
+        |r: &mut Pcg64| {
+            let n = gen_usize(r, 5..30);
+            let d = gen_usize(r, 2..6);
+            let logistic = r.next_f64() < 0.5;
+            (n, d, logistic, r.next_u64())
+        },
+        |&(n, d, logistic, seed)| {
+            let (p, ds): (Problem, Dataset) = if logistic {
+                (Problem::Logistic, synth::toy_classification(n, d, seed))
+            } else {
+                (Problem::Ridge, synth::toy_least_squares(n, d, seed))
+            };
+            let mut rng = Pcg64::new(seed ^ 2);
+            let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32 * 0.2).collect();
+            let lam = 1e-3f32;
+            let mut g = vec![0.0f32; d];
+            gradients::full_gradient(p, &ds, &x, lam, &mut g);
+            let j = rng.index(d);
+            let h = 1e-2f32;
+            let mut xp = x.clone();
+            xp[j] += h;
+            let mut xm = x.clone();
+            xm[j] -= h;
+            let fd = (gradients::objective(p, &[&ds], &xp, lam)
+                - gradients::objective(p, &[&ds], &xm, lam))
+                / (2.0 * h as f64);
+            ensure(
+                (fd - g[j] as f64).abs() < 3e-2 * (1.0 + fd.abs()),
+                format!("fd={fd} analytic={}", g[j]),
+            )
+        },
+    );
+}
+
+/// Fisher-Yates output is always a permutation; with-replacement sampling
+/// always stays in range.
+#[test]
+fn prop_sampling_validity() {
+    forall_shrink(
+        "permutation validity",
+        |r: &mut Pcg64| gen_usize(r, 1..300),
+        |&n| {
+            let mut r = Pcg64::new(n as u64);
+            let perm = r.permutation(n);
+            let mut seen = vec![false; n];
+            for &i in &perm {
+                if seen[i as usize] {
+                    return Err(format!("duplicate index {i}"));
+                }
+                seen[i as usize] = true;
+            }
+            let idx = r.indices_with_replacement(n, 2 * n);
+            ensure(
+                idx.iter().all(|&i| (i as usize) < n),
+                "index out of range",
+            )
+        },
+    );
+}
+
+/// EASGD elastic update conserves the sum x_center + x_local.
+#[test]
+fn prop_elastic_update_conserves_sum() {
+    forall(
+        "elastic conservation",
+        |r: &mut Pcg64| {
+            (
+                gen_vec_f32_fixed(r, 4),
+                gen_vec_f32_fixed(r, 4),
+                gen_usize(r, 2..10),
+            )
+        },
+        |(center, local, p)| {
+            let mut server = ServerState::new(4, *p, 0.9);
+            server.x.copy_from_slice(center);
+            let x_new = server.apply_elastic(&Upload::ElasticPush { x: local.clone() });
+            for j in 0..4 {
+                let before = center[j] + local[j];
+                let after = server.x[j] + x_new[j];
+                if (before - after).abs() > 1e-4 {
+                    return Err(format!("sum not conserved at {j}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
