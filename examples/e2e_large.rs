@@ -86,6 +86,10 @@ fn main() {
 
     println!("[3/3] AOT HLO path (jax/Pallas -> HLO text -> PJRT under rust) ...");
     let dir = HloEngine::default_dir();
+    if !HloEngine::AVAILABLE {
+        println!("      SKIPPED: built without the `pjrt` feature (no HLO runtime)");
+        return;
+    }
     if !std::path::Path::new(&dir).join("manifest.json").exists() {
         println!("      SKIPPED: no artifacts at {dir} (run `make artifacts`)");
         return;

@@ -98,7 +98,7 @@ fn main() {
 
     // --- HLO engine epoch (AOT path dispatch cost) ---
     let dir = HloEngine::default_dir();
-    if std::path::Path::new(&dir).join("manifest.json").exists() {
+    if HloEngine::AVAILABLE && std::path::Path::new(&dir).join("manifest.json").exists() {
         let (n, d) = (256usize, 16usize);
         let ds = synth::toy_classification(n, d, 3);
         let mut hlo = HloEngine::new(&dir).expect("hlo");
@@ -139,7 +139,7 @@ fn main() {
         });
         b.metric("hlo_vs_native_epoch", h.median / nn.median, "x (HLO/native)");
     } else {
-        println!("hot_paths/hlo_epoch: SKIPPED (run `make artifacts`)");
+        println!("hot_paths/hlo_epoch: SKIPPED (needs --features pjrt and `make artifacts`)");
     }
 
     // --- server apply latency ---

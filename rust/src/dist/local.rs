@@ -1,0 +1,601 @@
+//! [`LocalNode`]: one worker's algorithm state and per-round math for
+//! every distributed algorithm in the paper — CentralVR-Sync/-Async
+//! (Algorithms 2–3), distributed SVRG/SAGA (Algorithms 4–5), and the
+//! EASGD / parameter-server-SVRG baselines of §6.2.
+//!
+//! A node owns its shard view, scalar gradient table, and a per-worker
+//! RNG stream split from the run seed, so a round is a pure function of
+//! (node state, incoming [`GlobalView`]) — which is what lets the
+//! discrete-event simulator and the real-thread engine drive identical
+//! math and agree bit-for-bit on synchronous algorithms.
+//!
+//! All heavy per-sample math goes through [`NativeEngine`] (the same
+//! [`EpochEngine`] primitives the sequential solvers use), so a future
+//! HLO-backed distributed run only swaps the engine.
+
+use crate::data::dataset::Dataset;
+use crate::dist::messages::{GlobalView, Upload};
+use crate::dist::DistConfig;
+use crate::exec::engine::{EpochEngine, NativeEngine};
+use crate::model::glm::Problem;
+use crate::model::gradients;
+use crate::util::math;
+use crate::util::rng::Pcg64;
+
+/// Per-worker algorithm state.
+pub struct LocalNode<'a> {
+    /// Worker index in [0, p).
+    pub s: usize,
+    shard: &'a Dataset,
+    problem: Problem,
+    cfg: DistConfig,
+    n_global: usize,
+    engine: NativeEngine,
+    rng: Pcg64,
+    /// Local iterate.
+    x: Vec<f32>,
+    /// Scalar gradient table over the shard (CentralVR / SAGA).
+    alpha: Vec<f32>,
+    /// Local copy of the global average-gradient estimate.
+    gbar: Vec<f32>,
+    /// Epoch accumulator (CentralVR gtilde / gradient partials).
+    gtilde: Vec<f32>,
+    /// Last uploaded iterate (delta protocol).
+    sent_x: Vec<f32>,
+    /// Last uploaded pre-weighted gbar contribution (delta protocol).
+    sent_gbar: Vec<f32>,
+    /// SVRG anchor.
+    xbar: Vec<f32>,
+    /// Scalar table initialized (one plain-SGD epoch, Algorithm 1 line 2)?
+    initialized: bool,
+    /// Completed rounds (drives the optional geometric step decay).
+    rounds_done: u64,
+    /// Gradient evaluations charged by the most recent round.
+    pub last_round_evals: u64,
+    /// Parameter updates performed by the most recent round.
+    pub last_round_iters: u64,
+}
+
+impl<'a> LocalNode<'a> {
+    pub fn new(
+        s: usize,
+        shard: &'a Dataset,
+        problem: Problem,
+        cfg: DistConfig,
+        n_global: usize,
+    ) -> LocalNode<'a> {
+        assert!(n_global >= shard.n(), "global count smaller than shard");
+        let d = shard.d();
+        LocalNode {
+            s,
+            shard,
+            problem,
+            cfg,
+            n_global,
+            engine: NativeEngine::new(),
+            rng: Pcg64::new(cfg.seed).split(s as u64),
+            x: vec![0.0; d],
+            alpha: vec![0.0; shard.n()],
+            gbar: vec![0.0; d],
+            gtilde: vec![0.0; d],
+            sent_x: vec![0.0; d],
+            sent_gbar: vec![0.0; d],
+            xbar: vec![0.0; d],
+            initialized: false,
+            rounds_done: 0,
+            last_round_evals: 0,
+            last_round_iters: 0,
+        }
+    }
+
+    /// The shard this worker owns.
+    pub fn shard(&self) -> &Dataset {
+        self.shard
+    }
+
+    /// Current local iterate (diagnostics / tests).
+    pub fn x(&self) -> &[f32] {
+        &self.x
+    }
+
+    /// Scalar gradient table (diagnostics / tests).
+    pub fn alpha(&self) -> &[f32] {
+        &self.alpha
+    }
+
+    /// Completed rounds.
+    pub fn rounds_done(&self) -> u64 {
+        self.rounds_done
+    }
+
+    /// Shard weight in the global objective: n_s / n.
+    fn weight(&self) -> f32 {
+        self.shard.n() as f32 / self.n_global as f32
+    }
+
+    /// Step size for the current round (constant unless `decay < 1`).
+    fn eta_now(&self) -> f32 {
+        if self.cfg.decay >= 1.0 {
+            self.cfg.eta
+        } else {
+            self.cfg.eta * self.cfg.decay.powi(self.rounds_done.min(1 << 20) as i32)
+        }
+    }
+
+    fn finish_round(&mut self, evals: u64, iters: u64) {
+        self.last_round_evals = evals;
+        self.last_round_iters = iters;
+        self.rounds_done += 1;
+    }
+
+    /// One local CentralVR epoch from the given starting point; the first
+    /// round is the plain-SGD table-filling epoch (Algorithm 1, line 2).
+    /// Leaves the fresh epoch average in `self.gtilde`.
+    fn centralvr_local_epoch(&mut self, view: &GlobalView) {
+        self.x.copy_from_slice(&view.x);
+        let eta = self.eta_now();
+        let perm = self.rng.permutation(self.shard.n());
+        if !self.initialized {
+            self.engine.sgd_init_epoch(
+                self.problem,
+                self.shard,
+                &perm,
+                &mut self.x,
+                &mut self.alpha,
+                &mut self.gtilde,
+                eta,
+                self.cfg.lambda,
+            );
+            self.initialized = true;
+        } else {
+            self.gbar.copy_from_slice(&view.gbar);
+            self.engine.centralvr_epoch(
+                self.problem,
+                self.shard,
+                &perm,
+                &mut self.x,
+                &mut self.alpha,
+                &self.gbar,
+                &mut self.gtilde,
+                eta,
+                self.cfg.lambda,
+            );
+        }
+        let n = self.shard.n() as u64;
+        self.finish_round(n, n);
+    }
+
+    // ----- CentralVR-Sync (Algorithm 2) ------------------------------------
+
+    /// Adopt the broadcast state, run one local epoch, upload the full
+    /// endpoint (iterate + fresh epoch average) for the weighted barrier
+    /// average.
+    pub fn cvr_sync_round(&mut self, view: &GlobalView) -> Upload {
+        self.centralvr_local_epoch(view);
+        Upload::State {
+            x: self.x.clone(),
+            gbar: self.gtilde.clone(),
+        }
+    }
+
+    // ----- CentralVR-Async (Algorithm 3) -----------------------------------
+
+    /// Adopt the server reply, run one local epoch, and upload *changes*:
+    /// `dx` replaces this worker's contribution to the server's mean
+    /// iterate; `dgbar` replaces its pre-weighted contribution to the
+    /// global average gradient. Sending changes keeps the protocol
+    /// unbiased when workers run at different speeds (paper §4.2).
+    pub fn cvr_async_round(&mut self, view: &GlobalView) -> Upload {
+        self.centralvr_local_epoch(view);
+        let w = self.weight();
+        let dx: Vec<f32> = self.x.iter().zip(&self.sent_x).map(|(a, b)| a - b).collect();
+        let contrib: Vec<f32> = self.gtilde.iter().map(|g| g * w).collect();
+        let dgbar: Vec<f32> = contrib
+            .iter()
+            .zip(&self.sent_gbar)
+            .map(|(a, b)| a - b)
+            .collect();
+        self.sent_x.copy_from_slice(&self.x);
+        self.sent_gbar.copy_from_slice(&contrib);
+        Upload::Delta { dx, dgbar }
+    }
+
+    // ----- Distributed SAGA (Algorithm 5) ----------------------------------
+
+    /// Round 0: fill the scalar table with one plain-SGD epoch and upload
+    /// the initial contribution (iterate + pre-weighted table average).
+    pub fn dsaga_init(&mut self) -> Upload {
+        let eta = self.eta_now();
+        let perm = self.rng.permutation(self.shard.n());
+        self.engine.sgd_init_epoch(
+            self.problem,
+            self.shard,
+            &perm,
+            &mut self.x,
+            &mut self.alpha,
+            &mut self.gtilde,
+            eta,
+            self.cfg.lambda,
+        );
+        self.initialized = true;
+        let n = self.shard.n() as u64;
+        self.finish_round(n, n);
+        let w = self.weight();
+        let contrib: Vec<f32> = self.gtilde.iter().map(|g| g * w).collect();
+        self.sent_x.copy_from_slice(&self.x);
+        self.sent_gbar.copy_from_slice(&contrib);
+        Upload::Delta {
+            dx: self.x.clone(),
+            dgbar: contrib,
+        }
+    }
+
+    /// tau SAGA iterations from the server reply, then upload changes.
+    /// `dgbar` is the sum of this worker's table-increment contributions
+    /// (scaled by 1/n_global inside the engine); increments from different
+    /// workers touch disjoint table entries, so the server adds them and
+    /// its `gbar` stays the exact global table average.
+    pub fn dsaga_round(&mut self, view: &GlobalView) -> Upload {
+        self.x.copy_from_slice(&view.x);
+        self.gbar.copy_from_slice(&view.gbar);
+        let tau = if self.cfg.tau > 0 { self.cfg.tau } else { self.shard.n() };
+        let idx = self.rng.indices_with_replacement(self.shard.n(), tau);
+        let eta = self.eta_now();
+        let n_inv = 1.0 / self.n_global as f32;
+        self.engine.saga_epoch(
+            self.problem,
+            self.shard,
+            &idx,
+            &mut self.x,
+            &mut self.alpha,
+            &mut self.gbar,
+            eta,
+            self.cfg.lambda,
+            n_inv,
+        );
+        self.finish_round(tau as u64, tau as u64);
+        let dx: Vec<f32> = self.x.iter().zip(&self.sent_x).map(|(a, b)| a - b).collect();
+        let dgbar: Vec<f32> = self.gbar.iter().zip(&view.gbar).map(|(a, b)| a - b).collect();
+        self.sent_x.copy_from_slice(&self.x);
+        Upload::Delta { dx, dgbar }
+    }
+
+    // ----- Distributed SVRG (Algorithm 4) ----------------------------------
+
+    /// Gradient-sync phase: adopt the new anchor (the averaged server
+    /// iterate) and upload this shard's unnormalized gradient sum; the
+    /// server pools partials into the exact full gradient at the anchor.
+    pub fn dsvrg_grad_partial(&mut self, view: &GlobalView) -> Upload {
+        self.xbar.copy_from_slice(&view.x);
+        gradients::grad_sum(self.problem, self.shard, &self.xbar, &mut self.gtilde);
+        let n = self.shard.n() as u64;
+        self.finish_round(n, 0);
+        Upload::GradPartial {
+            gsum: self.gtilde.clone(),
+            n,
+        }
+    }
+
+    /// Inner phase: m VR iterations from the anchor (m = tau, default 2n
+    /// as in the paper), then upload the endpoint for the x-average.
+    pub fn dsvrg_inner_round(&mut self, view: &GlobalView) -> Upload {
+        self.x.copy_from_slice(&view.x);
+        self.gbar.copy_from_slice(&view.gbar);
+        let m = if self.cfg.tau > 0 { self.cfg.tau } else { 2 * self.shard.n() };
+        let idx = self.rng.indices_with_replacement(self.shard.n(), m);
+        let eta = self.eta_now();
+        self.engine.svrg_inner(
+            self.problem,
+            self.shard,
+            &idx,
+            &mut self.x,
+            &self.xbar,
+            &self.gbar,
+            eta,
+            self.cfg.lambda,
+        );
+        // two dloss evaluations per inner iteration (x and the anchor)
+        self.finish_round(2 * m as u64, m as u64);
+        Upload::XOnly { x: self.x.clone() }
+    }
+
+    // ----- EASGD (baseline) -------------------------------------------------
+
+    /// Replace the local iterate with the elastically updated value the
+    /// server returned for this worker's last push.
+    pub fn easgd_adopt(&mut self, x: Vec<f32>) {
+        assert_eq!(x.len(), self.x.len());
+        self.x = x;
+    }
+
+    /// tau plain-SGD iterations on the local iterate, then push it for the
+    /// elastic exchange.
+    pub fn easgd_round(&mut self) -> Upload {
+        let tau = if self.cfg.tau > 0 { self.cfg.tau } else { 16 };
+        let idx = self.rng.indices_with_replacement(self.shard.n(), tau);
+        let eta = self.eta_now();
+        self.engine.sgd_epoch(
+            self.problem,
+            self.shard,
+            &idx,
+            &mut self.x,
+            eta,
+            self.cfg.lambda,
+        );
+        self.finish_round(tau as u64, tau as u64);
+        Upload::ElasticPush { x: self.x.clone() }
+    }
+
+    // ----- Parameter-server SVRG (baseline) ---------------------------------
+
+    /// Snapshot phase (entered after the freeze barrier): anchor at the
+    /// quiescent server iterate and upload the shard's gradient partial —
+    /// the same math as the D-SVRG gradient sync.
+    pub fn ps_svrg_snapshot(&mut self, view: &GlobalView) -> Upload {
+        self.dsvrg_grad_partial(view)
+    }
+
+    /// One parameter-server iteration: minibatch VR gradient at the
+    /// *current server iterate* (anchored at the last snapshot), shipped
+    /// as a pre-scaled step for the server to apply — a full d-vector
+    /// round trip per minibatch, the pattern whose bandwidth appetite the
+    /// paper criticizes.
+    pub fn ps_svrg_round(&mut self, view: &GlobalView) -> Upload {
+        let b = self.cfg.ps_batch.max(1).min(self.shard.n());
+        let idx = self.rng.indices_with_replacement(self.shard.n(), b);
+        let eta = self.eta_now();
+        let d = self.shard.d();
+        let mut v = vec![0.0f32; d];
+        let inv_b = 1.0 / b as f32;
+        for &iu in &idx {
+            let i = iu as usize;
+            let c = gradients::grad_scalar(self.problem, self.shard, i, &view.x);
+            let cb = gradients::grad_scalar(self.problem, self.shard, i, &self.xbar);
+            math::axpy((c - cb) * inv_b, self.shard.row(i), &mut v);
+        }
+        math::add_assign(&mut v, &view.gbar);
+        math::axpy(2.0 * self.cfg.lambda, &view.x, &mut v);
+        let dx: Vec<f32> = v.iter().map(|g| -eta * g).collect();
+        self.finish_round(2 * b as u64, 1);
+        Upload::GradStep { dx }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::Algorithm;
+    use crate::data::shard::ShardedDataset;
+    use crate::data::synth;
+    use crate::dist::server::ServerState;
+
+    fn toy(p: usize, n_per: usize, d: usize, seed: u64) -> ShardedDataset {
+        ShardedDataset::from_shards(synth::toy_least_squares_per_worker(p, n_per, d, seed))
+    }
+
+    fn cfg(algorithm: Algorithm, p: usize) -> DistConfig {
+        DistConfig {
+            algorithm,
+            p,
+            eta: 0.01,
+            seed: 42,
+            ..Default::default()
+        }
+    }
+
+    /// The global table-average invariant of the delta protocol: after
+    /// every worker's init upload, the server gbar equals the directly
+    /// recomputed (1/n) sum_i alpha_i a_i over all shards.
+    #[test]
+    fn async_init_gbar_matches_global_table_average() {
+        let p = 3;
+        let data = toy(p, 32, 4, 7);
+        let c = cfg(Algorithm::CentralVrAsync, p);
+        let mut server = ServerState::new(4, p, c.easgd_beta);
+        let mut nodes: Vec<LocalNode> = (0..p)
+            .map(|s| LocalNode::new(s, data.shard(s), Problem::Ridge, c, data.n_total()))
+            .collect();
+        for node in nodes.iter_mut() {
+            let up = node.cvr_async_round(&server.view());
+            server.apply_delta(&up);
+        }
+        let n_global = data.n_total() as f32;
+        let mut expect = vec![0.0f32; 4];
+        for (s, node) in nodes.iter().enumerate() {
+            let shard = data.shard(s);
+            for i in 0..shard.n() {
+                math::axpy(node.alpha()[i] / n_global, shard.row(i), &mut expect);
+            }
+        }
+        let diff = math::max_abs_diff(&server.gbar, &expect);
+        assert!(diff < 1e-4, "gbar drifted from table average: {diff}");
+    }
+
+    /// Server x stays the mean of the workers' latest iterates across
+    /// several asynchronous (interleaved) rounds.
+    #[test]
+    fn async_server_x_is_mean_of_worker_iterates() {
+        let p = 2;
+        let data = toy(p, 40, 5, 8);
+        let c = cfg(Algorithm::CentralVrAsync, p);
+        let mut server = ServerState::new(5, p, c.easgd_beta);
+        let mut nodes: Vec<LocalNode> = (0..p)
+            .map(|s| LocalNode::new(s, data.shard(s), Problem::Ridge, c, data.n_total()))
+            .collect();
+        // uneven interleaving: worker 0 runs twice as often
+        for step in 0..6 {
+            let s = if step % 3 == 2 { 1 } else { 0 };
+            let view = server.view();
+            let up = nodes[s].cvr_async_round(&view);
+            server.apply_delta(&up);
+        }
+        let mut mean = vec![0.0f32; 5];
+        for node in &nodes {
+            math::axpy(1.0 / p as f32, node.x(), &mut mean);
+        }
+        let diff = math::max_abs_diff(&server.x, &mean);
+        assert!(diff < 1e-4, "server x not the mean: {diff}");
+    }
+
+    #[test]
+    fn sync_round_uploads_state_and_counts_one_epoch() {
+        let data = toy(2, 24, 3, 5);
+        let c = cfg(Algorithm::CentralVrSync, 2);
+        let mut node = LocalNode::new(0, data.shard(0), Problem::Ridge, c, data.n_total());
+        let view = GlobalView {
+            x: vec![0.0; 3],
+            gbar: vec![0.0; 3],
+        };
+        let up = node.cvr_sync_round(&view);
+        assert!(matches!(up, Upload::State { .. }), "{}", up.kind());
+        assert_eq!(node.last_round_evals, 24);
+        assert_eq!(node.last_round_iters, 24);
+        assert_eq!(node.rounds_done(), 1);
+        // second round exercises the CentralVR epoch path
+        let up = node.cvr_sync_round(&view);
+        assert!(matches!(up, Upload::State { .. }));
+        assert_eq!(node.rounds_done(), 2);
+    }
+
+    #[test]
+    fn dsvrg_partial_is_the_shard_gradient_sum() {
+        let data = toy(2, 20, 4, 6);
+        let c = cfg(Algorithm::DistSvrg, 2);
+        let mut node = LocalNode::new(1, data.shard(1), Problem::Ridge, c, data.n_total());
+        let anchor: Vec<f32> = vec![0.2, -0.1, 0.0, 0.3];
+        let view = GlobalView {
+            x: anchor.clone(),
+            gbar: vec![0.0; 4],
+        };
+        let up = node.dsvrg_grad_partial(&view);
+        let Upload::GradPartial { gsum, n } = up else {
+            panic!("wrong upload kind");
+        };
+        assert_eq!(n, 20);
+        assert_eq!(node.last_round_iters, 0);
+        let mut expect = vec![0.0f32; 4];
+        gradients::grad_sum(Problem::Ridge, data.shard(1), &anchor, &mut expect);
+        assert!(math::max_abs_diff(&gsum, &expect) < 1e-6);
+    }
+
+    #[test]
+    fn dsvrg_inner_defaults_to_two_local_epochs() {
+        let data = toy(2, 16, 3, 4);
+        let c = cfg(Algorithm::DistSvrg, 2);
+        let mut node = LocalNode::new(0, data.shard(0), Problem::Ridge, c, data.n_total());
+        let view = GlobalView {
+            x: vec![0.0; 3],
+            gbar: vec![0.0; 3],
+        };
+        let _ = node.dsvrg_grad_partial(&view);
+        let up = node.dsvrg_inner_round(&view);
+        assert!(matches!(up, Upload::XOnly { .. }));
+        // tau = 0 => m = 2n, 2 evals per inner iteration
+        assert_eq!(node.last_round_iters, 32);
+        assert_eq!(node.last_round_evals, 64);
+    }
+
+    /// With the server iterate equal to the anchor, the PS-SVRG variance
+    /// correction vanishes and the shipped step is exactly
+    /// `-eta * (gbar + 2 lam x)` regardless of the sampled minibatch.
+    #[test]
+    fn ps_svrg_step_reduces_to_anchor_gradient_at_consistency() {
+        let data = toy(2, 30, 4, 3);
+        let mut c = cfg(Algorithm::PsSvrg, 2);
+        c.ps_batch = 7;
+        let mut node = LocalNode::new(0, data.shard(0), Problem::Ridge, c, data.n_total());
+        let x: Vec<f32> = vec![0.1, -0.2, 0.3, 0.0];
+        // snapshot anchors at x and produces the local partial; pretend the
+        // server pooled only this shard (n_global irrelevant to the check)
+        let snap = node.ps_svrg_snapshot(&GlobalView {
+            x: x.clone(),
+            gbar: vec![0.0; 4],
+        });
+        let Upload::GradPartial { gsum, n } = snap else {
+            panic!("wrong upload kind");
+        };
+        let gbar: Vec<f32> = gsum.iter().map(|g| g / n as f32).collect();
+        let view = GlobalView {
+            x: x.clone(),
+            gbar: gbar.clone(),
+        };
+        let up = node.ps_svrg_round(&view);
+        let Upload::GradStep { dx } = up else {
+            panic!("wrong upload kind");
+        };
+        assert_eq!(node.last_round_evals, 14);
+        assert_eq!(node.last_round_iters, 1);
+        for j in 0..4 {
+            let expect = -c.eta * (gbar[j] + 2.0 * c.lambda * x[j]);
+            assert!(
+                (dx[j] - expect).abs() < 1e-6,
+                "j={j}: {} vs {expect}",
+                dx[j]
+            );
+        }
+    }
+
+    #[test]
+    fn easgd_round_pushes_local_iterate() {
+        let data = toy(2, 24, 3, 2);
+        let mut c = cfg(Algorithm::Easgd, 2);
+        c.tau = 8;
+        let mut node = LocalNode::new(0, data.shard(0), Problem::Ridge, c, data.n_total());
+        let up = node.easgd_round();
+        let Upload::ElasticPush { x } = up else {
+            panic!("wrong upload kind");
+        };
+        assert_eq!(x, node.x().to_vec());
+        assert_eq!(node.last_round_evals, 8);
+        // adopt replaces the iterate wholesale
+        node.easgd_adopt(vec![1.0, 2.0, 3.0]);
+        assert_eq!(node.x(), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn dsaga_round_respects_tau() {
+        let data = toy(2, 24, 3, 1);
+        let mut c = cfg(Algorithm::DistSaga, 2);
+        c.tau = 5;
+        let mut node = LocalNode::new(0, data.shard(0), Problem::Ridge, c, data.n_total());
+        let up = node.dsaga_init();
+        assert!(matches!(up, Upload::Delta { .. }));
+        assert_eq!(node.last_round_evals, 24); // table-filling epoch
+        let view = GlobalView {
+            x: vec![0.0; 3],
+            gbar: vec![0.0; 3],
+        };
+        let up = node.dsaga_round(&view);
+        assert!(matches!(up, Upload::Delta { .. }));
+        assert_eq!(node.last_round_evals, 5);
+        assert_eq!(node.last_round_iters, 5);
+    }
+
+    #[test]
+    fn decayed_steps_shrink_progress() {
+        // same node config except decay: the decayed run must move less
+        // over later rounds than the constant-step run
+        let data = toy(1, 64, 4, 12);
+        let mk = |decay: f32| {
+            let mut c = cfg(Algorithm::CentralVrSync, 1);
+            c.decay = decay;
+            let mut node = LocalNode::new(0, data.shard(0), Problem::Ridge, c, data.n_total());
+            let view = GlobalView {
+                x: vec![0.0; 4],
+                gbar: vec![0.0; 4],
+            };
+            for _ in 0..6 {
+                let _ = node.cvr_sync_round(&view);
+            }
+            // every round restarts from view.x = 0, so the endpoint norm of
+            // the final round scales with that round's step size
+            math::norm2(node.x())
+        };
+        let constant = mk(1.0);
+        let decayed = mk(0.5);
+        assert!(
+            decayed < constant,
+            "decay should damp movement: {decayed} vs {constant}"
+        );
+    }
+}

@@ -1,0 +1,160 @@
+//! Wire messages between local nodes and the central server.
+//!
+//! Every distributed algorithm in the paper reduces to two message shapes:
+//! an [`Upload`] (worker -> server) and a [`GlobalView`] (server -> worker
+//! reply/broadcast). Both report their serialized size via `bytes()` —
+//! payload `f32`s at 4 bytes each plus explicit scalar fields — which is
+//! what the simulator charges against the network model and what the
+//! Table 1 / Fig 2 communication-cost comparisons measure. There is no
+//! real serialization yet (both execution engines are in-process); a
+//! socket/RPC transport would encode exactly these enums.
+
+/// Worker -> server message, one variant per protocol interaction.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Upload {
+    /// Zero-payload barrier marker: "I am quiescent" (PS-SVRG snapshot
+    /// freeze). Costs a tag word on the wire, no compute.
+    Ready,
+    /// Asynchronous delta (CVR-Async, D-SAGA): the *change* in the
+    /// worker's local iterate since its last upload, plus the change in
+    /// its (pre-weighted) contribution to the global average gradient.
+    /// Sending changes is what makes the async protocol unbiased under
+    /// heterogeneity (paper §4.2): a fast worker replaces its own prior
+    /// contribution instead of flooding the average.
+    Delta { dx: Vec<f32>, dgbar: Vec<f32> },
+    /// Synchronous full state (CVR-Sync, Algorithm 2): local iterate and
+    /// freshly accumulated epoch-average gradient, for a weighted
+    /// server-side average.
+    State { x: Vec<f32>, gbar: Vec<f32> },
+    /// Unnormalized local gradient sum over the shard at the current
+    /// anchor, plus the shard size (D-SVRG / PS-SVRG snapshot sync);
+    /// the server divides the pooled sum by the pooled count.
+    GradPartial { gsum: Vec<f32>, n: u64 },
+    /// Local iterate only (D-SVRG inner-loop x-average, Algorithm 4).
+    XOnly { x: Vec<f32> },
+    /// EASGD elastic push: the full local iterate; the server answers
+    /// with the elastically updated local value.
+    ElasticPush { x: Vec<f32> },
+    /// PS-SVRG per-iteration step: a pre-scaled parameter update
+    /// `dx = -eta * v` the server applies verbatim (the per-minibatch
+    /// round trip whose bandwidth appetite the paper criticizes).
+    GradStep { dx: Vec<f32> },
+}
+
+impl Upload {
+    /// Serialized payload size in bytes (f32 = 4; u64 = 8; Ready = one
+    /// tag word). Used for the simulator's transfer-time charges and the
+    /// communication-cost counters.
+    pub fn bytes(&self) -> u64 {
+        match self {
+            Upload::Ready => 4,
+            Upload::Delta { dx, dgbar } => 4 * (dx.len() + dgbar.len()) as u64,
+            Upload::State { x, gbar } => 4 * (x.len() + gbar.len()) as u64,
+            Upload::GradPartial { gsum, .. } => 4 * gsum.len() as u64 + 8,
+            Upload::XOnly { x } => 4 * x.len() as u64,
+            Upload::ElasticPush { x } => 4 * x.len() as u64,
+            Upload::GradStep { dx } => 4 * dx.len() as u64,
+        }
+    }
+
+    /// Short label for logs and traces.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Upload::Ready => "ready",
+            Upload::Delta { .. } => "delta",
+            Upload::State { .. } => "state",
+            Upload::GradPartial { .. } => "grad-partial",
+            Upload::XOnly { .. } => "x-only",
+            Upload::ElasticPush { .. } => "elastic-push",
+            Upload::GradStep { .. } => "grad-step",
+        }
+    }
+}
+
+/// Server -> worker reply/broadcast: the global iterate and the global
+/// average-gradient estimate. Algorithms that don't need `gbar` (EASGD)
+/// leave it empty so the byte accounting reflects what they actually ship.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GlobalView {
+    pub x: Vec<f32>,
+    pub gbar: Vec<f32>,
+}
+
+impl GlobalView {
+    /// Serialized payload size in bytes.
+    pub fn bytes(&self) -> u64 {
+        4 * (self.x.len() + self.gbar.len()) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn upload_bytes_accounting() {
+        let d = 7usize;
+        assert_eq!(Upload::Ready.bytes(), 4);
+        let delta = Upload::Delta {
+            dx: vec![0.0; d],
+            dgbar: vec![0.0; d],
+        };
+        assert_eq!(delta.bytes(), (2 * d * 4) as u64);
+        let state = Upload::State {
+            x: vec![0.0; d],
+            gbar: vec![0.0; d],
+        };
+        assert_eq!(state.bytes(), (2 * d * 4) as u64);
+        let partial = Upload::GradPartial {
+            gsum: vec![0.0; d],
+            n: 128,
+        };
+        assert_eq!(partial.bytes(), (d * 4 + 8) as u64);
+        assert_eq!(Upload::XOnly { x: vec![0.0; d] }.bytes(), (d * 4) as u64);
+        assert_eq!(
+            Upload::ElasticPush { x: vec![0.0; d] }.bytes(),
+            (d * 4) as u64
+        );
+        assert_eq!(Upload::GradStep { dx: vec![0.0; d] }.bytes(), (d * 4) as u64);
+    }
+
+    #[test]
+    fn asymmetric_delta_payloads_count_both_halves() {
+        let up = Upload::Delta {
+            dx: vec![0.0; 3],
+            dgbar: vec![0.0; 5],
+        };
+        assert_eq!(up.bytes(), 4 * (3 + 5));
+    }
+
+    #[test]
+    fn view_bytes_counts_both_vectors() {
+        let v = GlobalView {
+            x: vec![0.0; 5],
+            gbar: vec![0.0; 5],
+        };
+        assert_eq!(v.bytes(), 40);
+        let v = GlobalView {
+            x: vec![0.0; 5],
+            gbar: Vec::new(),
+        };
+        assert_eq!(v.bytes(), 20);
+    }
+
+    #[test]
+    fn kinds_are_distinct() {
+        let ups = [
+            Upload::Ready,
+            Upload::Delta { dx: vec![], dgbar: vec![] },
+            Upload::State { x: vec![], gbar: vec![] },
+            Upload::GradPartial { gsum: vec![], n: 0 },
+            Upload::XOnly { x: vec![] },
+            Upload::ElasticPush { x: vec![] },
+            Upload::GradStep { dx: vec![] },
+        ];
+        let mut kinds: Vec<&str> = ups.iter().map(|u| u.kind()).collect();
+        kinds.sort_unstable();
+        kinds.dedup();
+        assert_eq!(kinds.len(), ups.len());
+    }
+}

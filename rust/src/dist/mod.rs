@@ -1,0 +1,96 @@
+//! The distributed protocol core: wire [`messages`], the central
+//! [`server`] state (the paper's "locked" server, §6.2), per-worker
+//! [`local`] nodes implementing every distributed algorithm's round math
+//! (Algorithms 2–5 plus the EASGD / parameter-server-SVRG baselines), and
+//! the [`DistConfig`] hyper-parameter bundle shared by both execution
+//! engines.
+//!
+//! The protocol is deliberately engine-agnostic: a round is
+//! `LocalNode::*_round(&GlobalView) -> Upload`, and the server exposes one
+//! `apply_*` per upload kind. [`crate::exec::threads`] drives these under
+//! a mutex on real threads; [`crate::exec::simulator`] drives the *same*
+//! methods from a discrete-event loop with virtual time — so convergence
+//! behaviour is identical and only the clock differs.
+
+pub mod local;
+pub mod messages;
+pub mod server;
+
+use crate::config::schema::{Algorithm, NetworkModel};
+
+/// Hyper-parameters of a distributed run (both engines).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DistConfig {
+    /// Which distributed algorithm to run.
+    pub algorithm: Algorithm,
+    /// Worker count; must match the shard count of the dataset.
+    pub p: usize,
+    /// Constant step size (the paper uses constant steps throughout).
+    pub eta: f32,
+    /// l2 regularization weight (paper: 1e-4).
+    pub lambda: f32,
+    /// Communication period: local iterations per round for D-SAGA /
+    /// EASGD, inner-loop length for D-SVRG. 0 = algorithm default
+    /// (one local epoch for D-SAGA, 2n for D-SVRG, 16 for EASGD).
+    pub tau: usize,
+    /// Per-worker round budget.
+    pub max_rounds: usize,
+    /// Relative gradient-norm tolerance (paper: 1e-5).
+    pub tol: f64,
+    /// Run seed; worker s uses the split stream `seed -> s`.
+    pub seed: u64,
+    /// Record global metrics every this many server applications
+    /// (async algorithms; barriers record every round). Treated as >= 1;
+    /// 0 is clamped to "record every apply" rather than dividing by zero.
+    pub record_every: usize,
+    /// EASGD elastic coefficient, applied as `beta / p` per exchange.
+    pub easgd_beta: f32,
+    /// Per-round geometric step decay (1.0 = constant, the paper default).
+    pub decay: f32,
+    /// PS-SVRG minibatch size per server round trip.
+    pub ps_batch: usize,
+    /// Latency/bandwidth/service-time/heterogeneity model (simulator).
+    pub network: NetworkModel,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        DistConfig {
+            algorithm: Algorithm::CentralVrSync,
+            p: 2,
+            eta: 0.05,
+            lambda: 1e-4,
+            tau: 0,
+            max_rounds: 100,
+            tol: 1e-5,
+            seed: 0,
+            record_every: 1,
+            easgd_beta: 0.9,
+            decay: 1.0,
+            ps_batch: 10,
+            network: NetworkModel::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_a_sane_paper_config() {
+        let c = DistConfig::default();
+        assert!(c.algorithm.is_distributed());
+        assert!(c.eta > 0.0 && c.lambda >= 0.0);
+        assert_eq!(c.decay, 1.0);
+        assert_eq!(c.tol, 1e-5);
+        assert!(c.network.bandwidth_bps > 0.0);
+    }
+
+    #[test]
+    fn config_is_copy_for_cross_engine_reuse() {
+        let a = DistConfig::default();
+        let b = a; // Copy, not move
+        assert_eq!(a, b);
+    }
+}

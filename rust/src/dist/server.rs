@@ -1,0 +1,322 @@
+//! The central server ("locked" implementation, paper §6.2): one shared
+//! parameter state that only a single update touches at a time. Both
+//! execution engines serialize calls into these methods — the thread
+//! engine behind a mutex, the simulator behind a FIFO service-time model —
+//! so the algorithm algebra here is engine-independent.
+//!
+//! State invariants maintained per protocol:
+//! * delta protocol (CVR-Async, D-SAGA): `x` is the mean of every
+//!   worker's most recently uploaded iterate; `gbar` is the sum of the
+//!   workers' pre-weighted average-gradient contributions;
+//! * sync averages (CVR-Sync, D-SVRG): `x`/`gbar` are weighted averages
+//!   over a complete barrier round;
+//! * gradient partials (D-SVRG, PS-SVRG): `gbar` is the pooled gradient
+//!   sum divided by the pooled sample count — the exact data-part full
+//!   gradient at the anchor;
+//! * EASGD: `x` is the elastic center, moved `beta/p` toward each push;
+//! * PS-SVRG: `x` moves by whatever pre-scaled step a worker sends.
+
+use crate::dist::messages::{GlobalView, Upload};
+use crate::util::math;
+
+/// Central parameter state shared by all workers.
+#[derive(Clone, Debug)]
+pub struct ServerState {
+    /// Global iterate.
+    pub x: Vec<f32>,
+    /// Global average-gradient estimate (data part; no regularizer).
+    pub gbar: Vec<f32>,
+    /// Worker count the protocol averages over.
+    p: usize,
+    /// EASGD elastic coefficient (applied as `beta / p` per push).
+    easgd_beta: f32,
+    /// Server-side barrier inbox (transport hook: the in-process engines
+    /// collect barriers themselves; a socket transport deposits here).
+    inbox: Vec<Option<Upload>>,
+    inbox_count: usize,
+    /// Total updates applied (diagnostics).
+    pub updates: u64,
+}
+
+impl ServerState {
+    pub fn new(d: usize, p: usize, easgd_beta: f32) -> ServerState {
+        assert!(p >= 1, "need at least one worker");
+        ServerState {
+            x: vec![0.0; d],
+            gbar: vec![0.0; d],
+            p,
+            easgd_beta,
+            inbox: (0..p).map(|_| None).collect(),
+            inbox_count: 0,
+            updates: 0,
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Snapshot of the global state for a reply/broadcast.
+    pub fn view(&self) -> GlobalView {
+        GlobalView {
+            x: self.x.clone(),
+            gbar: self.gbar.clone(),
+        }
+    }
+
+    /// Async delta application (CVR-Async / D-SAGA, Algorithms 3 & 5).
+    ///
+    /// `dx` is a raw local-iterate change and is averaged over `p`, so the
+    /// server `x` stays the mean of the workers' latest iterates no matter
+    /// the arrival order. `dgbar` is a *pre-weighted* contribution change
+    /// (the worker scales by its shard weight, or sends disjoint table
+    /// increments) and is added as-is.
+    pub fn apply_delta(&mut self, up: &Upload) {
+        let Upload::Delta { dx, dgbar } = up else {
+            panic!("apply_delta expects Upload::Delta, got {}", up.kind());
+        };
+        math::axpy(1.0 / self.p as f32, dx, &mut self.x);
+        math::add_assign(&mut self.gbar, dgbar);
+        self.updates += 1;
+    }
+
+    /// Synchronous weighted average of full worker states (CVR-Sync,
+    /// Algorithm 2): `x = sum_s w_s x_s`, `gbar = sum_s w_s gtilde_s`,
+    /// with `w_s = n_s / n` so `gbar` is the exact global table average.
+    pub fn apply_sync_average(&mut self, uploads: &[Upload], weights: &[f64]) {
+        assert_eq!(uploads.len(), weights.len(), "one weight per upload");
+        math::zero(&mut self.x);
+        math::zero(&mut self.gbar);
+        for (up, &w) in uploads.iter().zip(weights) {
+            let Upload::State { x, gbar } = up else {
+                panic!("apply_sync_average expects Upload::State, got {}", up.kind());
+            };
+            math::axpy(w as f32, x, &mut self.x);
+            math::axpy(w as f32, gbar, &mut self.gbar);
+        }
+        self.updates += 1;
+    }
+
+    /// EASGD elastic exchange: moves the center `beta/p` toward the pushed
+    /// local iterate and returns the symmetrically updated local value.
+    /// The `1/p` scaling keeps the center stable as workers multiply; the
+    /// sum `x_center + x_local` is conserved exactly.
+    pub fn apply_elastic(&mut self, up: &Upload) -> Vec<f32> {
+        let Upload::ElasticPush { x: local } = up else {
+            panic!("apply_elastic expects Upload::ElasticPush, got {}", up.kind());
+        };
+        assert_eq!(local.len(), self.x.len());
+        let a = self.easgd_beta / self.p as f32;
+        let mut out = vec![0.0f32; self.x.len()];
+        for j in 0..self.x.len() {
+            let e = a * (local[j] - self.x[j]);
+            self.x[j] += e;
+            out[j] = local[j] - e;
+        }
+        self.updates += 1;
+        out
+    }
+
+    /// Barrier combine of local gradient partials (D-SVRG line 5 /
+    /// PS-SVRG snapshot): `gbar = (sum_s gsum_s) / (sum_s n_s)` — the
+    /// exact data-part full gradient at the anchor. `x` (the anchor) is
+    /// left untouched.
+    pub fn apply_grad_partials(&mut self, uploads: &[Upload]) {
+        math::zero(&mut self.gbar);
+        let mut n_total = 0u64;
+        for up in uploads {
+            let Upload::GradPartial { gsum, n } = up else {
+                panic!("apply_grad_partials expects Upload::GradPartial, got {}", up.kind());
+            };
+            math::add_assign(&mut self.gbar, gsum);
+            n_total += *n;
+        }
+        if n_total > 0 {
+            math::scal(1.0 / n_total as f32, &mut self.gbar);
+        }
+        self.updates += 1;
+    }
+
+    /// Barrier combine of inner-loop endpoints (D-SVRG line 11):
+    /// `x = sum_s w_s x_s`; `gbar` keeps the anchor gradient until the
+    /// next partial sync overwrites it.
+    pub fn apply_x_average(&mut self, uploads: &[Upload], weights: &[f64]) {
+        assert_eq!(uploads.len(), weights.len(), "one weight per upload");
+        math::zero(&mut self.x);
+        for (up, &w) in uploads.iter().zip(weights) {
+            let Upload::XOnly { x } = up else {
+                panic!("apply_x_average expects Upload::XOnly, got {}", up.kind());
+            };
+            math::axpy(w as f32, x, &mut self.x);
+        }
+        self.updates += 1;
+    }
+
+    /// PS-SVRG parameter-server step: apply a worker's pre-scaled update
+    /// `dx = -eta * v` verbatim.
+    pub fn apply_grad_step(&mut self, up: &Upload) {
+        let Upload::GradStep { dx } = up else {
+            panic!("apply_grad_step expects Upload::GradStep, got {}", up.kind());
+        };
+        math::add_assign(&mut self.x, dx);
+        self.updates += 1;
+    }
+
+    /// Deposit an upload into the server-side barrier inbox; returns the
+    /// complete round (in worker order) once all `p` have arrived. The
+    /// in-process engines run their own barrier collection, so today this
+    /// is exercised by tests — it is the collection point a socket/RPC
+    /// transport would use.
+    pub fn deposit(&mut self, s: usize, up: Upload) -> Option<Vec<Upload>> {
+        assert!(self.inbox[s].is_none(), "double deposit from worker {s}");
+        self.inbox[s] = Some(up);
+        self.inbox_count += 1;
+        if self.inbox_count == self.p {
+            self.inbox_count = 0;
+            Some(self.inbox.iter_mut().map(|u| u.take().unwrap()).collect())
+        } else {
+            None
+        }
+    }
+
+    /// Uploads currently waiting in the barrier inbox.
+    pub fn pending_count(&self) -> usize {
+        self.inbox_count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: &[f32], b: &[f32], tol: f32) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| (x - y).abs() <= tol)
+    }
+
+    #[test]
+    fn delta_keeps_x_at_mean_of_latest() {
+        let mut s = ServerState::new(2, 4, 0.9);
+        // worker 0 moves to [4, 0], worker 1 to [0, 8]; others stay at 0
+        s.apply_delta(&Upload::Delta { dx: vec![4.0, 0.0], dgbar: vec![0.0, 0.0] });
+        s.apply_delta(&Upload::Delta { dx: vec![0.0, 8.0], dgbar: vec![0.0, 0.0] });
+        assert!(close(&s.x, &[1.0, 2.0], 1e-6), "{:?}", s.x);
+        // worker 0 replaces its contribution: moves from [4,0] to [2,0]
+        s.apply_delta(&Upload::Delta { dx: vec![-2.0, 0.0], dgbar: vec![0.0, 0.0] });
+        assert!(close(&s.x, &[0.5, 2.0], 1e-6), "{:?}", s.x);
+        assert_eq!(s.updates, 3);
+    }
+
+    #[test]
+    fn delta_adds_gbar_contributions_unscaled() {
+        let mut s = ServerState::new(2, 4, 0.9);
+        s.apply_delta(&Upload::Delta { dx: vec![0.0, 0.0], dgbar: vec![1.0, -1.0] });
+        s.apply_delta(&Upload::Delta { dx: vec![0.0, 0.0], dgbar: vec![0.5, 0.5] });
+        assert!(close(&s.gbar, &[1.5, -0.5], 1e-6), "{:?}", s.gbar);
+    }
+
+    #[test]
+    fn sync_average_is_weighted() {
+        let mut s = ServerState::new(2, 2, 0.9);
+        let ups = vec![
+            Upload::State { x: vec![1.0, 0.0], gbar: vec![2.0, 0.0] },
+            Upload::State { x: vec![0.0, 1.0], gbar: vec![0.0, 2.0] },
+        ];
+        // shard weights 0.75 / 0.25
+        s.apply_sync_average(&ups, &[0.75, 0.25]);
+        assert!(close(&s.x, &[0.75, 0.25], 1e-6), "{:?}", s.x);
+        assert!(close(&s.gbar, &[1.5, 0.5], 1e-6), "{:?}", s.gbar);
+    }
+
+    #[test]
+    fn grad_partials_pool_to_global_average() {
+        let mut s = ServerState::new(2, 2, 0.9);
+        s.x.copy_from_slice(&[3.0, -3.0]);
+        let ups = vec![
+            Upload::GradPartial { gsum: vec![10.0, 0.0], n: 10 },
+            Upload::GradPartial { gsum: vec![0.0, 30.0], n: 30 },
+        ];
+        s.apply_grad_partials(&ups);
+        // pooled: [10, 30] / 40
+        assert!(close(&s.gbar, &[0.25, 0.75], 1e-6), "{:?}", s.gbar);
+        // anchor untouched
+        assert!(close(&s.x, &[3.0, -3.0], 0.0), "{:?}", s.x);
+    }
+
+    #[test]
+    fn x_average_leaves_gbar() {
+        let mut s = ServerState::new(2, 2, 0.9);
+        s.gbar.copy_from_slice(&[7.0, 7.0]);
+        let ups = vec![
+            Upload::XOnly { x: vec![2.0, 0.0] },
+            Upload::XOnly { x: vec![0.0, 4.0] },
+        ];
+        s.apply_x_average(&ups, &[0.5, 0.5]);
+        assert!(close(&s.x, &[1.0, 2.0], 1e-6), "{:?}", s.x);
+        assert!(close(&s.gbar, &[7.0, 7.0], 0.0), "{:?}", s.gbar);
+    }
+
+    #[test]
+    fn elastic_moves_center_by_beta_over_p() {
+        let p = 3;
+        let beta = 0.9f32;
+        let mut s = ServerState::new(1, p, beta);
+        let out = s.apply_elastic(&Upload::ElasticPush { x: vec![1.0] });
+        let a = beta / p as f32;
+        assert!((s.x[0] - a).abs() < 1e-6, "{}", s.x[0]);
+        assert!((out[0] - (1.0 - a)).abs() < 1e-6, "{}", out[0]);
+        // conservation
+        assert!((s.x[0] + out[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn grad_step_applies_verbatim() {
+        let mut s = ServerState::new(2, 2, 0.9);
+        s.apply_grad_step(&Upload::GradStep { dx: vec![-0.5, 0.25] });
+        assert!(close(&s.x, &[-0.5, 0.25], 0.0), "{:?}", s.x);
+    }
+
+    #[test]
+    fn deposit_releases_round_in_worker_order() {
+        let mut s = ServerState::new(1, 3, 0.9);
+        assert_eq!(s.pending_count(), 0);
+        assert!(s.deposit(2, Upload::XOnly { x: vec![2.0] }).is_none());
+        assert!(s.deposit(0, Upload::XOnly { x: vec![0.0] }).is_none());
+        assert_eq!(s.pending_count(), 2);
+        let round = s.deposit(1, Upload::XOnly { x: vec![1.0] }).unwrap();
+        assert_eq!(s.pending_count(), 0);
+        let xs: Vec<f32> = round
+            .iter()
+            .map(|u| match u {
+                Upload::XOnly { x } => x[0],
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(xs, vec![0.0, 1.0, 2.0]);
+        // inbox is reusable for the next round
+        assert!(s.deposit(0, Upload::Ready).is_none());
+        assert_eq!(s.pending_count(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "double deposit")]
+    fn double_deposit_panics() {
+        let mut s = ServerState::new(1, 2, 0.9);
+        let _ = s.deposit(0, Upload::Ready);
+        let _ = s.deposit(0, Upload::Ready);
+    }
+
+    #[test]
+    fn view_snapshots_state() {
+        let mut s = ServerState::new(2, 2, 0.9);
+        s.x.copy_from_slice(&[1.0, 2.0]);
+        s.gbar.copy_from_slice(&[3.0, 4.0]);
+        let v = s.view();
+        assert_eq!(v.x, vec![1.0, 2.0]);
+        assert_eq!(v.gbar, vec![3.0, 4.0]);
+        assert_eq!(v.bytes(), 16);
+    }
+}

@@ -145,7 +145,7 @@ impl<'a> Shared<'a> {
             a => panic!("async apply for {a:?}"),
         };
         let n = self.applies.fetch_add(1, Ordering::Relaxed) + 1;
-        if n % self.cfg.record_every as u64 == 0 {
+        if n % (self.cfg.record_every as u64).max(1) == 0 {
             // record with the server still locked: consistent snapshot
             self.record(&view.x);
         }

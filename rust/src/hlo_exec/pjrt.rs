@@ -1,0 +1,307 @@
+//! [`HloEngine`]: the AOT-compiled implementation of
+//! [`crate::exec::engine::EpochEngine`].
+//!
+//! Every epoch primitive dispatches to the matching HLO artifact
+//! (`python/compile/model.py` lowered by `aot.py`), so the full L1+L2
+//! stack — Pallas kernel included — executes under the Rust coordinator
+//! with Python nowhere at runtime. Artifacts are shape-specialized per
+//! (fn, problem, n, d); shard feature/label literals are cached per shard
+//! so steady-state epochs upload only the small mutable state (x, alpha,
+//! gbar, indices).
+//!
+//! Index-sequence primitives (`sgd_epoch`, `svrg_inner`, `saga_epoch`)
+//! are compiled for sequences of length n (one epoch); calls with other
+//! lengths are rejected with a clear error rather than silently padded.
+
+use anyhow::Result;
+
+use crate::data::dataset::Dataset;
+use crate::exec::engine::EpochEngine;
+use crate::model::glm::Problem;
+use crate::runtime::engine::PjrtEngine;
+use crate::runtime::literal as lit;
+
+pub struct HloEngine {
+    rt: PjrtEngine,
+    /// Cached (features, labels) literals keyed by the dataset's
+    /// process-unique id (raw pointers are unsound: the allocator reuses
+    /// freed buffers).
+    shard_cache: std::collections::HashMap<u64, (xla::Literal, xla::Literal)>,
+}
+
+impl HloEngine {
+    /// Whether this build can actually execute HLO artifacts (true: the
+    /// `pjrt` feature is on).
+    pub const AVAILABLE: bool = true;
+
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<HloEngine> {
+        Ok(HloEngine {
+            rt: PjrtEngine::new(artifact_dir)?,
+            shard_cache: std::collections::HashMap::new(),
+        })
+    }
+
+    /// Default artifact directory; see `hlo_exec::default_artifact_dir`.
+    pub fn default_dir() -> String {
+        super::default_artifact_dir()
+    }
+
+    pub fn runtime(&self) -> &PjrtEngine {
+        &self.rt
+    }
+
+    fn shard_literals(&mut self, shard: &Dataset) -> Result<(xla::Literal, xla::Literal)> {
+        let key = shard.id();
+        if !self.shard_cache.contains_key(&key) {
+            let a = lit::f32_mat(shard.features_flat(), shard.n(), shard.d())?;
+            let b = lit::f32_vec(shard.labels());
+            self.shard_cache.insert(key, (a, b));
+        }
+        let (a, b) = self.shard_cache.get(&key).unwrap();
+        // Literal clones are cheap-ish (host copies) but still O(n d); to
+        // avoid them we re-create references by cloning only once per call
+        // site via try_clone semantics. The xla crate Literal is not Copy,
+        // so we clone here; the compile cache keeps this off the critical
+        // path relative to PJRT execution itself.
+        Ok((a.clone(), b.clone()))
+    }
+
+    fn check_epoch_len(&self, what: &str, got: usize, n: usize) -> Result<()> {
+        anyhow::ensure!(
+            got == n,
+            "HLO {what} is specialized for index sequences of length n={n}, got {got}; \
+             use the native engine or recompile artifacts for this tau"
+        );
+        Ok(())
+    }
+}
+
+impl EpochEngine for HloEngine {
+    fn centralvr_epoch(
+        &mut self,
+        p: Problem,
+        shard: &Dataset,
+        perm: &[u32],
+        x: &mut [f32],
+        alpha: &mut [f32],
+        gbar: &[f32],
+        gtilde_out: &mut [f32],
+        eta: f32,
+        lam: f32,
+    ) {
+        let (n, d) = (shard.n(), shard.d());
+        self.check_epoch_len("centralvr_epoch", perm.len(), n).unwrap();
+        let (a, b) = self.shard_literals(shard).unwrap();
+        let outs = self
+            .rt
+            .call(
+                "centralvr_epoch",
+                p.name(),
+                n,
+                d,
+                &[
+                    a,
+                    b,
+                    lit::i32_vec(perm),
+                    lit::f32_vec(x),
+                    lit::f32_vec(alpha),
+                    lit::f32_vec(gbar),
+                    lit::f32_scalar(eta),
+                    lit::f32_scalar(lam),
+                ],
+            )
+            .expect("centralvr_epoch artifact");
+        x.copy_from_slice(&lit::to_f32_vec(&outs[0]).unwrap());
+        alpha.copy_from_slice(&lit::to_f32_vec(&outs[1]).unwrap());
+        gtilde_out.copy_from_slice(&lit::to_f32_vec(&outs[2]).unwrap());
+    }
+
+    fn sgd_init_epoch(
+        &mut self,
+        p: Problem,
+        shard: &Dataset,
+        perm: &[u32],
+        x: &mut [f32],
+        alpha: &mut [f32],
+        gtilde_out: &mut [f32],
+        eta: f32,
+        lam: f32,
+    ) {
+        let (n, d) = (shard.n(), shard.d());
+        self.check_epoch_len("sgd_init_epoch", perm.len(), n).unwrap();
+        let (a, b) = self.shard_literals(shard).unwrap();
+        let outs = self
+            .rt
+            .call(
+                "sgd_init_epoch",
+                p.name(),
+                n,
+                d,
+                &[
+                    a,
+                    b,
+                    lit::i32_vec(perm),
+                    lit::f32_vec(x),
+                    lit::f32_scalar(eta),
+                    lit::f32_scalar(lam),
+                ],
+            )
+            .expect("sgd_init_epoch artifact");
+        x.copy_from_slice(&lit::to_f32_vec(&outs[0]).unwrap());
+        alpha.copy_from_slice(&lit::to_f32_vec(&outs[1]).unwrap());
+        gtilde_out.copy_from_slice(&lit::to_f32_vec(&outs[2]).unwrap());
+    }
+
+    fn sgd_epoch(
+        &mut self,
+        p: Problem,
+        shard: &Dataset,
+        idx: &[u32],
+        x: &mut [f32],
+        eta: f32,
+        lam: f32,
+    ) {
+        let (n, d) = (shard.n(), shard.d());
+        self.check_epoch_len("sgd_epoch", idx.len(), n).unwrap();
+        let (a, b) = self.shard_literals(shard).unwrap();
+        let outs = self
+            .rt
+            .call(
+                "sgd_epoch",
+                p.name(),
+                n,
+                d,
+                &[
+                    a,
+                    b,
+                    lit::i32_vec(idx),
+                    lit::f32_vec(x),
+                    lit::f32_scalar(eta),
+                    lit::f32_scalar(lam),
+                ],
+            )
+            .expect("sgd_epoch artifact");
+        x.copy_from_slice(&lit::to_f32_vec(&outs[0]).unwrap());
+    }
+
+    fn svrg_inner(
+        &mut self,
+        p: Problem,
+        shard: &Dataset,
+        idx: &[u32],
+        x: &mut [f32],
+        xbar: &[f32],
+        gbar: &[f32],
+        eta: f32,
+        lam: f32,
+    ) {
+        let (n, d) = (shard.n(), shard.d());
+        self.check_epoch_len("svrg_inner", idx.len(), n).unwrap();
+        let (a, b) = self.shard_literals(shard).unwrap();
+        let outs = self
+            .rt
+            .call(
+                "svrg_inner",
+                p.name(),
+                n,
+                d,
+                &[
+                    a,
+                    b,
+                    lit::i32_vec(idx),
+                    lit::f32_vec(x),
+                    lit::f32_vec(xbar),
+                    lit::f32_vec(gbar),
+                    lit::f32_scalar(eta),
+                    lit::f32_scalar(lam),
+                ],
+            )
+            .expect("svrg_inner artifact");
+        x.copy_from_slice(&lit::to_f32_vec(&outs[0]).unwrap());
+    }
+
+    fn saga_epoch(
+        &mut self,
+        p: Problem,
+        shard: &Dataset,
+        idx: &[u32],
+        x: &mut [f32],
+        alpha: &mut [f32],
+        gbar: &mut [f32],
+        eta: f32,
+        lam: f32,
+        n_inv: f32,
+    ) {
+        let (n, d) = (shard.n(), shard.d());
+        self.check_epoch_len("saga_epoch", idx.len(), n).unwrap();
+        let (a, b) = self.shard_literals(shard).unwrap();
+        let outs = self
+            .rt
+            .call(
+                "saga_epoch",
+                p.name(),
+                n,
+                d,
+                &[
+                    a,
+                    b,
+                    lit::i32_vec(idx),
+                    lit::f32_vec(x),
+                    lit::f32_vec(alpha),
+                    lit::f32_vec(gbar),
+                    lit::f32_scalar(eta),
+                    lit::f32_scalar(lam),
+                    lit::f32_scalar(n_inv),
+                ],
+            )
+            .expect("saga_epoch artifact");
+        x.copy_from_slice(&lit::to_f32_vec(&outs[0]).unwrap());
+        alpha.copy_from_slice(&lit::to_f32_vec(&outs[1]).unwrap());
+        gbar.copy_from_slice(&lit::to_f32_vec(&outs[2]).unwrap());
+    }
+
+    fn full_gradient(
+        &mut self,
+        p: Problem,
+        shard: &Dataset,
+        x: &[f32],
+        lam: f32,
+        out: &mut [f32],
+    ) {
+        let (n, d) = (shard.n(), shard.d());
+        let (a, b) = self.shard_literals(shard).unwrap();
+        let outs = self
+            .rt
+            .call(
+                "full_gradient",
+                p.name(),
+                n,
+                d,
+                &[a, b, lit::f32_vec(x), lit::f32_scalar(lam)],
+            )
+            .expect("full_gradient artifact");
+        out.copy_from_slice(&lit::to_f32_vec(&outs[0]).unwrap());
+    }
+
+    fn metrics_partial(
+        &mut self,
+        p: Problem,
+        shard: &Dataset,
+        x: &[f32],
+        gsum: &mut [f32],
+    ) -> f64 {
+        let (n, d) = (shard.n(), shard.d());
+        let (a, b) = self.shard_literals(shard).unwrap();
+        let outs = self
+            .rt
+            .call("metrics_partial", p.name(), n, d, &[a, b, lit::f32_vec(x)])
+            .expect("metrics_partial artifact");
+        let loss = lit::to_f32_scalar(&outs[0]).unwrap() as f64;
+        gsum.copy_from_slice(&lit::to_f32_vec(&outs[1]).unwrap());
+        loss
+    }
+
+    fn label(&self) -> &'static str {
+        "hlo"
+    }
+}

@@ -4,10 +4,19 @@
 //! Interchange is HLO TEXT — jax >= 0.5 serializes HloModuleProto with
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md §1).
+//!
+//! The artifact [`Manifest`] is pure Rust and always available; the PJRT
+//! execution engine itself needs the `xla` crate and an XLA toolchain, so
+//! [`engine`]/[`literal`] are gated behind the off-by-default `pjrt`
+//! feature (builds without it get a stub `hlo_exec::HloEngine` that
+//! reports the missing runtime instead of failing to link).
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod engine;
+#[cfg(feature = "pjrt")]
 pub mod literal;
 
 pub use artifacts::{ArtifactEntry, Manifest};
+#[cfg(feature = "pjrt")]
 pub use engine::PjrtEngine;

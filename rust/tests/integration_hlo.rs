@@ -18,6 +18,10 @@ const N: usize = 256;
 const D: usize = 16;
 
 fn artifacts_dir() -> Option<String> {
+    if !HloEngine::AVAILABLE {
+        eprintln!("SKIP: built without the `pjrt` feature; no HLO runtime");
+        return None;
+    }
     let dir = std::env::var("CENTRALVR_ARTIFACTS").unwrap_or_else(|_| {
         // tests run from the crate root
         "artifacts".to_string()

@@ -242,6 +242,52 @@ fn prop_sampling_validity() {
     );
 }
 
+/// Applying the same multiset of async deltas in any order leaves the
+/// server at the same iterate: `apply_delta` is pure accumulation with no
+/// order-sensitive state, which is what makes the "locked" async server
+/// correct under arbitrary arrival interleavings (§6.2).
+#[test]
+fn prop_apply_delta_is_order_independent() {
+    forall(
+        "apply_delta order independence",
+        |r: &mut Pcg64| {
+            let p = gen_usize(r, 2..6);
+            let d = gen_usize(r, 1..8);
+            let k = gen_usize(r, 2..20);
+            let deltas: Vec<Vec<f32>> = (0..k)
+                .map(|_| (0..d).map(|_| gen_f32(r, -1.0, 1.0)).collect())
+                .collect();
+            let mut order: Vec<usize> = (0..k).collect();
+            r.shuffle(&mut order);
+            (p, deltas, order)
+        },
+        |(p, deltas, order)| {
+            let d = deltas[0].len();
+            let mut forward = ServerState::new(d, *p, 0.9);
+            for dx in deltas {
+                forward.apply_delta(&Upload::Delta {
+                    dx: dx.clone(),
+                    dgbar: vec![0.0; d],
+                });
+            }
+            let mut permuted = ServerState::new(d, *p, 0.9);
+            for &i in order {
+                permuted.apply_delta(&Upload::Delta {
+                    dx: deltas[i].clone(),
+                    dgbar: vec![0.0; d],
+                });
+            }
+            for j in 0..d {
+                let (a, b) = (forward.x[j], permuted.x[j]);
+                if (a - b).abs() > 1e-4 {
+                    return Err(format!("x[{j}] differs: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// EASGD elastic update conserves the sum x_center + x_local.
 #[test]
 fn prop_elastic_update_conserves_sum() {
