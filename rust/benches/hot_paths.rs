@@ -96,6 +96,68 @@ fn main() {
         b.metric("vr_step_fused_speedup", naive.median / fused.median, "x");
     }
 
+    // --- CSR vs dense CentralVR epoch at rcv1-like 1% density ---
+    // The ISSUE-3 acceptance workload: n=50k, d=5k, 1% density. The dense
+    // twin materializes a 50k x 5k f32 matrix (~1 GB); both epochs run the
+    // identical update sequence, so the endpoint iterates double as the
+    // CSR-vs-dense parity check at full scale.
+    {
+        let (n, d) = (50_000usize, 5_000usize);
+        let sp = synth::sparse_classification(n, d, 0.01, 7);
+        let dn = sp.to_dense();
+        let mut eng = NativeEngine::new();
+        let perm: Vec<u32> = (0..n as u32).collect();
+        let gbar = vec![0.0f32; d];
+
+        let mut x_sp = vec![0.0f32; d];
+        let mut alpha_sp = vec![0.0f32; n];
+        let mut gtilde = vec![0.0f32; d];
+        let s_sp = b.case("centralvr_epoch_csr_n50k_d5k_1pct", 1, 3, || {
+            x_sp.fill(0.0);
+            alpha_sp.fill(0.0);
+            eng.centralvr_epoch(
+                Problem::Logistic,
+                &sp,
+                &perm,
+                &mut x_sp,
+                &mut alpha_sp,
+                &gbar,
+                &mut gtilde,
+                1e-3,
+                1e-4,
+            );
+            black_box(x_sp[0])
+        });
+        let mut x_dn = vec![0.0f32; d];
+        let mut alpha_dn = vec![0.0f32; n];
+        let s_dn = b.case("centralvr_epoch_dense_n50k_d5k_1pct", 1, 3, || {
+            x_dn.fill(0.0);
+            alpha_dn.fill(0.0);
+            eng.centralvr_epoch(
+                Problem::Logistic,
+                &dn,
+                &perm,
+                &mut x_dn,
+                &mut alpha_dn,
+                &gbar,
+                &mut gtilde,
+                1e-3,
+                1e-4,
+            );
+            black_box(x_dn[0])
+        });
+        b.metric("csr_vs_dense_epoch_speedup", s_dn.median / s_sp.median, "x");
+        b.metric(
+            "csr_ns_per_grad_d5k_1pct",
+            s_sp.median * 1e9 / n as f64,
+            "ns/grad",
+        );
+        // parity of the final-run iterates (both start from x = 0, same perm)
+        let diff = math::max_abs_diff(&x_sp, &x_dn) as f64;
+        b.metric("csr_vs_dense_epoch_max_abs_diff", diff, "max|dx|");
+        assert!(diff < 1e-5, "CSR epoch drifted from densified run: {diff}");
+    }
+
     // --- HLO engine epoch (AOT path dispatch cost) ---
     let dir = HloEngine::default_dir();
     if HloEngine::AVAILABLE && std::path::Path::new(&dir).join("manifest.json").exists() {

@@ -169,7 +169,7 @@ mod tests {
     }
 
     #[test]
-    fn linear_convergence_contraction(){
+    fn linear_convergence_contraction() {
         // Theorem 1: per-epoch contraction of the gradient norm should be
         // roughly geometric once the table is warm.
         let ds = synth::toy_least_squares(512, 6, 5);

@@ -1,9 +1,26 @@
-//! Dense row-major dataset container.
+//! Storage-polymorphic dataset container: dense row-major and CSR.
 //!
-//! Rows are samples `a_i` (length `d`), `labels[i]` is `b_i`. Row-major
-//! layout keeps the per-sample gradient loop streaming contiguous memory —
-//! the same access pattern the L1 Pallas kernel gets by pre-permuting the
-//! shard (DESIGN.md §Hardware-Adaptation).
+//! Rows are samples `a_i` (length `d`), `labels[i]` is `b_i`. Two feature
+//! layouts live behind the same [`Dataset`] surface:
+//!
+//! * **Dense row-major** ([`Features::Dense`]) — one contiguous `n * d`
+//!   buffer. The per-sample gradient loop streams contiguous memory (the
+//!   same access pattern the L1 Pallas kernel gets by pre-permuting the
+//!   shard). This wins for tabular workloads like SUSY/IJCNN1 where most
+//!   features are populated (density ≳ 25%), and it is the only layout the
+//!   AOT HLO artifacts accept.
+//! * **CSR** ([`Features::Csr`]) — `indptr`/`indices`/`values` arrays, row
+//!   `i` owning `indices[indptr[i]..indptr[i+1]]`. This wins for rcv1-style
+//!   text workloads where nnz per row is a small fraction of `d`: the
+//!   per-sample `dot` and the data-part gradient updates touch only the
+//!   stored entries, so the hot path scales with nnz instead of `d`
+//!   (see `util::math::{dot_sparse, vr_step_sparse}`).
+//!
+//! Consumers that need per-sample math take a [`RowView`] from
+//! [`Dataset::row_view`] and dispatch through the `*_row` kernels in
+//! `util::math`; `row`/`row_mut`/`features_flat` remain for dense-only
+//! paths (generators, the HLO literal upload) and panic on CSR storage
+//! with a pointer to [`Dataset::to_dense`].
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -13,10 +30,60 @@ use anyhow::{ensure, Result};
 /// freed buffers — raw pointers are NOT sufficient identity).
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 
-/// A dense supervised dataset: features `A (n x d)` + labels `b (n)`.
+/// Feature storage: dense row-major or CSR.
+#[derive(Clone, Debug)]
+pub enum Features {
+    /// Flat row-major `n * d` buffer.
+    Dense(Vec<f32>),
+    /// Compressed sparse rows: row `i` owns the half-open range
+    /// `indptr[i]..indptr[i+1]` of `indices`/`values`.
+    Csr {
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    },
+}
+
+/// Borrowed view of one sample's features, matching the storage layout.
+#[derive(Clone, Copy, Debug)]
+pub enum RowView<'a> {
+    /// Full `d`-length slice.
+    Dense(&'a [f32]),
+    /// Parallel index/value slices of the row's stored entries.
+    Sparse {
+        indices: &'a [u32],
+        values: &'a [f32],
+    },
+}
+
+impl<'a> RowView<'a> {
+    /// Number of stored entries (dense: `d`, sparse: nnz of the row).
+    pub fn stored_len(&self) -> usize {
+        match self {
+            RowView::Dense(r) => r.len(),
+            RowView::Sparse { values, .. } => values.len(),
+        }
+    }
+
+    /// Materialize as a dense `d`-length vector (tests / diagnostics).
+    pub fn to_dense(&self, d: usize) -> Vec<f32> {
+        match self {
+            RowView::Dense(r) => r.to_vec(),
+            RowView::Sparse { indices, values } => {
+                let mut out = vec![0.0f32; d];
+                for (&j, &v) in indices.iter().zip(values.iter()) {
+                    out[j as usize] += v;
+                }
+                out
+            }
+        }
+    }
+}
+
+/// A supervised dataset: features `A (n x d)` + labels `b (n)`.
 #[derive(Debug)]
 pub struct Dataset {
-    features: Vec<f32>,
+    features: Features,
     labels: Vec<f32>,
     n: usize,
     d: usize,
@@ -37,7 +104,7 @@ impl Clone for Dataset {
 }
 
 impl Dataset {
-    /// Build from a flat row-major feature buffer.
+    /// Build from a flat row-major feature buffer (dense storage).
     pub fn from_flat(features: Vec<f32>, labels: Vec<f32>, d: usize) -> Result<Self> {
         ensure!(d > 0, "d must be positive");
         ensure!(
@@ -54,7 +121,7 @@ impl Dataset {
             n
         );
         Ok(Dataset {
-            features,
+            features: Features::Dense(features),
             labels,
             n,
             d,
@@ -62,10 +129,103 @@ impl Dataset {
         })
     }
 
-    /// Allocate an all-zeros dataset (filled by generators).
+    /// Build from CSR arrays. Validates the indptr invariants
+    /// (`indptr[0] == 0`, monotone non-decreasing, `indptr[n] == nnz`) and
+    /// column bounds. Rows are canonicalized to sorted, duplicate-free
+    /// form (duplicate columns coalesced by summing), so per-entry passes
+    /// (`feature_stats`, `nnz`, wire encoders) always agree with the row's
+    /// mathematical content; already-canonical input (the common case) is
+    /// taken as-is after a cheap scan.
+    pub fn from_csr(
+        mut indptr: Vec<usize>,
+        mut indices: Vec<u32>,
+        mut values: Vec<f32>,
+        labels: Vec<f32>,
+        d: usize,
+    ) -> Result<Self> {
+        ensure!(d > 0, "d must be positive");
+        ensure!(!indptr.is_empty(), "indptr must have n+1 entries");
+        let n = indptr.len() - 1;
+        ensure!(
+            labels.len() == n,
+            "labels length {} != n {}",
+            labels.len(),
+            n
+        );
+        ensure!(indptr[0] == 0, "indptr[0] must be 0, got {}", indptr[0]);
+        ensure!(
+            indptr[n] == indices.len(),
+            "indptr[n]={} != indices.len()={}",
+            indptr[n],
+            indices.len()
+        );
+        ensure!(
+            indices.len() == values.len(),
+            "indices/values length mismatch: {} vs {}",
+            indices.len(),
+            values.len()
+        );
+        ensure!(
+            indptr.windows(2).all(|w| w[0] <= w[1]),
+            "indptr must be monotone non-decreasing"
+        );
+        ensure!(
+            indices.iter().all(|&j| (j as usize) < d),
+            "column index out of bounds for d={d}"
+        );
+        let canonical = (0..n).all(|i| {
+            indices[indptr[i]..indptr[i + 1]]
+                .windows(2)
+                .all(|w| w[0] < w[1])
+        });
+        if !canonical {
+            let mut new_indptr = Vec::with_capacity(n + 1);
+            new_indptr.push(0usize);
+            let mut new_indices: Vec<u32> = Vec::with_capacity(indices.len());
+            let mut new_values: Vec<f32> = Vec::with_capacity(values.len());
+            let mut row: Vec<(u32, f32)> = Vec::new();
+            for i in 0..n {
+                let (lo, hi) = (indptr[i], indptr[i + 1]);
+                row.clear();
+                row.extend(
+                    indices[lo..hi]
+                        .iter()
+                        .copied()
+                        .zip(values[lo..hi].iter().copied()),
+                );
+                row.sort_unstable_by_key(|&(j, _)| j);
+                let row_start = new_indices.len();
+                for &(j, v) in &row {
+                    if new_indices.len() > row_start && *new_indices.last().unwrap() == j {
+                        *new_values.last_mut().unwrap() += v;
+                    } else {
+                        new_indices.push(j);
+                        new_values.push(v);
+                    }
+                }
+                new_indptr.push(new_indices.len());
+            }
+            indptr = new_indptr;
+            indices = new_indices;
+            values = new_values;
+        }
+        Ok(Dataset {
+            features: Features::Csr {
+                indptr,
+                indices,
+                values,
+            },
+            labels,
+            n,
+            d,
+            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+        })
+    }
+
+    /// Allocate an all-zeros dense dataset (filled by generators).
     pub fn zeros(n: usize, d: usize) -> Self {
         Dataset {
-            features: vec![0.0; n * d],
+            features: Features::Dense(vec![0.0; n * d]),
             labels: vec![0.0; n],
             n,
             d,
@@ -89,17 +249,70 @@ impl Dataset {
         self.d
     }
 
-    /// Feature row for sample `i`.
+    /// Whether features are CSR-stored.
+    #[inline]
+    pub fn is_sparse(&self) -> bool {
+        matches!(self.features, Features::Csr { .. })
+    }
+
+    /// Stored entries: `n * d` for dense, total nnz for CSR.
+    pub fn nnz(&self) -> usize {
+        match &self.features {
+            Features::Dense(_) => self.n * self.d,
+            Features::Csr { values, .. } => values.len(),
+        }
+    }
+
+    /// Stored-entry fraction: `nnz / (n * d)` (1.0 for dense).
+    pub fn density(&self) -> f64 {
+        if self.n == 0 || self.d == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.n as f64 * self.d as f64)
+    }
+
+    /// Storage-matched view of sample `i`'s features — the accessor every
+    /// per-sample math path dispatches on (see `util::math::dot_row` etc.).
+    #[inline]
+    pub fn row_view(&self, i: usize) -> RowView<'_> {
+        debug_assert!(i < self.n);
+        match &self.features {
+            Features::Dense(data) => RowView::Dense(&data[i * self.d..(i + 1) * self.d]),
+            Features::Csr {
+                indptr,
+                indices,
+                values,
+            } => {
+                let (lo, hi) = (indptr[i], indptr[i + 1]);
+                RowView::Sparse {
+                    indices: &indices[lo..hi],
+                    values: &values[lo..hi],
+                }
+            }
+        }
+    }
+
+    /// Feature row for sample `i` (dense storage only).
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
         debug_assert!(i < self.n);
-        &self.features[i * self.d..(i + 1) * self.d]
+        match &self.features {
+            Features::Dense(data) => &data[i * self.d..(i + 1) * self.d],
+            Features::Csr { .. } => {
+                panic!("Dataset::row on CSR storage; use row_view (or to_dense)")
+            }
+        }
     }
 
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
         let d = self.d;
-        &mut self.features[i * d..(i + 1) * d]
+        match &mut self.features {
+            Features::Dense(data) => &mut data[i * d..(i + 1) * d],
+            Features::Csr { .. } => {
+                panic!("Dataset::row_mut on CSR storage; use map_values (or to_dense)")
+            }
+        }
     }
 
     #[inline]
@@ -112,39 +325,198 @@ impl Dataset {
         &mut self.labels[i]
     }
 
-    /// Flat row-major feature buffer (what the HLO artifacts take).
+    /// Flat row-major feature buffer (what the HLO artifacts take; dense
+    /// storage only — CSR callers densify per shard via [`Dataset::to_dense`]).
     pub fn features_flat(&self) -> &[f32] {
-        &self.features
+        match &self.features {
+            Features::Dense(data) => data,
+            Features::Csr { .. } => {
+                panic!("Dataset::features_flat on CSR storage; densify via to_dense first")
+            }
+        }
+    }
+
+    /// All stored feature values: the full flat buffer for dense storage,
+    /// the nonzero values for CSR (normalization passes).
+    pub fn stored_values(&self) -> &[f32] {
+        match &self.features {
+            Features::Dense(data) => data,
+            Features::Csr { values, .. } => values,
+        }
+    }
+
+    /// CSR components `(indptr, indices, values)`, or `None` for dense
+    /// storage (invariant checks / wire encoders).
+    pub fn csr_parts(&self) -> Option<(&[usize], &[u32], &[f32])> {
+        match &self.features {
+            Features::Dense(_) => None,
+            Features::Csr {
+                indptr,
+                indices,
+                values,
+            } => Some((indptr, indices, values)),
+        }
     }
 
     pub fn labels(&self) -> &[f32] {
         &self.labels
     }
 
-    /// A new dataset containing the given row indices (used by sharding).
-    pub fn subset(&self, idx: &[usize]) -> Dataset {
-        let mut out = Dataset::zeros(idx.len(), self.d);
-        for (k, &i) in idx.iter().enumerate() {
-            out.row_mut(k).copy_from_slice(self.row(i));
-            *out.label_mut(k) = self.label(i);
-        }
-        out
+    /// Sample `i` as an owned dense vector regardless of storage
+    /// (tests / diagnostics; allocates).
+    pub fn dense_row(&self, i: usize) -> Vec<f32> {
+        self.row_view(i).to_dense(self.d)
     }
 
-    /// Contiguous row range `[start, end)` as a new dataset.
+    /// Apply `f(column, value)` to every stored feature value in place.
+    /// For dense storage this visits all `n * d` cells; for CSR only the
+    /// nonzeros — which is exactly the sparsity-preserving contract the
+    /// scale-only normalizers need.
+    pub fn map_values<F: FnMut(usize, &mut f32)>(&mut self, mut f: F) {
+        let d = self.d;
+        if d == 0 {
+            return;
+        }
+        match &mut self.features {
+            Features::Dense(data) => {
+                for row in data.chunks_exact_mut(d) {
+                    for (j, v) in row.iter_mut().enumerate() {
+                        f(j, v);
+                    }
+                }
+            }
+            Features::Csr {
+                indices, values, ..
+            } => {
+                for (&j, v) in indices.iter().zip(values.iter_mut()) {
+                    f(j as usize, v);
+                }
+            }
+        }
+    }
+
+    /// A dense copy of this dataset (HLO artifact upload, parity tests).
+    pub fn to_dense(&self) -> Dataset {
+        match &self.features {
+            Features::Dense(data) => Dataset {
+                features: Features::Dense(data.clone()),
+                labels: self.labels.clone(),
+                n: self.n,
+                d: self.d,
+                id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+            },
+            Features::Csr {
+                indptr,
+                indices,
+                values,
+            } => {
+                let mut flat = vec![0.0f32; self.n * self.d];
+                for i in 0..self.n {
+                    let row = &mut flat[i * self.d..(i + 1) * self.d];
+                    for k in indptr[i]..indptr[i + 1] {
+                        row[indices[k] as usize] += values[k];
+                    }
+                }
+                Dataset {
+                    features: Features::Dense(flat),
+                    labels: self.labels.clone(),
+                    n: self.n,
+                    d: self.d,
+                    id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+                }
+            }
+        }
+    }
+
+    /// A new dataset containing the given row indices (used by sharding).
+    /// Storage-preserving: CSR input yields a CSR subset with rebuilt
+    /// `indptr`.
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let labels: Vec<f32> = idx.iter().map(|&i| self.labels[i]).collect();
+        match &self.features {
+            Features::Dense(data) => {
+                let mut flat = Vec::with_capacity(idx.len() * self.d);
+                for &i in idx {
+                    flat.extend_from_slice(&data[i * self.d..(i + 1) * self.d]);
+                }
+                Dataset {
+                    features: Features::Dense(flat),
+                    labels,
+                    n: idx.len(),
+                    d: self.d,
+                    id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+                }
+            }
+            Features::Csr {
+                indptr,
+                indices,
+                values,
+            } => {
+                let mut new_indptr = Vec::with_capacity(idx.len() + 1);
+                new_indptr.push(0usize);
+                let mut new_indices = Vec::new();
+                let mut new_values = Vec::new();
+                for &i in idx {
+                    let (lo, hi) = (indptr[i], indptr[i + 1]);
+                    new_indices.extend_from_slice(&indices[lo..hi]);
+                    new_values.extend_from_slice(&values[lo..hi]);
+                    new_indptr.push(new_indices.len());
+                }
+                Dataset {
+                    features: Features::Csr {
+                        indptr: new_indptr,
+                        indices: new_indices,
+                        values: new_values,
+                    },
+                    labels,
+                    n: idx.len(),
+                    d: self.d,
+                    id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+                }
+            }
+        }
+    }
+
+    /// Contiguous row range `[start, end)` as a new dataset
+    /// (storage-preserving).
     pub fn slice_rows(&self, start: usize, end: usize) -> Dataset {
         assert!(start <= end && end <= self.n);
-        Dataset {
-            features: self.features[start * self.d..end * self.d].to_vec(),
-            labels: self.labels[start..end].to_vec(),
-            n: end - start,
-            d: self.d,
-            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+        let labels = self.labels[start..end].to_vec();
+        match &self.features {
+            Features::Dense(data) => Dataset {
+                features: Features::Dense(data[start * self.d..end * self.d].to_vec()),
+                labels,
+                n: end - start,
+                d: self.d,
+                id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+            },
+            Features::Csr {
+                indptr,
+                indices,
+                values,
+            } => {
+                let (lo, hi) = (indptr[start], indptr[end]);
+                // rebase indptr so the slice starts at 0
+                let new_indptr: Vec<usize> =
+                    indptr[start..=end].iter().map(|&p| p - lo).collect();
+                Dataset {
+                    features: Features::Csr {
+                        indptr: new_indptr,
+                        indices: indices[lo..hi].to_vec(),
+                        values: values[lo..hi].to_vec(),
+                    },
+                    labels,
+                    n: end - start,
+                    d: self.d,
+                    id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+                }
+            }
         }
     }
 
     /// Gather rows by `order` into a preallocated flat buffer (the native
-    /// engine's analogue of the kernel's pre-permutation; hot path).
+    /// engine's analogue of the kernel's pre-permutation; dense-only hot
+    /// path).
     pub fn gather_into(&self, order: &[u32], feat_out: &mut [f32], label_out: &mut [f32]) {
         debug_assert_eq!(feat_out.len(), order.len() * self.d);
         debug_assert_eq!(label_out.len(), order.len());
@@ -169,6 +541,19 @@ mod tests {
         .unwrap()
     }
 
+    /// CSR fixture with the same shape/labels as `small()`; row 1 is
+    /// `[0.0, 4.0]` (implicit zero in column 0).
+    fn small_csr() -> Dataset {
+        Dataset::from_csr(
+            vec![0, 2, 3, 5],
+            vec![0, 1, 1, 0, 1],
+            vec![1.0, 2.0, 4.0, 5.0, 6.0],
+            vec![1.0, -1.0, 1.0],
+            2,
+        )
+        .unwrap()
+    }
+
     #[test]
     fn shape_accessors() {
         let ds = small();
@@ -176,6 +561,8 @@ mod tests {
         assert_eq!(ds.d(), 2);
         assert_eq!(ds.row(1), &[3.0, 4.0]);
         assert_eq!(ds.label(2), 1.0);
+        assert!(!ds.is_sparse());
+        assert_eq!(ds.nnz(), 6);
     }
 
     #[test]
@@ -183,6 +570,86 @@ mod tests {
         assert!(Dataset::from_flat(vec![1.0; 5], vec![0.0; 2], 2).is_err());
         assert!(Dataset::from_flat(vec![1.0; 4], vec![0.0; 3], 2).is_err());
         assert!(Dataset::from_flat(vec![], vec![], 0).is_err());
+    }
+
+    #[test]
+    fn from_csr_validates() {
+        // indptr[0] != 0
+        assert!(Dataset::from_csr(vec![1, 2], vec![0], vec![1.0], vec![0.0], 2).is_err());
+        // indptr[n] != nnz
+        assert!(Dataset::from_csr(vec![0, 2], vec![0], vec![1.0], vec![0.0], 2).is_err());
+        // non-monotone indptr
+        assert!(Dataset::from_csr(
+            vec![0, 2, 1],
+            vec![0, 1],
+            vec![1.0, 2.0],
+            vec![0.0, 0.0],
+            2
+        )
+        .is_err());
+        // column out of bounds
+        assert!(Dataset::from_csr(vec![0, 1], vec![2], vec![1.0], vec![0.0], 2).is_err());
+        // labels length mismatch
+        assert!(Dataset::from_csr(vec![0, 1], vec![0], vec![1.0], vec![0.0, 0.0], 2).is_err());
+    }
+
+    /// Unsorted / duplicate columns are canonicalized at construction, so
+    /// per-entry passes (stats, nnz) agree with the row's content.
+    #[test]
+    fn from_csr_canonicalizes_unsorted_and_duplicate_columns() {
+        // row 0: cols [1, 0, 1] with values [2, 1, 4] -> coalesced to
+        // col 0 = 1, col 1 = 6; row 1 untouched
+        let ds = Dataset::from_csr(
+            vec![0, 3, 4],
+            vec![1, 0, 1, 0],
+            vec![2.0, 1.0, 4.0, 3.0],
+            vec![1.0, -1.0],
+            2,
+        )
+        .unwrap();
+        assert_eq!(ds.nnz(), 3, "duplicates must be coalesced");
+        let (indptr, indices, values) = ds.csr_parts().unwrap();
+        assert_eq!(indptr, &[0, 2, 3]);
+        assert_eq!(indices, &[0, 1, 0]);
+        assert_eq!(values, &[1.0, 6.0, 3.0]);
+        assert_eq!(ds.dense_row(0), vec![1.0, 6.0]);
+        assert_eq!(ds.dense_row(1), vec![3.0, 0.0]);
+    }
+
+    #[test]
+    fn csr_views_match_dense_twin() {
+        let sp = small_csr();
+        assert!(sp.is_sparse());
+        assert_eq!(sp.nnz(), 5);
+        assert!((sp.density() - 5.0 / 6.0).abs() < 1e-12);
+        let expect = [vec![1.0f32, 2.0], vec![0.0, 4.0], vec![5.0, 6.0]];
+        for (i, want) in expect.iter().enumerate() {
+            assert_eq!(&sp.dense_row(i), want, "row {i}");
+        }
+        match sp.row_view(1) {
+            RowView::Sparse { indices, values } => {
+                assert_eq!(indices, &[1]);
+                assert_eq!(values, &[4.0]);
+            }
+            RowView::Dense(_) => panic!("expected sparse view"),
+        }
+    }
+
+    #[test]
+    fn to_dense_round_trips() {
+        let sp = small_csr();
+        let dn = sp.to_dense();
+        assert!(!dn.is_sparse());
+        assert_ne!(dn.id(), sp.id());
+        assert_eq!(dn.features_flat(), &[1.0, 2.0, 0.0, 4.0, 5.0, 6.0]);
+        assert_eq!(dn.labels(), sp.labels());
+    }
+
+    #[test]
+    #[should_panic(expected = "CSR storage")]
+    fn dense_row_access_panics_on_csr() {
+        let sp = small_csr();
+        let _ = sp.row(0);
     }
 
     #[test]
@@ -195,6 +662,37 @@ mod tests {
         let sl = ds.slice_rows(1, 3);
         assert_eq!(sl.n(), 2);
         assert_eq!(sl.row(0), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn csr_subset_and_slice_preserve_storage() {
+        let sp = small_csr();
+        let sub = sp.subset(&[2, 0]);
+        assert!(sub.is_sparse());
+        assert_eq!(sub.dense_row(0), vec![5.0, 6.0]);
+        assert_eq!(sub.dense_row(1), vec![1.0, 2.0]);
+        let (indptr, indices, values) = sub.csr_parts().unwrap();
+        assert_eq!(indptr, &[0, 2, 4]);
+        assert_eq!(indices.len(), values.len());
+        let sl = sp.slice_rows(1, 3);
+        assert!(sl.is_sparse());
+        assert_eq!(sl.n(), 2);
+        assert_eq!(sl.dense_row(0), vec![0.0, 4.0]);
+        let (indptr, _, _) = sl.csr_parts().unwrap();
+        assert_eq!(indptr[0], 0); // rebased
+        assert_eq!(*indptr.last().unwrap(), sl.nnz());
+    }
+
+    #[test]
+    fn map_values_scales_both_layouts() {
+        let mut dn = small();
+        let mut sp = small_csr();
+        let double = |_j: usize, v: &mut f32| *v *= 2.0;
+        dn.map_values(double);
+        sp.map_values(double);
+        assert_eq!(dn.features_flat(), &[2.0, 4.0, 6.0, 8.0, 10.0, 12.0]);
+        assert_eq!(sp.dense_row(1), vec![0.0, 8.0]);
+        assert_eq!(sp.nnz(), 5); // sparsity pattern untouched
     }
 
     #[test]

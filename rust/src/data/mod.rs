@@ -1,7 +1,10 @@
-//! Data pipeline: dense datasets, synthetic generators matching the paper's
-//! workloads, a LIBSVM-format loader for the real datasets (IJCNN1, SUSY,
-//! MILLIONSONG drop in if the files are present), feature normalization,
-//! and disjoint sharding across workers.
+//! Data pipeline: storage-polymorphic datasets (dense row-major + CSR
+//! behind one [`Dataset`] surface), synthetic generators matching the
+//! paper's workloads plus density-parameterized sparse stand-ins, a
+//! sparsity-preserving LIBSVM loader (IJCNN1, SUSY, MILLIONSONG drop in if
+//! the files are present; rcv1-style text data stays CSR end-to-end),
+//! storage-aware feature normalization, and disjoint sharding across
+//! workers.
 
 pub mod dataset;
 pub mod libsvm;
@@ -9,5 +12,5 @@ pub mod normalize;
 pub mod shard;
 pub mod synth;
 
-pub use dataset::Dataset;
+pub use dataset::{Dataset, Features, RowView};
 pub use shard::ShardedDataset;

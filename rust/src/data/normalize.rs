@@ -3,8 +3,15 @@
 //! Real tabular datasets (SUSY/MILLIONSONG-like) have feature scales
 //! spanning decades; per-feature standardization keeps the GLM Lipschitz
 //! constant sane so the paper's constant-step-size regimes apply.
+//!
+//! Storage-aware: dense datasets are centered and scaled; CSR datasets get
+//! **scale-only** normalization (divide by the per-feature std, no
+//! centering) — subtracting the mean would turn every implicit zero into a
+//! stored value and densify the matrix, defeating the point of CSR. For
+//! rcv1-style text features (non-negative, mostly zero) scale-only is the
+//! standard treatment.
 
-use crate::data::dataset::Dataset;
+use crate::data::dataset::{Dataset, RowView};
 
 /// Per-feature statistics computed in one pass.
 #[derive(Clone, Debug)]
@@ -13,16 +20,28 @@ pub struct FeatureStats {
     pub std: Vec<f64>,
 }
 
-/// Compute per-feature mean / std (population).
+/// Compute per-feature mean / std (population). Implicit zeros of CSR
+/// storage contribute to the statistics exactly as stored zeros would, so
+/// both layouts of the same matrix yield identical stats.
 pub fn feature_stats(ds: &Dataset) -> FeatureStats {
     let d = ds.d();
     let n = ds.n() as f64;
     let mut mean = vec![0.0f64; d];
     let mut sq = vec![0.0f64; d];
     for i in 0..ds.n() {
-        for (j, &v) in ds.row(i).iter().enumerate() {
-            mean[j] += v as f64;
-            sq[j] += (v as f64) * (v as f64);
+        match ds.row_view(i) {
+            RowView::Dense(row) => {
+                for (j, &v) in row.iter().enumerate() {
+                    mean[j] += v as f64;
+                    sq[j] += (v as f64) * (v as f64);
+                }
+            }
+            RowView::Sparse { indices, values } => {
+                for (&j, &v) in indices.iter().zip(values) {
+                    mean[j as usize] += v as f64;
+                    sq[j as usize] += (v as f64) * (v as f64);
+                }
+            }
         }
     }
     for j in 0..d {
@@ -32,7 +51,10 @@ pub fn feature_stats(ds: &Dataset) -> FeatureStats {
     FeatureStats { mean, std: sq }
 }
 
-/// Standardize in place: `a_ij <- (a_ij - mean_j) / std_j` (std_j==0 kept).
+/// Normalize in place and return the stats used: dense storage is
+/// standardized (`a_ij <- (a_ij - mean_j) / std_j`, std_j==0 kept); CSR
+/// storage is scaled only (`a_ij <- a_ij / std_j`), preserving the
+/// sparsity pattern.
 pub fn standardize(ds: &mut Dataset) -> FeatureStats {
     let stats = feature_stats(ds);
     apply(ds, &stats);
@@ -41,32 +63,27 @@ pub fn standardize(ds: &mut Dataset) -> FeatureStats {
 
 /// Apply precomputed stats (used to normalize shards consistently: compute
 /// stats on one representative shard or the union, apply everywhere).
+/// Dense: center + scale. CSR: scale only (sparsity-preserving).
 pub fn apply(ds: &mut Dataset, stats: &FeatureStats) {
-    for i in 0..ds.n() {
-        let row = ds.row_mut(i);
-        for (j, v) in row.iter_mut().enumerate() {
-            let s = if stats.std[j] > 1e-12 { stats.std[j] } else { 1.0 };
-            *v = ((*v as f64 - stats.mean[j]) / s) as f32;
-        }
-    }
+    let center = !ds.is_sparse();
+    ds.map_values(|j, v| {
+        let s = if stats.std[j] > 1e-12 { stats.std[j] } else { 1.0 };
+        let m = if center { stats.mean[j] } else { 0.0 };
+        *v = ((*v as f64 - m) / s) as f32;
+    });
 }
 
-/// Scale every row to unit max-norm of the whole dataset (alternative,
-/// keeps sparsity patterns; used for LIBSVM data already roughly scaled).
+/// Scale every stored value by the dataset-wide max |a_ij| (alternative,
+/// keeps sparsity patterns on both layouts; used for LIBSVM data already
+/// roughly scaled).
 pub fn scale_by_max_abs(ds: &mut Dataset) -> f32 {
-    let mut m = 0.0f32;
-    for i in 0..ds.n() {
-        for &v in ds.row(i) {
-            m = m.max(v.abs());
-        }
-    }
+    let m = ds
+        .stored_values()
+        .iter()
+        .fold(0.0f32, |m, v| m.max(v.abs()));
     if m > 0.0 {
         let inv = 1.0 / m;
-        for i in 0..ds.n() {
-            for v in ds.row_mut(i) {
-                *v *= inv;
-            }
-        }
+        ds.map_values(|_, v| *v *= inv);
     }
     m
 }
@@ -109,5 +126,42 @@ mod tests {
         let m = scale_by_max_abs(&mut ds);
         assert_eq!(m, 4.0);
         assert_eq!(ds.row(0), &[0.5, -1.0]);
+    }
+
+    #[test]
+    fn csr_stats_match_densified() {
+        let sp = synth::sparse_classification(300, 25, 0.2, 4);
+        let dn = sp.to_dense();
+        let ss = feature_stats(&sp);
+        let dd = feature_stats(&dn);
+        for j in 0..25 {
+            assert!((ss.mean[j] - dd.mean[j]).abs() < 1e-6, "mean[{j}]");
+            assert!((ss.std[j] - dd.std[j]).abs() < 1e-6, "std[{j}]");
+        }
+    }
+
+    #[test]
+    fn csr_standardize_is_scale_only_and_sparsity_preserving() {
+        let mut sp = synth::sparse_classification(200, 30, 0.1, 5);
+        let before = sp.clone();
+        let nnz = sp.nnz();
+        let stats = standardize(&mut sp);
+        assert!(sp.is_sparse());
+        assert_eq!(sp.nnz(), nnz, "sparsity pattern must not change");
+        // every stored value is old / std (no centering)
+        let (_, indices, values) = sp.csr_parts().unwrap();
+        let (_, old_indices, old_values) = before.csr_parts().unwrap();
+        assert_eq!(indices, old_indices);
+        for (k, (&v, &v0)) in values.iter().zip(old_values).enumerate() {
+            let j = indices[k] as usize;
+            let s = if stats.std[j] > 1e-12 { stats.std[j] } else { 1.0 };
+            let expect = (v0 as f64 / s) as f32;
+            assert!((v - expect).abs() < 1e-6, "k={k}");
+        }
+        // max-abs scaling also preserves the pattern
+        let mut sp2 = before.clone();
+        let m = scale_by_max_abs(&mut sp2);
+        assert!(m > 0.0);
+        assert_eq!(sp2.nnz(), nnz);
     }
 }

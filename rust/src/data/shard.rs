@@ -2,6 +2,10 @@
 //! {Omega_s} decomposition, §4) plus the "per-worker generator" path used
 //! by the toy distributed experiments where each worker owns freshly drawn
 //! data (§6.2).
+//!
+//! Sharding is storage-preserving: splitting a CSR dataset yields CSR
+//! shards (each with a rebuilt, self-contained `indptr`), so distributed
+//! runs on sparse data never densify.
 
 use crate::data::dataset::Dataset;
 use crate::util::rng::Pcg64;
@@ -122,6 +126,56 @@ mod tests {
         let sh = ShardedDataset::split(&ds, 6, 3);
         let sum: f64 = (0..sh.p()).map(|s| sh.weight(s)).sum();
         assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    /// Splitting CSR data must keep every shard CSR with valid, rebased
+    /// indptr invariants, and round-trip both sample and nnz counts.
+    #[test]
+    fn csr_split_preserves_indptr_invariants() {
+        let ds = synth::sparse_classification(211, 50, 0.1, 3);
+        let sh = ShardedDataset::split(&ds, 4, 1);
+        assert_eq!(sh.n_total(), 211);
+        let mut n_sum = 0usize;
+        let mut nnz_sum = 0usize;
+        for s in sh.shards() {
+            assert!(s.is_sparse(), "shard densified by split");
+            let (indptr, indices, values) = s.csr_parts().unwrap();
+            assert_eq!(indptr.len(), s.n() + 1);
+            assert_eq!(indptr[0], 0, "indptr must be rebased to 0");
+            assert_eq!(*indptr.last().unwrap(), indices.len());
+            assert_eq!(indices.len(), values.len());
+            assert!(indptr.windows(2).all(|w| w[0] <= w[1]));
+            assert!(indices.iter().all(|&j| (j as usize) < s.d()));
+            n_sum += s.n();
+            nnz_sum += s.nnz();
+        }
+        assert_eq!(n_sum, 211, "sample counts must round-trip");
+        assert_eq!(nnz_sum, ds.nnz(), "nnz must round-trip");
+    }
+
+    /// CSR split is a row partition: the multiset of (label, row) pairs is
+    /// conserved (checked via densified rows, order-independent).
+    #[test]
+    fn csr_split_is_a_partition_of_rows() {
+        let ds = synth::sparse_least_squares(60, 12, 0.25, 5);
+        let sh = ShardedDataset::split(&ds, 5, 9);
+        let key = |label: f32, row: &[f32]| {
+            let mut k: Vec<u32> = vec![label.to_bits()];
+            k.extend(row.iter().map(|v| v.to_bits()));
+            k
+        };
+        let mut got: Vec<Vec<u32>> = Vec::new();
+        for s in sh.shards() {
+            for i in 0..s.n() {
+                got.push(key(s.label(i), &s.dense_row(i)));
+            }
+        }
+        let mut want: Vec<Vec<u32>> = (0..ds.n())
+            .map(|i| key(ds.label(i), &ds.dense_row(i)))
+            .collect();
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want);
     }
 
     #[test]

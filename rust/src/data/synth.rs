@@ -138,6 +138,84 @@ pub fn millionsong_like_n(n: usize, seed: u64) -> Dataset {
     structured_regression(n, 90, 1.0, seed)
 }
 
+/// Partial Fisher–Yates over a persistent pool: draw `k` distinct columns
+/// in O(k) (the pool stays a permutation across calls, so repeated draws
+/// remain uniform). Returned sorted, as CSR convention prefers.
+fn sample_columns(rng: &mut Pcg64, pool: &mut [u32], k: usize) -> Vec<u32> {
+    let d = pool.len();
+    for t in 0..k {
+        let r = t + rng.index(d - t);
+        pool.swap(t, r);
+    }
+    let mut cols = pool[..k].to_vec();
+    cols.sort_unstable();
+    cols
+}
+
+/// Number of active features per row for a target density.
+fn row_nnz(d: usize, density: f64) -> usize {
+    ((density * d as f64).round() as usize).clamp(1, d)
+}
+
+/// Sparse (CSR) binary classification at the given density: each sample
+/// activates `round(density * d)` uniformly drawn columns; active values
+/// are standard normal plus a class shift along a random unit direction.
+/// The shift is boosted by `sqrt(d / k)` so the expected margin separation
+/// stays O(1) even though only k of the d direction coordinates appear —
+/// the rcv1-style stand-in for text workloads (labels in {-1, +1}).
+pub fn sparse_classification(n: usize, d: usize, density: f64, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed);
+    let k = row_nnz(d, density);
+    let mut dir: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let norm = dir.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-12);
+    dir.iter_mut().for_each(|v| *v /= norm);
+    let boost = (d as f64 / k as f64).sqrt();
+    let mut pool: Vec<u32> = (0..d as u32).collect();
+    let mut indptr = Vec::with_capacity(n + 1);
+    indptr.push(0usize);
+    let mut indices: Vec<u32> = Vec::with_capacity(n * k);
+    let mut values: Vec<f32> = Vec::with_capacity(n * k);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let label = if i % 2 == 0 { 1.0f32 } else { -1.0f32 };
+        for &j in &sample_columns(&mut rng, &mut pool, k) {
+            let shift = 0.5 * label as f64 * boost * dir[j as usize];
+            indices.push(j);
+            values.push((rng.normal() + shift) as f32);
+        }
+        indptr.push(indices.len());
+        labels.push(label);
+    }
+    Dataset::from_csr(indptr, indices, values, labels, d).expect("valid CSR by construction")
+}
+
+/// Sparse (CSR) least squares at the given density: active values are
+/// standard normal, labels `b = a_i^T x_true + eps` with unit gaussian
+/// noise (the regression twin of [`sparse_classification`]).
+pub fn sparse_least_squares(n: usize, d: usize, density: f64, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed);
+    let k = row_nnz(d, density);
+    let x_true: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let mut pool: Vec<u32> = (0..d as u32).collect();
+    let mut indptr = Vec::with_capacity(n + 1);
+    indptr.push(0usize);
+    let mut indices: Vec<u32> = Vec::with_capacity(n * k);
+    let mut values: Vec<f32> = Vec::with_capacity(n * k);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut z = 0.0f64;
+        for &j in &sample_columns(&mut rng, &mut pool, k) {
+            let v = rng.normal();
+            indices.push(j);
+            values.push(v as f32);
+            z += v * x_true[j as usize];
+        }
+        indptr.push(indices.len());
+        labels.push((z + rng.normal()) as f32);
+    }
+    Dataset::from_csr(indptr, indices, values, labels, d).expect("valid CSR by construction")
+}
+
 /// Distributed toy data, paper §6.2: every worker draws its own shard from
 /// the same distribution ("created on each local worker exactly the same
 /// way as for the sequential experiments"); total size = p * n_per_worker.
@@ -248,6 +326,46 @@ mod tests {
         let susy = susy_like_n(300, 1);
         assert_eq!(susy.d(), 18);
         assert!(susy.labels().iter().all(|&b| b == 1.0 || b == -1.0));
+    }
+
+    #[test]
+    fn sparse_generators_hit_density_and_shapes() {
+        for density in [0.01, 0.1, 0.5] {
+            let ds = sparse_classification(400, 200, density, 6);
+            assert!(ds.is_sparse());
+            assert_eq!((ds.n(), ds.d()), (400, 200));
+            let expect = (density * 200.0).round().max(1.0) / 200.0;
+            assert!(
+                (ds.density() - expect).abs() < 1e-9,
+                "density={} expect={expect}",
+                ds.density()
+            );
+            // per-row nnz is exact and columns are distinct + sorted
+            let (indptr, indices, _) = ds.csr_parts().unwrap();
+            for i in 0..ds.n() {
+                let row = &indices[indptr[i]..indptr[i + 1]];
+                assert!(row.windows(2).all(|w| w[0] < w[1]), "row {i}: {row:?}");
+            }
+            let pos = (0..ds.n()).filter(|&i| ds.label(i) > 0.0).count();
+            assert_eq!(pos, 200);
+        }
+    }
+
+    #[test]
+    fn sparse_least_squares_labels_follow_linear_model() {
+        let ds = sparse_least_squares(2000, 100, 0.2, 8);
+        assert!(ds.is_sparse());
+        // E[b^2] = E[||a||^2-weighted x_true energy] + 1 >> noise-only var
+        let var: f64 = ds
+            .labels()
+            .iter()
+            .map(|&b| (b as f64) * (b as f64))
+            .sum::<f64>()
+            / ds.n() as f64;
+        assert!(var > 3.0, "var={var}");
+        // deterministic
+        let again = sparse_least_squares(2000, 100, 0.2, 8);
+        assert_eq!(ds.dense_row(17), again.dense_row(17));
     }
 
     #[test]

@@ -11,7 +11,10 @@
 //!
 //! All heavy per-sample math goes through [`NativeEngine`] (the same
 //! [`EpochEngine`] primitives the sequential solvers use), so a future
-//! HLO-backed distributed run only swaps the engine.
+//! HLO-backed distributed run only swaps the engine. Rounds are
+//! storage-agnostic: the engine and gradient operators dispatch on
+//! [`crate::data::dataset::RowView`], so every distributed algorithm runs
+//! CSR shards natively (see `rust/tests/sparse_parity.rs`).
 
 use crate::data::dataset::Dataset;
 use crate::dist::messages::{GlobalView, Upload};
@@ -351,7 +354,7 @@ impl<'a> LocalNode<'a> {
             let i = iu as usize;
             let c = gradients::grad_scalar(self.problem, self.shard, i, &view.x);
             let cb = gradients::grad_scalar(self.problem, self.shard, i, &self.xbar);
-            math::axpy((c - cb) * inv_b, self.shard.row(i), &mut v);
+            math::axpy_row((c - cb) * inv_b, self.shard.row_view(i), &mut v);
         }
         math::add_assign(&mut v, &view.gbar);
         math::axpy(2.0 * self.cfg.lambda, &view.x, &mut v);

@@ -118,7 +118,11 @@ pub trait EpochEngine {
 }
 
 /// Hand-optimized native Rust implementation — the default engine and the
-/// subject of the §Perf pass (see `util::math::vr_step`).
+/// subject of the §Perf pass (see `util::math::vr_step`). Per-sample loops
+/// dispatch on [`crate::data::dataset::RowView`], so dense and CSR shards
+/// run natively through the same algorithm code with no densification in
+/// the hot path (the AOT HLO engine, whose artifact shapes are dense,
+/// instead densifies once per shard at literal-upload time).
 #[derive(Default)]
 pub struct NativeEngine;
 
@@ -145,11 +149,11 @@ impl EpochEngine for NativeEngine {
         let inv_n = 1.0 / shard.n() as f32;
         for &iu in perm {
             let i = iu as usize;
-            let a = shard.row(i);
-            let c = p.dloss(math::dot(a, x), shard.label(i));
-            math::vr_step(x, a, gbar, c - alpha[i], eta, lam);
+            let a = shard.row_view(i);
+            let c = p.dloss(math::dot_row(a, x), shard.label(i));
+            math::vr_step_row(x, a, gbar, c - alpha[i], eta, lam);
             alpha[i] = c;
-            math::axpy(c * inv_n, a, gtilde_out);
+            math::axpy_row(c * inv_n, a, gtilde_out);
         }
     }
 
@@ -168,11 +172,11 @@ impl EpochEngine for NativeEngine {
         let inv_n = 1.0 / shard.n() as f32;
         for &iu in perm {
             let i = iu as usize;
-            let a = shard.row(i);
-            let c = p.dloss(math::dot(a, x), shard.label(i));
-            math::sgd_step(x, a, c, eta, lam);
+            let a = shard.row_view(i);
+            let c = p.dloss(math::dot_row(a, x), shard.label(i));
+            math::sgd_step_row(x, a, c, eta, lam);
             alpha[i] = c;
-            math::axpy(c * inv_n, a, gtilde_out);
+            math::axpy_row(c * inv_n, a, gtilde_out);
         }
     }
 
@@ -187,9 +191,9 @@ impl EpochEngine for NativeEngine {
     ) {
         for &iu in idx {
             let i = iu as usize;
-            let a = shard.row(i);
-            let c = p.dloss(math::dot(a, x), shard.label(i));
-            math::sgd_step(x, a, c, eta, lam);
+            let a = shard.row_view(i);
+            let c = p.dloss(math::dot_row(a, x), shard.label(i));
+            math::sgd_step_row(x, a, c, eta, lam);
         }
     }
 
@@ -206,10 +210,10 @@ impl EpochEngine for NativeEngine {
     ) {
         for &iu in idx {
             let i = iu as usize;
-            let a = shard.row(i);
-            let c = p.dloss(math::dot(a, x), shard.label(i));
-            let cbar = p.dloss(math::dot(a, xbar), shard.label(i));
-            math::vr_step(x, a, gbar, c - cbar, eta, lam);
+            let a = shard.row_view(i);
+            let c = p.dloss(math::dot_row(a, x), shard.label(i));
+            let cbar = p.dloss(math::dot_row(a, xbar), shard.label(i));
+            math::vr_step_row(x, a, gbar, c - cbar, eta, lam);
         }
     }
 
@@ -227,11 +231,11 @@ impl EpochEngine for NativeEngine {
     ) {
         for &iu in idx {
             let i = iu as usize;
-            let a = shard.row(i);
-            let c = p.dloss(math::dot(a, x), shard.label(i));
+            let a = shard.row_view(i);
+            let c = p.dloss(math::dot_row(a, x), shard.label(i));
             let delta = c - alpha[i];
-            math::vr_step(x, a, gbar, delta, eta, lam);
-            math::axpy(n_inv * delta, a, gbar);
+            math::vr_step_row(x, a, gbar, delta, eta, lam);
+            math::axpy_row(n_inv * delta, a, gbar);
             alpha[i] = c;
         }
     }

@@ -53,7 +53,17 @@ impl HloEngine {
     fn shard_literals(&mut self, shard: &Dataset) -> Result<(xla::Literal, xla::Literal)> {
         let key = shard.id();
         if !self.shard_cache.contains_key(&key) {
-            let a = lit::f32_mat(shard.features_flat(), shard.n(), shard.d())?;
+            // The AOT artifacts take dense row-major operands, so a CSR
+            // shard is densified ONCE here, at literal-upload time (cached
+            // per shard id) — never inside the per-sample loop. Artifact
+            // shapes stay dense; the native engine is the layout-native
+            // path for sparse workloads.
+            let a = if shard.is_sparse() {
+                let dense = shard.to_dense();
+                lit::f32_mat(dense.features_flat(), dense.n(), dense.d())?
+            } else {
+                lit::f32_mat(shard.features_flat(), shard.n(), shard.d())?
+            };
             let b = lit::f32_vec(shard.labels());
             self.shard_cache.insert(key, (a, b));
         }

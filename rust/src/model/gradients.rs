@@ -7,10 +7,11 @@ use crate::data::dataset::Dataset;
 use crate::model::glm::Problem;
 use crate::util::math;
 
-/// Margin `z_i = a_i^T x` for one sample.
+/// Margin `z_i = a_i^T x` for one sample (dispatches on the dataset's
+/// storage layout; O(nnz) for CSR rows).
 #[inline]
 pub fn margin(ds: &Dataset, i: usize, x: &[f32]) -> f32 {
-    math::dot(ds.row(i), x)
+    math::dot_row(ds.row_view(i), x)
 }
 
 /// Table scalar `c_i = dloss(a_i^T x, b_i)` for one sample.
@@ -25,7 +26,7 @@ pub fn grad_sum(p: Problem, ds: &Dataset, x: &[f32], out: &mut [f32]) {
     math::zero(out);
     for i in 0..ds.n() {
         let c = grad_scalar(p, ds, i, x);
-        math::axpy(c, ds.row(i), out);
+        math::axpy_row(c, ds.row_view(i), out);
     }
 }
 
@@ -46,7 +47,7 @@ pub fn metrics_partial(p: Problem, ds: &Dataset, x: &[f32], gsum: &mut [f32]) ->
         let z = margin(ds, i, x);
         let b = ds.label(i);
         loss_sum += p.loss(z, b) as f64;
-        math::axpy(p.dloss(z, b), ds.row(i), gsum);
+        math::axpy_row(p.dloss(z, b), ds.row_view(i), gsum);
     }
     loss_sum
 }
@@ -135,6 +136,28 @@ mod tests {
         let o1 = objective(Problem::Ridge, &[&ds], &x, lam);
         let o2 = objective(Problem::Ridge, &parts, &x, lam);
         assert!((o1 - o2).abs() < 1e-9 * (1.0 + o1.abs()));
+    }
+
+    /// CSR and densified storage must agree on every gradient operator.
+    #[test]
+    fn csr_operators_match_densified() {
+        let sp = synth::sparse_least_squares(120, 30, 0.15, 9);
+        let dn = sp.to_dense();
+        let x: Vec<f32> = (0..30).map(|j| 0.05 * j as f32 - 0.7).collect();
+        let lam = 1e-3f32;
+        for p in [Problem::Ridge, Problem::Logistic] {
+            let o_sp = objective(p, &[&sp], &x, lam);
+            let o_dn = objective(p, &[&dn], &x, lam);
+            assert!((o_sp - o_dn).abs() < 1e-6 * (1.0 + o_dn.abs()), "{p:?}");
+            let mut g_sp = vec![0.0f32; 30];
+            let mut g_dn = vec![0.0f32; 30];
+            full_gradient(p, &sp, &x, lam, &mut g_sp);
+            full_gradient(p, &dn, &x, lam, &mut g_dn);
+            assert!(math::max_abs_diff(&g_sp, &g_dn) < 1e-5, "{p:?}");
+            let n_sp = global_grad_norm(p, &[&sp], &x, lam);
+            let n_dn = global_grad_norm(p, &[&dn], &x, lam);
+            assert!((n_sp - n_dn).abs() < 1e-5 * (1.0 + n_dn), "{p:?}");
+        }
     }
 
     #[test]

@@ -7,6 +7,8 @@
 //! Accumulation is in `f32` to match the AOT'd JAX graphs bit-for-bit-ish
 //! (parity tests in `rust/tests/integration_hlo.rs` rely on this).
 
+use crate::data::dataset::RowView;
+
 /// Dot product with 8-wide unrolled accumulation.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
@@ -81,6 +83,131 @@ pub fn sgd_step(x: &mut [f32], a: &[f32], coef: f32, eta: f32, lam: f32) {
     let ca = -eta * coef;
     for (xv, av) in x.iter_mut().zip(a) {
         *xv = av.mul_add(ca, *xv * scale);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sparse (CSR-row) kernels and storage-dispatching wrappers.
+//
+// The sparse variants are written so that, given the same inputs, they
+// perform the *identical* floating-point operations the dense kernels
+// perform on the densified row: the dense kernels use `mul_add`, and a
+// zero feature contributes `fma(0, c, t) == t` exactly, so only the
+// coordinates in the row's support see an extra fma. The one unavoidable
+// difference is `dot`, whose summation order over the support differs from
+// the dense 8-lane accumulation — a few-ulp discrepancy the sparse/dense
+// parity suite bounds at 1e-5 per epoch (rust/tests/sparse_parity.rs).
+// ---------------------------------------------------------------------------
+
+/// Sparse-row dot: `sum_k values[k] * x[indices[k]]`.
+#[inline]
+pub fn dot_sparse(indices: &[u32], values: &[f32], x: &[f32]) -> f32 {
+    debug_assert_eq!(indices.len(), values.len());
+    let mut s = 0.0f32;
+    for (&j, &v) in indices.iter().zip(values) {
+        s = v.mul_add(x[j as usize], s);
+    }
+    s
+}
+
+/// Sparse axpy: `y[indices[k]] += alpha * values[k]`.
+#[inline]
+pub fn axpy_sparse(alpha: f32, indices: &[u32], values: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(indices.len(), values.len());
+    for (&j, &v) in indices.iter().zip(values) {
+        let yj = &mut y[j as usize];
+        *yj = v.mul_add(alpha, *yj);
+    }
+}
+
+/// CSR-row CentralVR step: same update as [`vr_step`] with `a` given as
+/// index/value pairs. The `gbar` and l2 terms are dense, so every
+/// coordinate takes the decay pass `x_j <- scale * x_j - eta * gbar_j`;
+/// only the row's support pays the data-part correction. Per-sample cost:
+/// one 2-stream pass over `d` plus O(nnz), vs the dense kernel's 3-stream
+/// pass plus a full-`d` dot.
+#[inline]
+pub fn vr_step_sparse(
+    x: &mut [f32],
+    indices: &[u32],
+    values: &[f32],
+    gbar: &[f32],
+    coef: f32,
+    eta: f32,
+    lam: f32,
+) {
+    debug_assert_eq!(x.len(), gbar.len());
+    let scale = 1.0 - 2.0 * eta * lam;
+    for (xv, gv) in x.iter_mut().zip(gbar) {
+        *xv = xv.mul_add(scale, -eta * gv);
+    }
+    let ca = -eta * coef;
+    for (&j, &v) in indices.iter().zip(values) {
+        let xj = &mut x[j as usize];
+        *xj = v.mul_add(ca, *xj);
+    }
+}
+
+/// CSR-row plain-SGD step: same update as [`sgd_step`]. With `lam == 0`
+/// the decay factor is exactly 1 and untouched coordinates stay bitwise
+/// unchanged, so the step is pure O(nnz).
+#[inline]
+pub fn sgd_step_sparse(
+    x: &mut [f32],
+    indices: &[u32],
+    values: &[f32],
+    coef: f32,
+    eta: f32,
+    lam: f32,
+) {
+    let scale = 1.0 - 2.0 * eta * lam;
+    if scale != 1.0 {
+        for xv in x.iter_mut() {
+            *xv *= scale;
+        }
+    }
+    let ca = -eta * coef;
+    for (&j, &v) in indices.iter().zip(values) {
+        let xj = &mut x[j as usize];
+        *xj = v.mul_add(ca, *xj);
+    }
+}
+
+/// Storage-dispatching dot: `a_i^T x` for either row layout.
+#[inline]
+pub fn dot_row(row: RowView<'_>, x: &[f32]) -> f32 {
+    match row {
+        RowView::Dense(a) => dot(a, x),
+        RowView::Sparse { indices, values } => dot_sparse(indices, values, x),
+    }
+}
+
+/// Storage-dispatching axpy: `y += alpha * a_i`.
+#[inline]
+pub fn axpy_row(alpha: f32, row: RowView<'_>, y: &mut [f32]) {
+    match row {
+        RowView::Dense(a) => axpy(alpha, a, y),
+        RowView::Sparse { indices, values } => axpy_sparse(alpha, indices, values, y),
+    }
+}
+
+/// Storage-dispatching CentralVR step (see [`vr_step`]).
+#[inline]
+pub fn vr_step_row(x: &mut [f32], row: RowView<'_>, gbar: &[f32], coef: f32, eta: f32, lam: f32) {
+    match row {
+        RowView::Dense(a) => vr_step(x, a, gbar, coef, eta, lam),
+        RowView::Sparse { indices, values } => {
+            vr_step_sparse(x, indices, values, gbar, coef, eta, lam)
+        }
+    }
+}
+
+/// Storage-dispatching plain-SGD step (see [`sgd_step`]).
+#[inline]
+pub fn sgd_step_row(x: &mut [f32], row: RowView<'_>, coef: f32, eta: f32, lam: f32) {
+    match row {
+        RowView::Dense(a) => sgd_step(x, a, coef, eta, lam),
+        RowView::Sparse { indices, values } => sgd_step_sparse(x, indices, values, coef, eta, lam),
     }
 }
 
@@ -259,5 +386,94 @@ mod tests {
         let a = [1.0f32, -2.0, 3.0];
         assert!(rel_l2_diff(&a, &a) < 1e-12);
         assert!(max_abs_diff(&a, &a) == 0.0);
+    }
+
+    /// Random sparse row + its densification for kernel parity checks.
+    fn random_sparse_row(r: &mut Pcg64, d: usize, nnz: usize) -> (Vec<u32>, Vec<f32>, Vec<f32>) {
+        let mut cols: Vec<u32> = (0..d as u32).collect();
+        r.shuffle(&mut cols);
+        let mut indices: Vec<u32> = cols[..nnz].to_vec();
+        indices.sort_unstable();
+        let values: Vec<f32> = (0..nnz).map(|_| r.normal() as f32).collect();
+        let mut dense = vec![0.0f32; d];
+        for (&j, &v) in indices.iter().zip(&values) {
+            dense[j as usize] = v;
+        }
+        (indices, values, dense)
+    }
+
+    #[test]
+    fn sparse_dot_and_axpy_match_dense() {
+        let mut r = Pcg64::new(21);
+        for (d, nnz) in [(16usize, 3usize), (50, 10), (129, 1), (40, 40)] {
+            let (indices, values, dense) = random_sparse_row(&mut r, d, nnz);
+            let x = randvec(&mut r, d);
+            let ds = dot(&dense, &x);
+            let ss = dot_sparse(&indices, &values, &x);
+            assert!((ds - ss).abs() < 1e-5 * (1.0 + ds.abs()), "d={d} nnz={nnz}");
+
+            let mut yd = randvec(&mut r, d);
+            let mut ys = yd.clone();
+            axpy(0.41, &dense, &mut yd);
+            axpy_sparse(0.41, &indices, &values, &mut ys);
+            assert_eq!(yd, ys, "axpy must be bitwise identical (fma with 0)");
+        }
+    }
+
+    #[test]
+    fn sparse_vr_and_sgd_steps_match_dense_bitwise() {
+        let mut r = Pcg64::new(22);
+        for (d, nnz) in [(24usize, 5usize), (100, 7), (33, 33)] {
+            let (indices, values, dense) = random_sparse_row(&mut r, d, nnz);
+            let gbar = randvec(&mut r, d);
+            let x0 = randvec(&mut r, d);
+            let (eta, lam, coef) = (0.05f32, 1e-4f32, 0.7f32);
+
+            let mut xd = x0.clone();
+            vr_step(&mut xd, &dense, &gbar, coef, eta, lam);
+            let mut xs = x0.clone();
+            vr_step_sparse(&mut xs, &indices, &values, &gbar, coef, eta, lam);
+            assert_eq!(xd, xs, "vr_step d={d} nnz={nnz}");
+
+            let mut xd = x0.clone();
+            sgd_step(&mut xd, &dense, coef, eta, lam);
+            let mut xs = x0.clone();
+            sgd_step_sparse(&mut xs, &indices, &values, coef, eta, lam);
+            assert_eq!(xd, xs, "sgd_step d={d} nnz={nnz}");
+        }
+    }
+
+    #[test]
+    fn sgd_step_sparse_is_pure_nnz_at_zero_lambda() {
+        let mut r = Pcg64::new(23);
+        let (indices, values, _) = random_sparse_row(&mut r, 20, 4);
+        let x0 = randvec(&mut r, 20);
+        let mut x = x0.clone();
+        sgd_step_sparse(&mut x, &indices, &values, 0.3, 0.1, 0.0);
+        for j in 0..20 {
+            if !indices.contains(&(j as u32)) {
+                assert_eq!(x[j], x0[j], "untouched coordinate moved");
+            }
+        }
+    }
+
+    #[test]
+    fn row_dispatch_agrees_across_layouts() {
+        use crate::data::dataset::RowView;
+        let mut r = Pcg64::new(24);
+        let (indices, values, dense) = random_sparse_row(&mut r, 31, 6);
+        let x = randvec(&mut r, 31);
+        let dv = RowView::Dense(&dense);
+        let sv = RowView::Sparse {
+            indices: &indices,
+            values: &values,
+        };
+        assert!((dot_row(dv, &x) - dot_row(sv, &x)).abs() < 1e-5);
+        let gbar = randvec(&mut r, 31);
+        let mut xa = x.clone();
+        let mut xb = x.clone();
+        vr_step_row(&mut xa, dv, &gbar, 0.5, 0.01, 1e-4);
+        vr_step_row(&mut xb, sv, &gbar, 0.5, 0.01, 1e-4);
+        assert_eq!(xa, xb);
     }
 }
