@@ -1,0 +1,140 @@
+//! Multi-process distributed run over real TCP: p=4 worker OS processes
+//! (this example re-execs itself in a worker role) drive CVR-Sync against
+//! an in-process central server, then the endpoint is parity-checked
+//! against the discrete-event simulator on the same seed and the
+//! communication bytes are checked against the codec accounting — the
+//! wire must carry exactly what `bytes()` priced and what the simulator
+//! charged.
+//!
+//! Run: `cargo run --release --example tcp_run`
+//!
+//! The same topology is available by hand via the CLI:
+//! `centralvr dist serve --addr 127.0.0.1:7071 --p 4` plus four
+//! `centralvr dist worker --addr ... --worker-id S` processes with
+//! matching dataset/seed flags.
+
+use std::net::TcpListener;
+use std::process::{Command, Stdio};
+
+use centralvr::config::schema::Algorithm;
+use centralvr::data::dataset::Dataset;
+use centralvr::data::shard::ShardedDataset;
+use centralvr::data::synth;
+use centralvr::dist::transport::{self, ServeConfig};
+use centralvr::dist::DistConfig;
+use centralvr::exec::simulator::{self, SimParams};
+use centralvr::model::glm::Problem;
+use centralvr::model::gradients;
+use centralvr::util::math;
+
+const P: usize = 4;
+const N: usize = 1200;
+const D: usize = 16;
+const SEED: u64 = 42;
+const ROUNDS: usize = 12;
+
+fn dist_cfg() -> DistConfig {
+    DistConfig {
+        algorithm: Algorithm::CentralVrSync,
+        p: P,
+        eta: 0.01,
+        max_rounds: ROUNDS,
+        tol: 0.0, // fixed budget on both sides: no early stop
+        seed: SEED,
+        record_every: P,
+        ..Default::default()
+    }
+}
+
+/// Workers are separate processes, so each rebuilds the dataset from the
+/// same deterministic seed instead of sharing memory.
+fn load() -> ShardedDataset {
+    let data = synth::toy_least_squares(N, D, SEED);
+    ShardedDataset::split(&data, P, SEED ^ 0xD15C)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    if args.len() >= 4 && args[1] == "worker" {
+        let s: usize = args[2].parse().expect("worker index");
+        worker(s, &args[3]);
+        return;
+    }
+    driver();
+}
+
+fn worker(s: usize, addr: &str) {
+    let sharded = load();
+    let shard = sharded.shard(s);
+    let rep = transport::run_worker(addr, s, Problem::Ridge, shard, sharded.n_total(), dist_cfg())
+        .expect("worker run failed");
+    println!(
+        "  worker {s} (pid {}): rounds={} grad_evals={} sent={}B recv={}B",
+        std::process::id(),
+        rep.rounds,
+        rep.grad_evals,
+        rep.bytes_sent,
+        rep.bytes_received
+    );
+}
+
+fn driver() {
+    let cfg = dist_cfg();
+    let sharded = load();
+    println!("CVR-Sync over TCP: p={P} processes, n={N} d={D}, {ROUNDS} rounds, seed {SEED}");
+
+    // reference run on the in-process discrete-event simulator
+    let sim = simulator::run(Problem::Ridge, &sharded, cfg, SimParams::analytic(D));
+
+    // real thing: loopback server + p spawned worker processes
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let scfg = ServeConfig { p: P, easgd_beta: cfg.easgd_beta };
+    let server = std::thread::spawn(move || transport::serve(listener, scfg));
+    let exe = std::env::current_exe().expect("current_exe");
+    let children: Vec<_> = (0..P)
+        .map(|s| {
+            Command::new(&exe)
+                .arg("worker")
+                .arg(s.to_string())
+                .arg(&addr)
+                .stdout(Stdio::inherit())
+                .stderr(Stdio::inherit())
+                .spawn()
+                .expect("spawn worker process")
+        })
+        .collect();
+    for mut child in children {
+        let status = child.wait().expect("wait for worker");
+        assert!(status.success(), "worker process failed: {status}");
+    }
+    let rep = server
+        .join()
+        .expect("server thread panicked")
+        .expect("serve failed");
+
+    // parity: same endpoint, same suboptimality, same byte accounting
+    let shards: Vec<&Dataset> = sharded.shards().iter().collect();
+    let f_tcp = gradients::objective(Problem::Ridge, &shards, &rep.x, cfg.lambda);
+    let f_sim = gradients::objective(Problem::Ridge, &shards, &sim.trace.x, cfg.lambda);
+    let dx = math::max_abs_diff(&rep.x, &sim.trace.x);
+    let (b_tcp, b_sim) = (rep.bytes_on_wire, sim.counters.bytes_communicated);
+    println!("  tcp: updates={} frames={} bytes={b_tcp}", rep.updates, rep.frames);
+    println!("  sim: frames={} bytes={b_sim}", sim.counters.frames);
+    println!("  objective: tcp={f_tcp:.9} sim={f_sim:.9}  max|dx|={dx:.3e}");
+    assert!(dx <= 1e-5, "endpoint mismatch vs simulator: {dx}");
+    assert!(
+        (f_tcp - f_sim).abs() <= 1e-5,
+        "suboptimality gap vs simulator: {}",
+        (f_tcp - f_sim).abs()
+    );
+    assert_eq!(
+        rep.bytes_on_wire, rep.bytes_accounted,
+        "wire bytes drifted from bytes() accounting"
+    );
+    assert_eq!(
+        rep.bytes_on_wire, sim.counters.bytes_communicated,
+        "simulator charged different bytes than the wire carried"
+    );
+    println!("OK: multi-process TCP run matches the simulator and the byte books close.");
+}

@@ -11,6 +11,8 @@ commands:
   train          run one experiment (presets, config files, or flags)
   figure <id>    regenerate a paper table/figure: fig1 | fig2conv |
                  fig2scale | fig3conv | fig3scale | table1 | ablations | all
+  dist <role>    real TCP runs: serve (central server) | worker (one
+                 shard in its own process)
   artifacts <op> list | check the AOT-compiled HLO artifacts
   calibrate      measure the simulator's per-gradient cost model
   list-presets   show named experiment presets
@@ -26,8 +28,14 @@ common options:
   --tol X              rel-grad-norm tol   --seed N      RNG seed
   --engine E           native|hlo          --threads     real threads
   --scale S            quick|full (figure harnesses)
-  --d N                feature dim (calibrate)
+  --d N                feature dim (calibrate / --dataset)
   --artifacts DIR      artifact directory (default: artifacts/)
+  --dataset K          toy-class|toy-ls|ijcnn1|susy|millionsong|libsvm
+                       (sized by --n/--d; libsvm takes --data-path FILE)
+  --addr HOST:PORT     dist: listen (serve) / connect (worker) address
+  --worker-id S        dist worker: shard index in [0, p)
+  --easgd-beta B       dist serve: elastic coefficient (default 0.9)
+  --out FILE           dist serve: write the final iterate, one f32/line
 ";
 
 /// Parsed command line.

@@ -4,9 +4,10 @@ use anyhow::{bail, Context, Result};
 
 use crate::algos::{self, SequentialSolver, SolverConfig};
 use crate::cli::args::{Args, USAGE};
-use crate::config::schema::{Algorithm, ExperimentConfig};
+use crate::config::schema::{Algorithm, DatasetSpec, ExperimentConfig};
 use crate::config::presets;
 use crate::data::shard::ShardedDataset;
+use crate::dist::transport::{self, ServeConfig};
 use crate::dist::DistConfig;
 use crate::exec::cost_model::CostModel;
 use crate::exec::engine::EngineKind;
@@ -20,6 +21,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_str() {
         "train" => train(args),
         "figure" => figure(args),
+        "dist" => dist(args),
         "artifacts" => artifacts(args),
         "calibrate" => calibrate(args),
         "list-presets" => {
@@ -49,6 +51,12 @@ pub fn build_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(a) = args.get("algorithm") {
         cfg.algorithm = Algorithm::parse(a).with_context(|| format!("bad --algorithm {a:?}"))?;
     }
+    if let Some(kind) = args.get("dataset") {
+        let n = args.get_usize("n")?.unwrap_or(5000);
+        let d = args.get_usize("d")?.unwrap_or(20);
+        cfg.dataset = DatasetSpec::parse(kind, n, d, args.get("data-path"))
+            .with_context(|| format!("bad --dataset {kind:?}"))?;
+    }
     if let Some(p) = args.get("problem") {
         cfg.problem = Problem::parse(p).with_context(|| format!("bad --problem {p:?}"))?;
     }
@@ -75,6 +83,31 @@ pub fn build_config(args: &Args) -> Result<ExperimentConfig> {
     }
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// Salt for the deterministic shard split, shared by every entry point
+/// so a `dist worker` process shards exactly like an in-process run.
+const SHARD_SALT: u64 = 0xD15C;
+
+/// Derive the distributed-run config from an experiment config — the
+/// single source both `train` and `dist worker` use, so TCP runs
+/// reproduce what the in-process engines would do byte-for-byte.
+fn dist_config(cfg: &ExperimentConfig) -> DistConfig {
+    DistConfig {
+        algorithm: cfg.algorithm,
+        p: cfg.p,
+        eta: cfg.eta,
+        lambda: cfg.lambda,
+        tau: cfg.tau,
+        max_rounds: cfg.epochs,
+        tol: cfg.tol,
+        seed: cfg.seed,
+        easgd_beta: cfg.easgd_beta,
+        decay: cfg.decay,
+        ps_batch: 10,
+        network: cfg.network,
+        record_every: cfg.p.max(1),
+    }
 }
 
 fn train(args: &Args) -> Result<()> {
@@ -125,22 +158,8 @@ fn train(args: &Args) -> Result<()> {
             trace.elapsed_s
         );
     } else {
-        let sharded = ShardedDataset::split(&data, cfg.p, cfg.seed ^ 0xD15C);
-        let dcfg = DistConfig {
-            algorithm: cfg.algorithm,
-            p: cfg.p,
-            eta: cfg.eta,
-            lambda: cfg.lambda,
-            tau: cfg.tau,
-            max_rounds: cfg.epochs,
-            tol: cfg.tol,
-            seed: cfg.seed,
-            easgd_beta: cfg.easgd_beta,
-            decay: cfg.decay,
-            ps_batch: 10,
-            network: cfg.network,
-            record_every: cfg.p.max(1),
-        };
+        let sharded = ShardedDataset::split(&data, cfg.p, cfg.seed ^ SHARD_SALT);
+        let dcfg = dist_config(&cfg);
         if args.has("threads") {
             let trace = threads::run(cfg.problem, &sharded, dcfg);
             println!(
@@ -169,6 +188,79 @@ fn train(args: &Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Real TCP runs: `dist serve` hosts the central server, `dist worker`
+/// runs one shard in this process. A p-worker run is one serve process
+/// plus p worker processes pointed at the same --addr with the same
+/// dataset/seed flags and distinct --worker-id values (see
+/// `examples/tcp_run.rs` for a scripted driver).
+fn dist(args: &Args) -> Result<()> {
+    let role = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .context("dist needs a role: serve | worker")?;
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7071");
+    match role {
+        "serve" => {
+            let p = args.get_usize("p")?.context("dist serve needs --p")?;
+            let easgd_beta = args.get_f64("easgd-beta")?.unwrap_or(0.9) as f32;
+            let listener = std::net::TcpListener::bind(addr)
+                .with_context(|| format!("bind {addr}"))?;
+            println!(
+                "dist serve: listening on {} for p={p} workers",
+                listener.local_addr()?
+            );
+            let rep = transport::serve(listener, ServeConfig { p, easgd_beta })?;
+            println!(
+                "dist serve: updates={} frames={} bytes={} (accounted={}) handshake={}B",
+                rep.updates,
+                rep.frames,
+                rep.bytes_on_wire,
+                rep.bytes_accounted,
+                rep.bytes_handshake
+            );
+            if let Some(path) = args.get("out") {
+                let mut text = String::with_capacity(rep.x.len() * 12);
+                for v in &rep.x {
+                    text.push_str(&format!("{v}\n"));
+                }
+                std::fs::write(path, text).with_context(|| format!("write {path}"))?;
+                println!("dist serve: final iterate -> {path}");
+            }
+            Ok(())
+        }
+        "worker" => {
+            let cfg = build_config(args)?;
+            let s = args
+                .get_usize("worker-id")?
+                .context("dist worker needs --worker-id")?;
+            anyhow::ensure!(s < cfg.p, "--worker-id {s} out of range (p={})", cfg.p);
+            let data = cfg.dataset.load(cfg.seed)?;
+            let sharded = ShardedDataset::split(&data, cfg.p, cfg.seed ^ SHARD_SALT);
+            let dcfg = dist_config(&cfg);
+            anyhow::ensure!(
+                dcfg.algorithm.is_distributed(),
+                "dist worker needs a distributed --algorithm, got {}",
+                dcfg.algorithm.name()
+            );
+            let rep = transport::run_worker(
+                addr,
+                s,
+                cfg.problem,
+                sharded.shard(s),
+                sharded.n_total(),
+                dcfg,
+            )?;
+            println!(
+                "dist worker {s}: rounds={} grad_evals={} iters={} sent={}B recv={}B",
+                rep.rounds, rep.grad_evals, rep.iterations, rep.bytes_sent, rep.bytes_received
+            );
+            Ok(())
+        }
+        other => bail!("unknown dist role {other:?} (serve | worker)"),
+    }
 }
 
 fn figure(args: &Args) -> Result<()> {
@@ -297,6 +389,27 @@ mod tests {
     fn dispatch_rejects_unknown_command() {
         let args = parse(&["frobnicate"]);
         assert!(dispatch(&args).is_err());
+    }
+
+    #[test]
+    fn dist_requires_role_and_worker_id() {
+        assert!(dist(&parse(&["dist"])).is_err());
+        assert!(dist(&parse(&["dist", "conduct"])).is_err());
+        // worker without --worker-id fails before touching the network
+        assert!(dist(&parse(&["dist", "worker", "--algorithm", "cvr-sync"])).is_err());
+        // serve without --p fails before binding
+        assert!(dist(&parse(&["dist", "serve"])).is_err());
+    }
+
+    #[test]
+    fn dataset_flag_layers_into_config() {
+        let args = parse(&["train", "--dataset", "toy-ls", "--n", "64", "--d", "4"]);
+        let cfg = build_config(&args).unwrap();
+        assert!(matches!(
+            cfg.dataset,
+            DatasetSpec::ToyLeastSquares { n: 64, d: 4 }
+        ));
+        assert!(build_config(&parse(&["train", "--dataset", "nope"])).is_err());
     }
 
     #[test]

@@ -1,0 +1,557 @@
+//! Length-prefixed little-endian binary codec for the dist wire messages.
+//!
+//! This is the real serialization behind [`crate::dist::messages`]: the
+//! TCP transport ships exactly these frames, and `Upload::bytes()` /
+//! `GlobalView::bytes()` are derived from [`upload_frame_len`] /
+//! [`view_frame_len`], so the simulator's network charges and the
+//! Table-1/Fig-2 communication counters price what the wire actually
+//! carries.
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//! +--------------+---------------------------------------------+
+//! | len: u32 LE  | body: len bytes                             |
+//! +--------------+---------------------------------------------+
+//!                | tag: u8 | scalar fields | payload vectors    |
+//!                +----------------------------------------------+
+//! ```
+//!
+//! `len` counts the body only (tag included, prefix excluded) and is
+//! capped at [`MAX_FRAME_BODY`]; a decoder must reject anything larger
+//! before allocating.
+//!
+//! Payload vectors are self-describing:
+//!
+//! ```text
+//! dense:  | mode=0: u8 | d: u32 | d x f32                        |
+//! sparse: | mode=1: u8 | d: u32 | nnz: u32 | nnz x (idx:u32,f32) |
+//! ```
+//!
+//! Sparse entries are strictly-increasing `(index, value)` pairs of the
+//! nonzero coordinates. The encoder picks sparse automatically when it is
+//! strictly smaller than dense (`4 + 8*nnz < 4*d`), and only for the
+//! payloads that are genuinely sparse on text-scale workloads:
+//! `Upload::Delta` and `Upload::GradPartial`. Every other vector (full
+//! iterates, barrier states, views) is always dense. Decoders accept
+//! either mode anywhere.
+//!
+//! Decoding arbitrary byte soup must return a [`CodecError`], never
+//! panic — see `rust/tests/codec_roundtrip.rs` for the property suite.
+
+use crate::dist::messages::{GlobalView, Upload};
+
+/// Hard cap on a frame body (256 MiB): rejects hostile length prefixes
+/// before any allocation happens.
+pub const MAX_FRAME_BODY: u32 = 1 << 28;
+
+/// Default cap on a declared vector dimension (one dense cap-sized
+/// payload). A sparse header can declare a dimension far larger than the
+/// bytes it carries, so decoders allocate up to `4 * d` from a tiny
+/// frame; transports that know the session dimension should pass it to
+/// [`decode_bounded`] to bound that amplification to the real `d`.
+pub const MAX_WIRE_DIM: u32 = MAX_FRAME_BODY / 4;
+
+/// Largest frame body any message of a `max_dim`-dimensional session can
+/// legitimately occupy: tag + one u64 scalar + two vectors at their
+/// worst-case encoding (`9 + 8*d`, the sparse layout at full density).
+/// Lets a transport reject a hostile length prefix before allocating the
+/// body buffer (see `transport::read_frame_bounded`). `max_dim = 0`
+/// still admits handshake frames.
+pub fn max_body_for_dim(max_dim: u32) -> u32 {
+    let vec = 9u64 + 8 * max_dim as u64;
+    (1 + 8 + 2 * vec).min(MAX_FRAME_BODY as u64) as u32
+}
+
+const TAG_READY: u8 = 0;
+const TAG_DELTA: u8 = 1;
+const TAG_STATE: u8 = 2;
+const TAG_GRAD_PARTIAL: u8 = 3;
+const TAG_X_ONLY: u8 = 4;
+const TAG_ELASTIC_PUSH: u8 = 5;
+const TAG_GRAD_STEP: u8 = 6;
+const TAG_VIEW: u8 = 7;
+const TAG_HELLO: u8 = 8;
+
+const MODE_DENSE: u8 = 0;
+const MODE_SPARSE: u8 = 1;
+
+/// Worker handshake: sent once per connection, before any upload, so the
+/// server can map the socket to a worker slot, validate the topology, and
+/// derive barrier weights (`n_s / sum n_s`) without ever seeing the
+/// dataset.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Hello {
+    /// Worker index in [0, p).
+    pub s: u32,
+    /// Worker count this worker sharded for; must equal the server's `p`,
+    /// else weights and the workers' `n_global` scaling describe
+    /// different topologies and the run is silently wrong.
+    pub p: u32,
+    /// Shard sample count (drives the server-side barrier weights).
+    pub n_s: u64,
+    /// Feature dimension (all workers must agree).
+    pub d: u32,
+}
+
+/// Every message the transport can carry.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireMsg {
+    Hello(Hello),
+    Upload(Upload),
+    View(GlobalView),
+}
+
+/// Decoder rejection: every malformed input maps to one of these; the
+/// decoder never panics.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CodecError {
+    /// Fewer bytes available than a field needs (also: truncated prefix).
+    Truncated { need: usize, have: usize },
+    /// Length prefix above [`MAX_FRAME_BODY`].
+    FrameTooLarge { len: u32 },
+    /// Length prefix disagrees with the actual frame size.
+    LengthMismatch { declared: u32, actual: usize },
+    UnknownTag(u8),
+    UnknownVecMode(u8),
+    /// Declared dimension too large to safely allocate.
+    DimTooLarge { d: u32 },
+    /// Sparse nnz overruns the declared dimension.
+    NnzOverrun { nnz: u32, d: u32 },
+    /// Sparse index out of range or not strictly increasing.
+    IndexInvalid { idx: u32, d: u32 },
+    /// Body longer than the encoded message.
+    TrailingBytes { extra: usize },
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::Truncated { need, have } => {
+                write!(f, "truncated frame: need {need} bytes, have {have}")
+            }
+            CodecError::FrameTooLarge { len } => {
+                write!(f, "frame body of {len} bytes exceeds cap {MAX_FRAME_BODY}")
+            }
+            CodecError::LengthMismatch { declared, actual } => {
+                write!(f, "length prefix says {declared} body bytes, frame has {actual}")
+            }
+            CodecError::UnknownTag(t) => write!(f, "unknown message tag {t}"),
+            CodecError::UnknownVecMode(m) => write!(f, "unknown vector mode {m}"),
+            CodecError::DimTooLarge { d } => write!(f, "vector dimension {d} exceeds cap"),
+            CodecError::NnzOverrun { nnz, d } => {
+                write!(f, "sparse nnz {nnz} overruns declared dimension {d}")
+            }
+            CodecError::IndexInvalid { idx, d } => {
+                write!(f, "sparse index {idx} out of range or non-increasing (d={d})")
+            }
+            CodecError::TrailingBytes { extra } => {
+                write!(f, "{extra} trailing bytes after message body")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+// ---------------------------------------------------------------------------
+// encoding
+// ---------------------------------------------------------------------------
+
+/// Which encoding the encoder picks for one vector. Shared by the size
+/// accountants and the writer so `bytes()` can never drift from the wire.
+enum VecEnc {
+    Dense,
+    Sparse { nnz: usize },
+}
+
+fn plan_vec(v: &[f32], allow_sparse: bool) -> VecEnc {
+    if allow_sparse {
+        let nnz = v.iter().filter(|&&x| x != 0.0).count();
+        // sparse body (after mode+d): 4 + 8*nnz vs dense 4*d; ties go dense
+        if 4 + 8 * nnz < 4 * v.len() {
+            return VecEnc::Sparse { nnz };
+        }
+    }
+    VecEnc::Dense
+}
+
+fn vec_len(v: &[f32], allow_sparse: bool) -> usize {
+    match plan_vec(v, allow_sparse) {
+        VecEnc::Dense => 1 + 4 + 4 * v.len(),
+        VecEnc::Sparse { nnz } => 1 + 4 + 4 + 8 * nnz,
+    }
+}
+
+fn upload_body_len(up: &Upload) -> usize {
+    1 + match up {
+        Upload::Ready => 0,
+        Upload::Delta { dx, dgbar } => vec_len(dx, true) + vec_len(dgbar, true),
+        Upload::State { x, gbar } => vec_len(x, false) + vec_len(gbar, false),
+        Upload::GradPartial { gsum, .. } => 8 + vec_len(gsum, true),
+        Upload::XOnly { x } | Upload::ElasticPush { x } => vec_len(x, false),
+        Upload::GradStep { dx } => vec_len(dx, false),
+    }
+}
+
+/// Encoded frame size (prefix + body) of an upload — the value behind
+/// `Upload::bytes()`.
+pub fn upload_frame_len(up: &Upload) -> u64 {
+    4 + upload_body_len(up) as u64
+}
+
+/// Encoded frame size (prefix + body) of a view — the value behind
+/// `GlobalView::bytes()`.
+pub fn view_frame_len(v: &GlobalView) -> u64 {
+    4 + (1 + vec_len(&v.x, false) + vec_len(&v.gbar, false)) as u64
+}
+
+/// Encoded frame size of a [`Hello`] handshake.
+pub fn hello_frame_len() -> u64 {
+    4 + (1 + 4 + 4 + 8 + 4)
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn write_vec(buf: &mut Vec<u8>, v: &[f32], allow_sparse: bool) {
+    assert!(v.len() <= u32::MAX as usize, "vector too long for the wire");
+    match plan_vec(v, allow_sparse) {
+        VecEnc::Dense => {
+            buf.push(MODE_DENSE);
+            put_u32(buf, v.len() as u32);
+            for &x in v {
+                put_f32(buf, x);
+            }
+        }
+        VecEnc::Sparse { nnz } => {
+            buf.push(MODE_SPARSE);
+            put_u32(buf, v.len() as u32);
+            put_u32(buf, nnz as u32);
+            for (i, &x) in v.iter().enumerate() {
+                if x != 0.0 {
+                    put_u32(buf, i as u32);
+                    put_f32(buf, x);
+                }
+            }
+        }
+    }
+}
+
+/// Write the body via `fill`, then patch the length prefix — one pass
+/// over the payload instead of sizing (and sparsity-planning) it twice.
+fn with_prefix(fill: impl FnOnce(&mut Vec<u8>)) -> Vec<u8> {
+    let mut buf = vec![0u8; 4]; // length prefix, patched below
+    fill(&mut buf);
+    let body_len = (buf.len() - 4) as u32;
+    buf[..4].copy_from_slice(&body_len.to_le_bytes());
+    buf
+}
+
+/// Encode one upload as a complete frame (length prefix included).
+pub fn encode_upload(up: &Upload) -> Vec<u8> {
+    let frame = with_prefix(|buf| match up {
+        Upload::Ready => buf.push(TAG_READY),
+        Upload::Delta { dx, dgbar } => {
+            buf.push(TAG_DELTA);
+            write_vec(buf, dx, true);
+            write_vec(buf, dgbar, true);
+        }
+        Upload::State { x, gbar } => {
+            buf.push(TAG_STATE);
+            write_vec(buf, x, false);
+            write_vec(buf, gbar, false);
+        }
+        Upload::GradPartial { gsum, n } => {
+            buf.push(TAG_GRAD_PARTIAL);
+            put_u64(buf, *n);
+            write_vec(buf, gsum, true);
+        }
+        Upload::XOnly { x } => {
+            buf.push(TAG_X_ONLY);
+            write_vec(buf, x, false);
+        }
+        Upload::ElasticPush { x } => {
+            buf.push(TAG_ELASTIC_PUSH);
+            write_vec(buf, x, false);
+        }
+        Upload::GradStep { dx } => {
+            buf.push(TAG_GRAD_STEP);
+            write_vec(buf, dx, false);
+        }
+    });
+    debug_assert_eq!(
+        frame.len() as u64,
+        upload_frame_len(up),
+        "bytes() drifted from the encoder"
+    );
+    frame
+}
+
+/// Encode one view as a complete frame (length prefix included).
+pub fn encode_view(v: &GlobalView) -> Vec<u8> {
+    let frame = with_prefix(|buf| {
+        buf.push(TAG_VIEW);
+        write_vec(buf, &v.x, false);
+        write_vec(buf, &v.gbar, false);
+    });
+    debug_assert_eq!(
+        frame.len() as u64,
+        view_frame_len(v),
+        "bytes() drifted from the encoder"
+    );
+    frame
+}
+
+/// Encode a handshake as a complete frame (length prefix included).
+pub fn encode_hello(h: &Hello) -> Vec<u8> {
+    let frame = with_prefix(|buf| {
+        buf.push(TAG_HELLO);
+        put_u32(buf, h.s);
+        put_u32(buf, h.p);
+        put_u64(buf, h.n_s);
+        put_u32(buf, h.d);
+    });
+    debug_assert_eq!(frame.len() as u64, hello_frame_len());
+    frame
+}
+
+// ---------------------------------------------------------------------------
+// decoding
+// ---------------------------------------------------------------------------
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        let have = self.buf.len() - self.pos;
+        if have < n {
+            return Err(CodecError::Truncated { need: n, have });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, CodecError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, CodecError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn finish(&self) -> Result<(), CodecError> {
+        let extra = self.buf.len() - self.pos;
+        if extra != 0 {
+            return Err(CodecError::TrailingBytes { extra });
+        }
+        Ok(())
+    }
+}
+
+fn read_vec(cur: &mut Cursor, max_dim: u32) -> Result<Vec<f32>, CodecError> {
+    let mode = cur.u8()?;
+    let d = cur.u32()?;
+    // a sparse header can declare a dimension far larger than the bytes
+    // behind it, so check the cap before any allocation
+    if d > max_dim {
+        return Err(CodecError::DimTooLarge { d });
+    }
+    match mode {
+        MODE_DENSE => {
+            // take() bounds the read before any allocation happens
+            let raw = cur.take(4 * d as usize)?;
+            Ok(raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect())
+        }
+        MODE_SPARSE => {
+            let nnz = cur.u32()?;
+            if nnz > d {
+                return Err(CodecError::NnzOverrun { nnz, d });
+            }
+            let raw = cur.take(8 * nnz as usize)?;
+            let mut v = vec![0.0f32; d as usize];
+            let mut prev: Option<u32> = None;
+            for pair in raw.chunks_exact(8) {
+                let idx = u32::from_le_bytes(pair[..4].try_into().unwrap());
+                let val = f32::from_le_bytes(pair[4..].try_into().unwrap());
+                let increasing = prev.is_none_or(|p| idx > p);
+                if idx >= d || !increasing {
+                    return Err(CodecError::IndexInvalid { idx, d });
+                }
+                prev = Some(idx);
+                v[idx as usize] = val;
+            }
+            Ok(v)
+        }
+        other => Err(CodecError::UnknownVecMode(other)),
+    }
+}
+
+/// Decode a frame body (tag onward, no length prefix). Rejects trailing
+/// bytes so one frame is exactly one message.
+pub fn decode_body(body: &[u8]) -> Result<WireMsg, CodecError> {
+    decode_body_bounded(body, MAX_WIRE_DIM)
+}
+
+/// [`decode_body`] with an explicit cap on declared vector dimensions,
+/// so a transport that knows the session's `d` bounds the allocation a
+/// hostile sparse header can force.
+pub fn decode_body_bounded(body: &[u8], max_dim: u32) -> Result<WireMsg, CodecError> {
+    let mut cur = Cursor { buf: body, pos: 0 };
+    let tag = cur.u8()?;
+    let msg = match tag {
+        TAG_READY => WireMsg::Upload(Upload::Ready),
+        TAG_DELTA => {
+            let dx = read_vec(&mut cur, max_dim)?;
+            let dgbar = read_vec(&mut cur, max_dim)?;
+            WireMsg::Upload(Upload::Delta { dx, dgbar })
+        }
+        TAG_STATE => {
+            let x = read_vec(&mut cur, max_dim)?;
+            let gbar = read_vec(&mut cur, max_dim)?;
+            WireMsg::Upload(Upload::State { x, gbar })
+        }
+        TAG_GRAD_PARTIAL => {
+            let n = cur.u64()?;
+            let gsum = read_vec(&mut cur, max_dim)?;
+            WireMsg::Upload(Upload::GradPartial { gsum, n })
+        }
+        TAG_X_ONLY => WireMsg::Upload(Upload::XOnly { x: read_vec(&mut cur, max_dim)? }),
+        TAG_ELASTIC_PUSH => {
+            WireMsg::Upload(Upload::ElasticPush { x: read_vec(&mut cur, max_dim)? })
+        }
+        TAG_GRAD_STEP => WireMsg::Upload(Upload::GradStep { dx: read_vec(&mut cur, max_dim)? }),
+        TAG_VIEW => {
+            let x = read_vec(&mut cur, max_dim)?;
+            let gbar = read_vec(&mut cur, max_dim)?;
+            WireMsg::View(GlobalView { x, gbar })
+        }
+        TAG_HELLO => {
+            let s = cur.u32()?;
+            let p = cur.u32()?;
+            let n_s = cur.u64()?;
+            let d = cur.u32()?;
+            WireMsg::Hello(Hello { s, p, n_s, d })
+        }
+        other => return Err(CodecError::UnknownTag(other)),
+    };
+    cur.finish()?;
+    Ok(msg)
+}
+
+/// Decode a complete frame (length prefix + body), validating the prefix
+/// against the actual size and the [`MAX_FRAME_BODY`] cap.
+pub fn decode(frame: &[u8]) -> Result<WireMsg, CodecError> {
+    decode_bounded(frame, MAX_WIRE_DIM)
+}
+
+/// [`decode`] with an explicit cap on declared vector dimensions (see
+/// [`decode_body_bounded`]).
+pub fn decode_bounded(frame: &[u8], max_dim: u32) -> Result<WireMsg, CodecError> {
+    if frame.len() < 4 {
+        return Err(CodecError::Truncated { need: 4, have: frame.len() });
+    }
+    let declared = u32::from_le_bytes(frame[..4].try_into().unwrap());
+    if declared > MAX_FRAME_BODY {
+        return Err(CodecError::FrameTooLarge { len: declared });
+    }
+    let actual = frame.len() - 4;
+    if declared as usize != actual {
+        return Err(CodecError::LengthMismatch { declared, actual });
+    }
+    decode_body_bounded(&frame[4..], max_dim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ready_is_five_bytes() {
+        let frame = encode_upload(&Upload::Ready);
+        assert_eq!(frame, vec![1, 0, 0, 0, TAG_READY]);
+        assert_eq!(upload_frame_len(&Upload::Ready), 5);
+        assert_eq!(decode(&frame), Ok(WireMsg::Upload(Upload::Ready)));
+    }
+
+    #[test]
+    fn dense_sparse_threshold() {
+        // d=4: sparse wins only when 4 + 8*nnz < 16, i.e. nnz <= 1
+        let sparse1 = vec![0.0, 2.5, 0.0, 0.0];
+        assert_eq!(vec_len(&sparse1, true), 1 + 4 + 4 + 8);
+        let tie = vec![0.0, 2.5, 0.0, 3.5]; // nnz=2: 20 vs dense 16 -> dense
+        assert_eq!(vec_len(&tie, true), 1 + 4 + 16);
+        // sparse never chosen when disallowed
+        assert_eq!(vec_len(&sparse1, false), 1 + 4 + 16);
+    }
+
+    #[test]
+    fn hello_roundtrip_and_len() {
+        let h = Hello { s: 3, p: 4, n_s: 12345, d: 77 };
+        let frame = encode_hello(&h);
+        assert_eq!(frame.len() as u64, hello_frame_len());
+        assert_eq!(decode(&frame), Ok(WireMsg::Hello(h)));
+    }
+
+    /// A transport that knows the session dimension can reject a foreign
+    /// (or hostile) declared dimension before any allocation.
+    #[test]
+    fn bounded_decode_rejects_foreign_dimension() {
+        let up = Upload::XOnly { x: vec![1.0; 8] };
+        let frame = encode_upload(&up);
+        assert!(decode_bounded(&frame, 8).is_ok());
+        assert_eq!(
+            decode_bounded(&frame, 7),
+            Err(CodecError::DimTooLarge { d: 8 })
+        );
+    }
+
+    #[test]
+    fn sparse_delta_roundtrip_exact() {
+        let mut dx = vec![0.0f32; 64];
+        dx[3] = 1.5;
+        dx[60] = -2.25;
+        let up = Upload::Delta { dx, dgbar: vec![0.0; 64] };
+        let frame = encode_upload(&up);
+        assert_eq!(frame.len() as u64, upload_frame_len(&up));
+        assert_eq!(decode(&frame), Ok(WireMsg::Upload(up)));
+    }
+
+    #[test]
+    fn view_roundtrip() {
+        let v = GlobalView { x: vec![1.0, -2.0], gbar: Vec::new() };
+        let frame = encode_view(&v);
+        assert_eq!(frame.len() as u64, view_frame_len(&v));
+        assert_eq!(decode(&frame), Ok(WireMsg::View(v)));
+    }
+
+    #[test]
+    fn prefix_cap_enforced() {
+        let mut frame = encode_upload(&Upload::Ready);
+        frame[..4].copy_from_slice(&(MAX_FRAME_BODY + 1).to_le_bytes());
+        assert_eq!(
+            decode(&frame),
+            Err(CodecError::FrameTooLarge { len: MAX_FRAME_BODY + 1 })
+        );
+    }
+}

@@ -15,6 +15,12 @@
 //! storage-agnostic: the engine and gradient operators dispatch on
 //! [`crate::data::dataset::RowView`], so every distributed algorithm runs
 //! CSR shards natively (see `rust/tests/sparse_parity.rs`).
+//!
+//! Three drivers share these rounds: the real-thread engine
+//! ([`crate::exec::threads`]), the discrete-event simulator
+//! ([`crate::exec::simulator`]), and the TCP transport
+//! ([`crate::dist::transport::run_worker`]), which runs a node in its own
+//! OS process against a socket server.
 
 use crate::data::dataset::Dataset;
 use crate::dist::messages::{GlobalView, Upload};

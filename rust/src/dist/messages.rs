@@ -2,18 +2,21 @@
 //!
 //! Every distributed algorithm in the paper reduces to two message shapes:
 //! an [`Upload`] (worker -> server) and a [`GlobalView`] (server -> worker
-//! reply/broadcast). Both report their serialized size via `bytes()` —
-//! payload `f32`s at 4 bytes each plus explicit scalar fields — which is
-//! what the simulator charges against the network model and what the
-//! Table 1 / Fig 2 communication-cost comparisons measure. There is no
-//! real serialization yet (both execution engines are in-process); a
-//! socket/RPC transport would encode exactly these enums.
+//! reply/broadcast). Both report their serialized size via `bytes()`,
+//! which is *derived from the real codec* ([`crate::dist::codec`]): the
+//! exact length-prefixed frame the TCP transport puts on the wire,
+//! including the prefix, tag, vector headers, and the automatic
+//! dense-vs-sparse payload choice for `Delta`/`GradPartial`. That single
+//! source of truth is what the simulator charges against the network
+//! model and what the Table 1 / Fig 2 communication-cost comparisons
+//! measure, so simulated and real runs price traffic identically.
 
 /// Worker -> server message, one variant per protocol interaction.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Upload {
     /// Zero-payload barrier marker: "I am quiescent" (PS-SVRG snapshot
-    /// freeze). Costs a tag word on the wire, no compute.
+    /// freeze). Costs a length prefix plus a tag byte on the wire (5
+    /// bytes), no compute.
     Ready,
     /// Asynchronous delta (CVR-Async, D-SAGA): the *change* in the
     /// worker's local iterate since its last upload, plus the change in
@@ -42,19 +45,13 @@ pub enum Upload {
 }
 
 impl Upload {
-    /// Serialized payload size in bytes (f32 = 4; u64 = 8; Ready = one
-    /// tag word). Used for the simulator's transfer-time charges and the
+    /// Serialized size in bytes: the exact encoded frame length (length
+    /// prefix included) from [`crate::dist::codec`], so the sparse wire
+    /// encoding for `Delta`/`GradPartial` is priced automatically. Used
+    /// for the simulator's transfer-time charges and the
     /// communication-cost counters.
     pub fn bytes(&self) -> u64 {
-        match self {
-            Upload::Ready => 4,
-            Upload::Delta { dx, dgbar } => 4 * (dx.len() + dgbar.len()) as u64,
-            Upload::State { x, gbar } => 4 * (x.len() + gbar.len()) as u64,
-            Upload::GradPartial { gsum, .. } => 4 * gsum.len() as u64 + 8,
-            Upload::XOnly { x } => 4 * x.len() as u64,
-            Upload::ElasticPush { x } => 4 * x.len() as u64,
-            Upload::GradStep { dx } => 4 * dx.len() as u64,
-        }
+        crate::dist::codec::upload_frame_len(self)
     }
 
     /// Short label for logs and traces.
@@ -81,9 +78,10 @@ pub struct GlobalView {
 }
 
 impl GlobalView {
-    /// Serialized payload size in bytes.
+    /// Serialized size in bytes: the exact encoded frame length from
+    /// [`crate::dist::codec`] (length prefix included).
     pub fn bytes(&self) -> u64 {
-        4 * (self.x.len() + self.gbar.len()) as u64
+        crate::dist::codec::view_frame_len(self)
     }
 }
 
@@ -91,40 +89,58 @@ impl GlobalView {
 mod tests {
     use super::*;
 
+    use crate::dist::codec;
+
+    /// Frame anatomy: 4-byte length prefix + 1 tag byte; each dense
+    /// vector costs a 5-byte header (mode + d) plus 4 bytes per f32.
     #[test]
     fn upload_bytes_accounting() {
         let d = 7usize;
-        assert_eq!(Upload::Ready.bytes(), 4);
+        let dense_vec = (5 + 4 * d) as u64;
+        assert_eq!(Upload::Ready.bytes(), 5);
         let delta = Upload::Delta {
-            dx: vec![0.0; d],
-            dgbar: vec![0.0; d],
+            dx: vec![1.0; d],
+            dgbar: vec![1.0; d],
         };
-        assert_eq!(delta.bytes(), (2 * d * 4) as u64);
+        assert_eq!(delta.bytes(), 5 + 2 * dense_vec);
         let state = Upload::State {
             x: vec![0.0; d],
             gbar: vec![0.0; d],
         };
-        assert_eq!(state.bytes(), (2 * d * 4) as u64);
+        // State never ships sparse, even when the payload is all zeros
+        assert_eq!(state.bytes(), 5 + 2 * dense_vec);
         let partial = Upload::GradPartial {
-            gsum: vec![0.0; d],
+            gsum: vec![1.0; d],
             n: 128,
         };
-        assert_eq!(partial.bytes(), (d * 4 + 8) as u64);
-        assert_eq!(Upload::XOnly { x: vec![0.0; d] }.bytes(), (d * 4) as u64);
-        assert_eq!(
-            Upload::ElasticPush { x: vec![0.0; d] }.bytes(),
-            (d * 4) as u64
-        );
-        assert_eq!(Upload::GradStep { dx: vec![0.0; d] }.bytes(), (d * 4) as u64);
+        assert_eq!(partial.bytes(), 5 + 8 + dense_vec);
+        assert_eq!(Upload::XOnly { x: vec![0.0; d] }.bytes(), 5 + dense_vec);
+        assert_eq!(Upload::ElasticPush { x: vec![0.0; d] }.bytes(), 5 + dense_vec);
+        assert_eq!(Upload::GradStep { dx: vec![0.0; d] }.bytes(), 5 + dense_vec);
+    }
+
+    /// Delta payloads switch to the sparse pair encoding when that is
+    /// strictly smaller: 9-byte vector header + 8 bytes per nonzero.
+    #[test]
+    fn sparse_delta_bytes_scale_with_nnz() {
+        let d = 100usize;
+        let mut dx = vec![0.0f32; d];
+        dx[17] = 1.0;
+        dx[80] = -1.0;
+        let up = Upload::Delta { dx, dgbar: vec![0.0; d] };
+        assert_eq!(up.bytes(), 5 + (9 + 2 * 8) + 9);
+        // nearly-dense payloads fall back to the dense encoding
+        let up = Upload::Delta { dx: vec![1.0; d], dgbar: vec![1.0; d] };
+        assert_eq!(up.bytes(), 5 + 2 * (5 + 4 * d) as u64);
     }
 
     #[test]
     fn asymmetric_delta_payloads_count_both_halves() {
         let up = Upload::Delta {
-            dx: vec![0.0; 3],
-            dgbar: vec![0.0; 5],
+            dx: vec![1.0; 3],
+            dgbar: vec![1.0; 5],
         };
-        assert_eq!(up.bytes(), 4 * (3 + 5));
+        assert_eq!(up.bytes(), 5 + (5 + 4 * 3) + (5 + 4 * 5));
     }
 
     #[test]
@@ -133,12 +149,40 @@ mod tests {
             x: vec![0.0; 5],
             gbar: vec![0.0; 5],
         };
-        assert_eq!(v.bytes(), 40);
+        assert_eq!(v.bytes(), 5 + 2 * (5 + 20));
         let v = GlobalView {
             x: vec![0.0; 5],
             gbar: Vec::new(),
         };
-        assert_eq!(v.bytes(), 20);
+        assert_eq!(v.bytes(), 5 + (5 + 20) + 5);
+    }
+
+    /// The invariant the whole accounting rests on: `bytes()` equals the
+    /// encoded frame length, for every variant.
+    #[test]
+    fn bytes_equals_encoded_len() {
+        let d = 9usize;
+        let mut sparse = vec![0.0f32; d];
+        sparse[4] = 2.0;
+        let ups = [
+            Upload::Ready,
+            Upload::Delta { dx: sparse.clone(), dgbar: vec![1.0; d] },
+            Upload::State { x: vec![1.0; d], gbar: vec![-1.0; d] },
+            Upload::GradPartial { gsum: sparse, n: 31 },
+            Upload::XOnly { x: vec![0.5; d] },
+            Upload::ElasticPush { x: vec![0.5; d] },
+            Upload::GradStep { dx: vec![0.5; d] },
+        ];
+        for up in &ups {
+            assert_eq!(
+                up.bytes(),
+                codec::encode_upload(up).len() as u64,
+                "{}",
+                up.kind()
+            );
+        }
+        let v = GlobalView { x: vec![1.0; d], gbar: vec![2.0; d] };
+        assert_eq!(v.bytes(), codec::encode_view(&v).len() as u64);
     }
 
     #[test]

@@ -1,20 +1,38 @@
-//! The distributed protocol core: wire [`messages`], the central
-//! [`server`] state (the paper's "locked" server, §6.2), per-worker
-//! [`local`] nodes implementing every distributed algorithm's round math
-//! (Algorithms 2–5 plus the EASGD / parameter-server-SVRG baselines), and
-//! the [`DistConfig`] hyper-parameter bundle shared by both execution
-//! engines.
+//! The distributed protocol core: wire [`messages`], their binary
+//! [`codec`], the TCP [`transport`], the central [`server`] state (the
+//! paper's "locked" server, §6.2), per-worker [`local`] nodes
+//! implementing every distributed algorithm's round math (Algorithms 2–5
+//! plus the EASGD / parameter-server-SVRG baselines), and the
+//! [`DistConfig`] hyper-parameter bundle shared by every execution
+//! engine.
 //!
 //! The protocol is deliberately engine-agnostic: a round is
 //! `LocalNode::*_round(&GlobalView) -> Upload`, and the server exposes one
 //! `apply_*` per upload kind. [`crate::exec::threads`] drives these under
 //! a mutex on real threads; [`crate::exec::simulator`] drives the *same*
-//! methods from a discrete-event loop with virtual time — so convergence
-//! behaviour is identical and only the clock differs.
+//! methods from a discrete-event loop with virtual time; and
+//! [`transport`] drives them over real sockets between OS processes — so
+//! convergence behaviour is identical and only the clock (and the process
+//! boundary) differs.
+//!
+//! # Wire format
+//!
+//! One frame per message: a `u32` little-endian length prefix, a tag
+//! byte, scalar fields, then payload vectors that are dense
+//! (`d x f32`) or sparse (strictly-increasing `(u32 index, f32 value)`
+//! pairs) — the encoder picks whichever is smaller for `Delta` /
+//! `GradPartial` payloads. `Upload::bytes()` / `GlobalView::bytes()`
+//! report the exact encoded frame length, so the simulator's network
+//! charges and the Table 1 / Fig 2 byte counters price precisely what
+//! the TCP transport carries. See [`codec`] for the layout diagram and
+//! `centralvr dist serve` / `centralvr dist worker` for multi-process
+//! runs.
 
+pub mod codec;
 pub mod local;
 pub mod messages;
 pub mod server;
+pub mod transport;
 
 use crate::config::schema::{Algorithm, NetworkModel};
 

@@ -166,11 +166,37 @@ impl ServerState {
         self.updates += 1;
     }
 
+    /// Apply one complete barrier round collected by a transport,
+    /// dispatching on the upload kind: `State` -> weighted sync average,
+    /// `GradPartial` -> pooled gradient, `XOnly` -> x-average, `Ready` ->
+    /// freeze (no state change). Returns an error — never panics — on
+    /// mixed or non-barrier kinds, so a TCP server can reject a
+    /// misbehaving client without crashing the run.
+    pub fn apply_barrier_round(
+        &mut self,
+        uploads: &[Upload],
+        weights: &[f64],
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(!uploads.is_empty(), "empty barrier round");
+        let kind = uploads[0].kind();
+        anyhow::ensure!(
+            uploads.iter().all(|u| u.kind() == kind),
+            "mixed upload kinds in one barrier round (first is {kind})"
+        );
+        match uploads[0] {
+            Upload::State { .. } => self.apply_sync_average(uploads, weights),
+            Upload::GradPartial { .. } => self.apply_grad_partials(uploads),
+            Upload::XOnly { .. } => self.apply_x_average(uploads, weights),
+            Upload::Ready => {} // freeze barrier: collect only
+            _ => anyhow::bail!("{kind} is not a barrier upload"),
+        }
+        Ok(())
+    }
+
     /// Deposit an upload into the server-side barrier inbox; returns the
     /// complete round (in worker order) once all `p` have arrived. The
-    /// in-process engines run their own barrier collection, so today this
-    /// is exercised by tests — it is the collection point a socket/RPC
-    /// transport would use.
+    /// in-process engines run their own barrier collection; this is the
+    /// collection point the TCP transport uses.
     pub fn deposit(&mut self, s: usize, up: Upload) -> Option<Vec<Upload>> {
         assert!(self.inbox[s].is_none(), "double deposit from worker {s}");
         self.inbox[s] = Some(up);
@@ -317,6 +343,33 @@ mod tests {
         let v = s.view();
         assert_eq!(v.x, vec![1.0, 2.0]);
         assert_eq!(v.gbar, vec![3.0, 4.0]);
-        assert_eq!(v.bytes(), 16);
+        // codec frame: prefix(4) + tag(1) + 2 dense vectors (5 + 4*2 each)
+        assert_eq!(v.bytes(), 31);
+    }
+
+    #[test]
+    fn barrier_round_dispatches_on_kind() {
+        let mut s = ServerState::new(2, 2, 0.9);
+        let ups = vec![
+            Upload::State { x: vec![1.0, 0.0], gbar: vec![2.0, 0.0] },
+            Upload::State { x: vec![0.0, 1.0], gbar: vec![0.0, 2.0] },
+        ];
+        s.apply_barrier_round(&ups, &[0.5, 0.5]).unwrap();
+        assert!(close(&s.x, &[0.5, 0.5], 1e-6), "{:?}", s.x);
+        // freeze rounds change nothing
+        let before = s.clone();
+        s.apply_barrier_round(&[Upload::Ready, Upload::Ready], &[0.5, 0.5])
+            .unwrap();
+        assert_eq!(s.x, before.x);
+        assert_eq!(s.updates, before.updates);
+        // mixed kinds and async kinds are rejected, not panicked on
+        let mixed = vec![Upload::Ready, Upload::XOnly { x: vec![0.0, 0.0] }];
+        assert!(s.apply_barrier_round(&mixed, &[0.5, 0.5]).is_err());
+        let bad = vec![
+            Upload::GradStep { dx: vec![0.0, 0.0] },
+            Upload::GradStep { dx: vec![0.0, 0.0] },
+        ];
+        assert!(s.apply_barrier_round(&bad, &[0.5, 0.5]).is_err());
+        assert!(s.apply_barrier_round(&[], &[]).is_err());
     }
 }

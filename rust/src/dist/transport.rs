@@ -1,0 +1,549 @@
+//! Blocking TCP transport for the dist protocol: real sockets carrying
+//! the [`crate::dist::codec`] frames, so distributed runs span OS
+//! processes instead of threads sharing an address space.
+//!
+//! Three pieces:
+//!
+//! * [`serve`] — a single-threaded central server over a [`TcpListener`].
+//!   It accepts `p` connections, identifies each worker from its
+//!   [`Hello`] handshake (worker slot, shard size for barrier weights,
+//!   feature dimension), then services uploads in a deterministic
+//!   worker-order scan: barrier kinds (`Ready`/`State`/`GradPartial`/
+//!   `XOnly`) go through [`ServerState::deposit`] and are applied with
+//!   [`ServerState::apply_barrier_round`] when the round completes;
+//!   async kinds (`Delta`/`ElasticPush`/`GradStep`) are applied and
+//!   answered immediately. The scan order makes async runs reproducible:
+//!   uploads apply in worker order within each sweep, exactly like the
+//!   discrete-event simulator with homogeneous workers.
+//! * [`TcpClient`] — one worker's connection: handshake on connect, then
+//!   `exchange(upload) -> view` round trips.
+//! * [`run_worker`] — drives a [`LocalNode`] through its full round
+//!   budget over a [`TcpClient`], mirroring `exec::threads::worker_loop`
+//!   round-for-round so TCP endpoints are comparable with the in-process
+//!   engines on the same seed (see `rust/tests/tcp_loopback.rs`).
+//!
+//! Byte accounting is measured twice on purpose: [`ServeReport`] carries
+//! both the actual frame lengths moved over the socket
+//! (`bytes_on_wire`) and the same traffic priced by `Upload::bytes()` /
+//! `GlobalView::bytes()` (`bytes_accounted`). The two must always be
+//! equal — that is the invariant that keeps the simulator's cost model
+//! honest — and the loopback tests assert it.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::schema::Algorithm;
+use crate::data::dataset::Dataset;
+use crate::dist::codec::{self, Hello, WireMsg, MAX_FRAME_BODY};
+use crate::dist::local::LocalNode;
+use crate::dist::messages::{GlobalView, Upload};
+use crate::dist::server::ServerState;
+use crate::dist::DistConfig;
+use crate::model::glm::Problem;
+
+/// Read one complete frame (prefix + body). Returns `Ok(None)` on a clean
+/// EOF at a frame boundary; EOF mid-frame, a hostile length prefix, or an
+/// I/O failure are errors.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    read_frame_bounded(r, MAX_FRAME_BODY)
+}
+
+/// [`read_frame`] with an explicit body cap: the length prefix is
+/// attacker-controlled and the body buffer is allocated from it, so a
+/// session that knows its dimension passes
+/// [`codec::max_body_for_dim`]`(d)` to keep a hostile 4-byte prefix from
+/// forcing a [`MAX_FRAME_BODY`]-sized allocation.
+pub fn read_frame_bounded(r: &mut impl Read, max_body: u32) -> Result<Option<Vec<u8>>> {
+    let mut prefix = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        let k = r.read(&mut prefix[got..])?;
+        if k == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            bail!("connection closed mid length prefix ({got}/4 bytes)");
+        }
+        got += k;
+    }
+    let len = u32::from_le_bytes(prefix);
+    ensure!(
+        len <= max_body,
+        "frame body of {len} bytes exceeds cap {max_body}"
+    );
+    let mut frame = vec![0u8; 4 + len as usize];
+    frame[..4].copy_from_slice(&prefix);
+    r.read_exact(&mut frame[4..])
+        .context("connection closed mid frame body")?;
+    Ok(Some(frame))
+}
+
+/// Read and decode one message, returning it with its on-wire frame size.
+pub fn read_msg(r: &mut impl Read) -> Result<Option<(WireMsg, u64)>> {
+    read_msg_bounded(r, codec::MAX_WIRE_DIM)
+}
+
+/// [`read_msg`] with a cap on declared vector dimensions: once a session
+/// has established its `d`, passing it here bounds both the frame-buffer
+/// allocation (via [`codec::max_body_for_dim`]) and the decoded-vector
+/// allocation a hostile header could otherwise force from a tiny frame.
+pub fn read_msg_bounded(r: &mut impl Read, max_dim: u32) -> Result<Option<(WireMsg, u64)>> {
+    match read_frame_bounded(r, codec::max_body_for_dim(max_dim))? {
+        None => Ok(None),
+        Some(frame) => {
+            let msg = codec::decode_bounded(&frame, max_dim)?;
+            Ok(Some((msg, frame.len() as u64)))
+        }
+    }
+}
+
+/// One worker's connection to the central server.
+pub struct TcpClient {
+    stream: TcpStream,
+    /// Session feature dimension; bounds reply decoding.
+    dim: u32,
+    /// Actual frame bytes written (handshake included).
+    pub bytes_sent: u64,
+    /// Actual frame bytes read.
+    pub bytes_received: u64,
+}
+
+impl TcpClient {
+    /// Connect and send the identifying handshake.
+    pub fn connect(addr: &str, hello: Hello) -> Result<TcpClient> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("worker {}: connect to {addr}", hello.s))?;
+        stream.set_nodelay(true).ok();
+        let mut client = TcpClient {
+            stream,
+            dim: hello.d,
+            bytes_sent: 0,
+            bytes_received: 0,
+        };
+        client.send_raw(&codec::encode_hello(&hello))?;
+        Ok(client)
+    }
+
+    fn send_raw(&mut self, frame: &[u8]) -> Result<()> {
+        self.stream.write_all(frame)?;
+        self.bytes_sent += frame.len() as u64;
+        Ok(())
+    }
+
+    /// One protocol round trip: send an upload, block for the reply view.
+    pub fn exchange(&mut self, up: &Upload) -> Result<GlobalView> {
+        self.send_raw(&codec::encode_upload(up))?;
+        match read_msg_bounded(&mut self.stream, self.dim)? {
+            Some((WireMsg::View(v), n)) => {
+                self.bytes_received += n;
+                Ok(v)
+            }
+            Some((other, _)) => bail!("expected a GlobalView reply, got {other:?}"),
+            None => bail!("server closed the connection mid round"),
+        }
+    }
+}
+
+/// Server-side knobs (everything else arrives in the Hello handshakes).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Worker count to accept; barriers wait for all of them.
+    pub p: usize,
+    /// EASGD elastic coefficient (applied as `beta / p` per push).
+    pub easgd_beta: f32,
+}
+
+/// What a completed [`serve`] run measured.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Final global iterate.
+    pub x: Vec<f32>,
+    /// Final global average-gradient estimate.
+    pub gbar: Vec<f32>,
+    /// Server updates applied.
+    pub updates: u64,
+    /// Actual bytes of Upload/GlobalView frames on the wire, both
+    /// directions (handshakes excluded).
+    pub bytes_on_wire: u64,
+    /// The same traffic priced by `Upload::bytes()`/`GlobalView::bytes()`.
+    /// Always equals `bytes_on_wire`; reported separately so tests can
+    /// assert the accounting never drifts from the codec.
+    pub bytes_accounted: u64,
+    /// Hello handshake bytes (not charged by the in-process engines).
+    pub bytes_handshake: u64,
+    /// Upload + view frames carried (handshakes excluded).
+    pub frames: u64,
+}
+
+fn check_dims(up: &Upload, d: usize) -> Result<()> {
+    let ok = match up {
+        Upload::Ready => true,
+        Upload::Delta { dx, dgbar } => dx.len() == d && dgbar.len() == d,
+        Upload::State { x, gbar } => x.len() == d && gbar.len() == d,
+        Upload::GradPartial { gsum, .. } => gsum.len() == d,
+        Upload::XOnly { x } | Upload::ElasticPush { x } => x.len() == d,
+        Upload::GradStep { dx } => dx.len() == d,
+    };
+    ensure!(ok, "upload {} payload dimension != d={d}", up.kind());
+    Ok(())
+}
+
+fn is_barrier_kind(up: &Upload) -> bool {
+    matches!(
+        up,
+        Upload::Ready | Upload::State { .. } | Upload::GradPartial { .. } | Upload::XOnly { .. }
+    )
+}
+
+/// Run the central server until every worker has disconnected cleanly.
+///
+/// Deterministic by construction: workers are serviced in worker-id order
+/// (blocking on each in turn), never by arrival timing, so a TCP run is a
+/// pure function of the workers' seeds — races cannot change the math.
+///
+/// Workers must share one barrier schedule: unlike `exec::threads`, there
+/// is no server->worker stop signal, so if schedules desync — e.g.
+/// PS-SVRG on *uneven* shards, where `ps_cycle` differs per worker and
+/// budgets run out mid-cycle — the run ends with a loud "barrier stalled"
+/// error rather than a hang or silently wrong math. Stop propagation is a
+/// ROADMAP follow-on.
+pub fn serve(listener: TcpListener, cfg: ServeConfig) -> Result<ServeReport> {
+    ensure!(cfg.p >= 1, "need at least one worker");
+    // accept phase: p connections, identified by their Hello
+    let mut slots: Vec<Option<TcpStream>> = (0..cfg.p).map(|_| None).collect();
+    let mut n_s = vec![0u64; cfg.p];
+    let mut dim: Option<u32> = None;
+    let mut bytes_handshake = 0u64;
+    for _ in 0..cfg.p {
+        let (mut stream, _) = listener.accept()?;
+        stream.set_nodelay(true).ok();
+        // a Hello carries no vectors, so bound decoding at dim 0: hostile
+        // first frames cannot force a large allocation pre-handshake
+        let Some((msg, len)) = read_msg_bounded(&mut stream, 0)? else {
+            bail!("worker closed before its Hello");
+        };
+        let h = match msg {
+            WireMsg::Hello(h) => h,
+            other => bail!("expected a Hello handshake, got {other:?}"),
+        };
+        bytes_handshake += len;
+        let s = h.s as usize;
+        ensure!(s < cfg.p, "worker id {s} out of range (p={})", cfg.p);
+        ensure!(slots[s].is_none(), "duplicate worker id {s}");
+        ensure!(
+            h.p as usize == cfg.p,
+            "worker {s} sharded for p={}, server expects p={}",
+            h.p,
+            cfg.p
+        );
+        match dim {
+            None => dim = Some(h.d),
+            Some(d0) => ensure!(
+                d0 == h.d,
+                "worker {s} reports d={}, earlier workers d={d0}",
+                h.d
+            ),
+        }
+        n_s[s] = h.n_s;
+        slots[s] = Some(stream);
+    }
+    let d = dim.expect("p >= 1 so at least one Hello arrived") as usize;
+    let mut conns: Vec<TcpStream> = slots.into_iter().map(|c| c.unwrap()).collect();
+    let n_total: u64 = n_s.iter().sum();
+    ensure!(n_total > 0, "workers reported zero samples in total");
+    let weights: Vec<f64> = n_s.iter().map(|&n| n as f64 / n_total as f64).collect();
+
+    let mut state = ServerState::new(d, cfg.p, cfg.easgd_beta);
+    let mut done = vec![false; cfg.p];
+    let mut in_barrier = vec![false; cfg.p];
+    let mut open = cfg.p;
+    let mut bytes_on_wire = 0u64;
+    let mut bytes_accounted = 0u64;
+    let mut frames = 0u64;
+
+    while open > 0 {
+        // every live worker already deposited into a barrier that can no
+        // longer complete (some peer disconnected): fail loudly instead
+        // of spinning
+        ensure!(
+            (0..cfg.p).any(|s| !done[s] && !in_barrier[s]),
+            "barrier stalled at {}/{} deposits with all remaining workers waiting",
+            state.pending_count(),
+            cfg.p
+        );
+        for s in 0..cfg.p {
+            if done[s] || in_barrier[s] {
+                continue;
+            }
+            let Some((msg, len)) = read_msg_bounded(&mut conns[s], d as u32)? else {
+                done[s] = true;
+                open -= 1;
+                ensure!(
+                    state.pending_count() == 0,
+                    "worker {s} disconnected while a barrier round was pending"
+                );
+                continue;
+            };
+            let up = match msg {
+                WireMsg::Upload(up) => up,
+                other => bail!("worker {s}: expected an Upload, got {other:?}"),
+            };
+            check_dims(&up, d)?;
+            frames += 1;
+            bytes_on_wire += len;
+            bytes_accounted += up.bytes();
+            if is_barrier_kind(&up) {
+                in_barrier[s] = true;
+                if let Some(round) = state.deposit(s, up) {
+                    state.apply_barrier_round(&round, &weights)?;
+                    let view = state.view();
+                    let enc = codec::encode_view(&view);
+                    let view_bytes = view.bytes();
+                    for (conn, waiting) in conns.iter_mut().zip(in_barrier.iter_mut()) {
+                        conn.write_all(&enc)?;
+                        frames += 1;
+                        bytes_on_wire += enc.len() as u64;
+                        bytes_accounted += view_bytes;
+                        *waiting = false;
+                    }
+                }
+            } else {
+                let view = match &up {
+                    Upload::Delta { .. } => {
+                        state.apply_delta(&up);
+                        state.view()
+                    }
+                    Upload::ElasticPush { .. } => GlobalView {
+                        x: state.apply_elastic(&up),
+                        gbar: Vec::new(),
+                    },
+                    Upload::GradStep { .. } => {
+                        state.apply_grad_step(&up);
+                        state.view()
+                    }
+                    _ => unreachable!("non-barrier kinds are exactly these three"),
+                };
+                let enc = codec::encode_view(&view);
+                conns[s].write_all(&enc)?;
+                frames += 1;
+                bytes_on_wire += enc.len() as u64;
+                bytes_accounted += view.bytes();
+            }
+        }
+    }
+    Ok(ServeReport {
+        x: state.x.clone(),
+        gbar: state.gbar.clone(),
+        updates: state.updates,
+        bytes_on_wire,
+        bytes_accounted,
+        bytes_handshake,
+        frames,
+    })
+}
+
+/// What one TCP worker did over its round budget.
+#[derive(Clone, Debug)]
+pub struct WorkerReport {
+    /// Rounds completed (same semantics as the in-process engines).
+    pub rounds: usize,
+    /// Gradient evaluations charged over the run.
+    pub grad_evals: u64,
+    /// Parameter updates performed over the run.
+    pub iterations: u64,
+    /// Actual frame bytes written (handshake included).
+    pub bytes_sent: u64,
+    /// Actual frame bytes read.
+    pub bytes_received: u64,
+    /// Final local iterate (diagnostics).
+    pub x: Vec<f32>,
+}
+
+/// Drive one worker's full round budget over TCP. The loop mirrors
+/// `exec::threads::worker_loop` round-for-round (including D-SVRG's
+/// two-phase rounds and PS-SVRG's snapshot cycle), so a TCP run does the
+/// same math as the in-process engines on the same seed. Convergence-based
+/// early stop is not propagated over the wire: TCP runs execute the fixed
+/// `max_rounds` budget.
+pub fn run_worker(
+    addr: &str,
+    s: usize,
+    problem: Problem,
+    shard: &Dataset,
+    n_global: usize,
+    cfg: DistConfig,
+) -> Result<WorkerReport> {
+    let d = shard.d();
+    let mut node = LocalNode::new(s, shard, problem, cfg, n_global);
+    let hello = Hello {
+        s: s as u32,
+        p: cfg.p as u32,
+        n_s: shard.n() as u64,
+        d: d as u32,
+    };
+    let mut client = TcpClient::connect(addr, hello)?;
+    let mut view = GlobalView {
+        x: vec![0.0; d],
+        gbar: vec![0.0; d],
+    };
+    let ps_cycle = (2 * shard.n()).div_ceil(cfg.ps_batch.max(1));
+    let mut grad_evals = 0u64;
+    let mut iterations = 0u64;
+    let mut round = 0usize;
+    while round < cfg.max_rounds {
+        match cfg.algorithm {
+            Algorithm::CentralVrSync => {
+                let up = node.cvr_sync_round(&view);
+                grad_evals += node.last_round_evals;
+                iterations += node.last_round_iters;
+                view = client.exchange(&up)?;
+            }
+            Algorithm::CentralVrAsync => {
+                let up = node.cvr_async_round(&view);
+                grad_evals += node.last_round_evals;
+                iterations += node.last_round_iters;
+                view = client.exchange(&up)?;
+            }
+            Algorithm::DistSvrg => {
+                let up = node.dsvrg_grad_partial(&view);
+                grad_evals += node.last_round_evals;
+                iterations += node.last_round_iters;
+                let v = client.exchange(&up)?;
+                // each phase counts as a round (same semantics as the
+                // in-process engines, so budgets line up exactly)
+                round += 1;
+                if round >= cfg.max_rounds {
+                    break;
+                }
+                let up = node.dsvrg_inner_round(&v);
+                grad_evals += node.last_round_evals;
+                iterations += node.last_round_iters;
+                view = client.exchange(&up)?;
+            }
+            Algorithm::DistSaga => {
+                let up = if round == 0 {
+                    node.dsaga_init()
+                } else {
+                    node.dsaga_round(&view)
+                };
+                grad_evals += node.last_round_evals;
+                iterations += node.last_round_iters;
+                view = client.exchange(&up)?;
+            }
+            Algorithm::Easgd => {
+                let up = node.easgd_round();
+                grad_evals += node.last_round_evals;
+                iterations += node.last_round_iters;
+                let v = client.exchange(&up)?;
+                node.easgd_adopt(v.x);
+            }
+            Algorithm::PsSvrg => {
+                let v = client.exchange(&Upload::Ready)?;
+                let up = node.ps_svrg_snapshot(&v);
+                grad_evals += node.last_round_evals;
+                iterations += node.last_round_iters;
+                let mut v = client.exchange(&up)?;
+                for _ in 0..ps_cycle {
+                    if round >= cfg.max_rounds {
+                        break;
+                    }
+                    let up = node.ps_svrg_round(&v);
+                    grad_evals += node.last_round_evals;
+                    iterations += node.last_round_iters;
+                    v = client.exchange(&up)?;
+                    round += 1;
+                }
+                view = v;
+            }
+            a => bail!("not a distributed algorithm: {a:?}"),
+        }
+        round += 1;
+    }
+    Ok(WorkerReport {
+        rounds: round,
+        grad_evals,
+        iterations,
+        bytes_sent: client.bytes_sent,
+        bytes_received: client.bytes_received,
+        x: node.x().to_vec(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn read_frame_clean_eof_is_none() {
+        let mut r = std::io::empty();
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn read_frame_truncated_prefix_errors() {
+        let mut r = Cursor::new([3u8, 0]);
+        let err = read_frame(&mut r).unwrap_err();
+        assert!(err.to_string().contains("length prefix"), "{err}");
+    }
+
+    #[test]
+    fn read_frame_truncated_body_errors() {
+        let mut bytes = codec::encode_upload(&Upload::Ready);
+        bytes.truncate(4); // prefix says 1 body byte, stream has none
+        let mut r = Cursor::new(bytes);
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn read_frame_rejects_hostile_prefix_before_allocating() {
+        let mut bytes = (MAX_FRAME_BODY + 1).to_le_bytes().to_vec();
+        bytes.push(0);
+        let mut r = Cursor::new(bytes);
+        let err = read_frame(&mut r).unwrap_err();
+        assert!(err.to_string().contains("exceeds cap"), "{err}");
+    }
+
+    /// A session bound to a small d must reject a cap-sized length prefix
+    /// before allocating the body buffer — the prefix is attacker data.
+    #[test]
+    fn session_bound_rejects_oversized_prefix() {
+        let mut bytes = 1_000_000u32.to_le_bytes().to_vec();
+        bytes.extend_from_slice(&[0u8; 16]);
+        let mut r = Cursor::new(bytes);
+        let err = read_msg_bounded(&mut r, 16).unwrap_err();
+        assert!(err.to_string().contains("exceeds cap"), "{err}");
+        // the same prefix would pass the generic (unbounded-session) cap
+        assert!(1_000_000 < MAX_FRAME_BODY);
+        // and every legitimate d=16 frame still fits the session cap
+        let view = GlobalView { x: vec![1.0; 16], gbar: vec![1.0; 16] };
+        assert!(view.bytes() - 4 <= codec::max_body_for_dim(16) as u64);
+    }
+
+    #[test]
+    fn read_msg_roundtrips_a_frame_stream() {
+        let up = Upload::XOnly { x: vec![1.0, -2.0] };
+        let view = GlobalView { x: vec![0.5], gbar: vec![0.25] };
+        let mut stream = codec::encode_upload(&up);
+        stream.extend_from_slice(&codec::encode_view(&view));
+        let mut r = Cursor::new(stream);
+        let (m1, n1) = read_msg(&mut r).unwrap().unwrap();
+        assert_eq!(m1, WireMsg::Upload(up.clone()));
+        assert_eq!(n1, up.bytes());
+        let (m2, n2) = read_msg(&mut r).unwrap().unwrap();
+        assert_eq!(m2, WireMsg::View(view.clone()));
+        assert_eq!(n2, view.bytes());
+        assert!(read_msg(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn check_dims_rejects_mismatched_payloads() {
+        assert!(check_dims(&Upload::Ready, 4).is_ok());
+        assert!(check_dims(&Upload::XOnly { x: vec![0.0; 4] }, 4).is_ok());
+        assert!(check_dims(&Upload::XOnly { x: vec![0.0; 3] }, 4).is_err());
+        let lopsided = Upload::Delta { dx: vec![0.0; 4], dgbar: vec![0.0; 3] };
+        assert!(check_dims(&lopsided, 4).is_err());
+    }
+}

@@ -282,7 +282,9 @@ impl<'a> Sim<'a> {
         if matches!(upload, Upload::Ready) {
             // freeze-barrier marker: no compute, tiny message
             self.rounds[s] += 1;
-            let arrive = t0 + self.cfg.network.transfer_time(upload.bytes());
+            let bytes = upload.bytes();
+            self.counters.add_frame_bytes(bytes);
+            let arrive = t0 + self.cfg.network.transfer_time(bytes);
             self.push(arrive, EventKind::Arrive { s, upload, phase });
             return;
         }
@@ -294,7 +296,7 @@ impl<'a> Sim<'a> {
         self.rounds[s] += 1;
         let compute = self.params.cost.block_time(evals, self.speeds[s]);
         let bytes = upload.bytes();
-        self.counters.add_bytes(bytes);
+        self.counters.add_frame_bytes(bytes);
         let arrive = t0 + compute + self.cfg.network.transfer_time(bytes);
         self.push(arrive, EventKind::Arrive { s, upload, phase });
     }
@@ -373,7 +375,7 @@ impl<'a> Sim<'a> {
             self.record(done);
         }
         let bytes = view.bytes();
-        self.counters.add_bytes(bytes);
+        self.counters.add_frame_bytes(bytes);
         let phase = self.next_phase(s, Phase::Regular);
         let reply_at = done + self.cfg.network.transfer_time(bytes);
         self.push(reply_at, EventKind::Reply { s, view, phase });
@@ -413,7 +415,7 @@ impl<'a> Sim<'a> {
         for s in 0..self.cfg.p {
             let view = self.server.view();
             let bytes = view.bytes();
-            self.counters.add_bytes(bytes);
+            self.counters.add_frame_bytes(bytes);
             let phase_next = self.next_phase(s, phase);
             let reply_at = done + self.cfg.network.transfer_time(bytes);
             self.push(reply_at, EventKind::Reply { s, view, phase: phase_next });

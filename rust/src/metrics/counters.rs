@@ -15,8 +15,12 @@ pub struct Counters {
     pub iterations: AtomicU64,
     /// f32 scalars persisted in gradient tables (storage requirement).
     pub stored_scalars: AtomicU64,
-    /// Bytes sent worker->server plus server->worker.
+    /// Bytes sent worker->server plus server->worker, priced as encoded
+    /// codec frames (`Upload::bytes()` / `GlobalView::bytes()`), so the
+    /// totals match what the TCP transport actually carries.
     pub bytes_communicated: AtomicU64,
+    /// Wire frames carried (one per upload and one per view reply).
+    pub frames: AtomicU64,
     /// Round-trips with the central server.
     pub server_rounds: AtomicU64,
 }
@@ -40,9 +44,13 @@ impl Counters {
         self.stored_scalars.store(n, Ordering::Relaxed);
     }
 
+    /// Charge one wire frame of `n` encoded bytes. The only byte-charging
+    /// entry point, so `bytes_communicated` and `frames` can never drift
+    /// apart (transports and the simulator both reconcile against that).
     #[inline]
-    pub fn add_bytes(&self, n: u64) {
+    pub fn add_frame_bytes(&self, n: u64) {
         self.bytes_communicated.fetch_add(n, Ordering::Relaxed);
+        self.frames.fetch_add(1, Ordering::Relaxed);
     }
 
     #[inline]
@@ -56,6 +64,7 @@ impl Counters {
             iterations: self.iterations.load(Ordering::Relaxed),
             stored_scalars: self.stored_scalars.load(Ordering::Relaxed),
             bytes_communicated: self.bytes_communicated.load(Ordering::Relaxed),
+            frames: self.frames.load(Ordering::Relaxed),
             server_rounds: self.server_rounds.load(Ordering::Relaxed),
         }
     }
@@ -68,6 +77,7 @@ pub struct CounterSnapshot {
     pub iterations: u64,
     pub stored_scalars: u64,
     pub bytes_communicated: u64,
+    pub frames: u64,
     pub server_rounds: u64,
 }
 
@@ -91,15 +101,26 @@ mod tests {
         let c = Counters::new();
         c.add_grad_evals(10);
         c.add_iterations(5);
-        c.add_bytes(128);
+        c.add_frame_bytes(128);
         c.add_server_round();
         c.set_stored_scalars(1000);
         let s = c.snapshot();
         assert_eq!(s.grad_evals, 10);
         assert_eq!(s.grads_per_iteration(), 2.0);
         assert_eq!(s.bytes_communicated, 128);
+        assert_eq!(s.frames, 1);
         assert_eq!(s.server_rounds, 1);
         assert_eq!(s.stored_scalars, 1000);
+    }
+
+    #[test]
+    fn frame_bytes_charge_both_counters() {
+        let c = Counters::new();
+        c.add_frame_bytes(40);
+        c.add_frame_bytes(23);
+        let s = c.snapshot();
+        assert_eq!(s.bytes_communicated, 63);
+        assert_eq!(s.frames, 2);
     }
 
     #[test]

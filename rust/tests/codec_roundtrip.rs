@@ -1,0 +1,337 @@
+//! Codec property suite: every wire message round-trips exactly, the
+//! `bytes()` accounting equals the encoded frame length, and malformed
+//! frames are rejected with errors — never panics — no matter the input.
+
+use centralvr::dist::codec::{self, CodecError, Hello, WireMsg, MAX_FRAME_BODY};
+use centralvr::dist::messages::{GlobalView, Upload};
+use centralvr::util::propcheck::{ensure, forall, gen_usize};
+use centralvr::util::rng::Pcg64;
+
+/// Payload with tunable sparsity so both dense and sparse wire encodings
+/// are exercised (zero_prob 0.0 forces dense; ~0.9 usually forces sparse).
+fn gen_payload(r: &mut Pcg64, d: usize, zero_prob: f32) -> Vec<f32> {
+    (0..d)
+        .map(|_| {
+            if r.next_f32() < zero_prob {
+                0.0
+            } else {
+                r.normal() as f32
+            }
+        })
+        .collect()
+}
+
+fn gen_upload(r: &mut Pcg64) -> Upload {
+    // lengths 0 and 1 are the edge cases the codec must survive
+    let d = gen_usize(r, 0..40);
+    let zp = [0.0f32, 0.5, 0.95][gen_usize(r, 0..3)];
+    match gen_usize(r, 0..7) {
+        0 => Upload::Ready,
+        1 => Upload::Delta {
+            dx: gen_payload(r, d, zp),
+            dgbar: gen_payload(r, d, zp),
+        },
+        2 => Upload::State {
+            x: gen_payload(r, d, zp),
+            gbar: gen_payload(r, d, zp),
+        },
+        3 => Upload::GradPartial {
+            gsum: gen_payload(r, d, zp),
+            n: r.next_u64() >> 1,
+        },
+        4 => Upload::XOnly { x: gen_payload(r, d, zp) },
+        5 => Upload::ElasticPush { x: gen_payload(r, d, zp) },
+        _ => Upload::GradStep { dx: gen_payload(r, d, zp) },
+    }
+}
+
+#[test]
+fn upload_roundtrip_and_bytes_invariant() {
+    forall("upload round-trips; bytes() == encoded.len()", gen_upload, |up| {
+        let frame = codec::encode_upload(up);
+        ensure(
+            frame.len() as u64 == up.bytes(),
+            format!("bytes()={} but frame is {}", up.bytes(), frame.len()),
+        )?;
+        match codec::decode(&frame) {
+            Ok(WireMsg::Upload(back)) => ensure(back == *up, "payload mismatch"),
+            other => Err(format!("decode gave {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn view_roundtrip_and_bytes_invariant() {
+    forall(
+        "view round-trips; bytes() == encoded.len()",
+        |r| {
+            let d = gen_usize(r, 0..40);
+            // EASGD replies ship an empty gbar; cover it
+            let gbar = if gen_usize(r, 0..2) == 0 {
+                Vec::new()
+            } else {
+                gen_payload(r, d, 0.3)
+            };
+            GlobalView { x: gen_payload(r, d, 0.3), gbar }
+        },
+        |v| {
+            let frame = codec::encode_view(v);
+            ensure(
+                frame.len() as u64 == v.bytes(),
+                format!("bytes()={} but frame is {}", v.bytes(), frame.len()),
+            )?;
+            match codec::decode(&frame) {
+                Ok(WireMsg::View(back)) => ensure(back == *v, "payload mismatch"),
+                other => Err(format!("decode gave {other:?}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn hello_roundtrip() {
+    forall(
+        "hello round-trips",
+        |r| Hello {
+            s: (r.next_u64() & 0xFFFF) as u32,
+            p: (r.next_u64() & 0xFFFF) as u32,
+            n_s: r.next_u64() >> 1,
+            d: (r.next_u64() & 0xFFFF_FFFF) as u32,
+        },
+        |h| {
+            let frame = codec::encode_hello(h);
+            ensure(
+                frame.len() as u64 == codec::hello_frame_len(),
+                "hello length drifted",
+            )?;
+            match codec::decode(&frame) {
+                Ok(WireMsg::Hello(back)) => ensure(back == *h, "field mismatch"),
+                other => Err(format!("decode gave {other:?}")),
+            }
+        },
+    );
+}
+
+/// Empty and length-1 payloads for every variant, dense and sparse.
+#[test]
+fn edge_payload_lengths_roundtrip() {
+    for d in [0usize, 1, 2] {
+        let dense = vec![1.5f32; d];
+        let sparse = vec![0.0f32; d];
+        let cases = [
+            Upload::Ready,
+            Upload::Delta { dx: dense.clone(), dgbar: sparse.clone() },
+            Upload::Delta { dx: sparse.clone(), dgbar: sparse.clone() },
+            Upload::State { x: dense.clone(), gbar: dense.clone() },
+            Upload::GradPartial { gsum: sparse.clone(), n: 0 },
+            Upload::GradPartial { gsum: dense.clone(), n: u64::MAX },
+            Upload::XOnly { x: dense.clone() },
+            Upload::ElasticPush { x: sparse.clone() },
+            Upload::GradStep { dx: dense.clone() },
+        ];
+        for up in &cases {
+            let frame = codec::encode_upload(up);
+            assert_eq!(frame.len() as u64, up.bytes(), "d={d} {}", up.kind());
+            assert_eq!(
+                codec::decode(&frame),
+                Ok(WireMsg::Upload(up.clone())),
+                "d={d} {}",
+                up.kind()
+            );
+        }
+        let v = GlobalView { x: dense.clone(), gbar: Vec::new() };
+        let frame = codec::encode_view(&v);
+        assert_eq!(frame.len() as u64, v.bytes());
+        assert_eq!(codec::decode(&frame), Ok(WireMsg::View(v)));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// malformed-frame rejection: errors, never panics
+// ---------------------------------------------------------------------------
+
+/// Wrap a hand-built body in a correct length prefix.
+fn frame(body: &[u8]) -> Vec<u8> {
+    let mut f = (body.len() as u32).to_le_bytes().to_vec();
+    f.extend_from_slice(body);
+    f
+}
+
+#[test]
+fn truncated_length_prefix_rejected() {
+    let short = [7u8; 4];
+    for n in 0..4usize {
+        let err = codec::decode(&short[..n]).unwrap_err();
+        assert_eq!(err, CodecError::Truncated { need: 4, have: n });
+    }
+}
+
+#[test]
+fn oversized_length_prefix_rejected() {
+    let mut f = (MAX_FRAME_BODY + 1).to_le_bytes().to_vec();
+    f.push(0);
+    assert_eq!(
+        codec::decode(&f),
+        Err(CodecError::FrameTooLarge { len: MAX_FRAME_BODY + 1 })
+    );
+    // a lying (but in-cap) prefix is a length mismatch
+    let mut f = codec::encode_upload(&Upload::Ready);
+    f[..4].copy_from_slice(&100u32.to_le_bytes());
+    assert!(matches!(
+        codec::decode(&f),
+        Err(CodecError::LengthMismatch { declared: 100, .. })
+    ));
+}
+
+#[test]
+fn unknown_tag_rejected() {
+    assert_eq!(codec::decode(&frame(&[99])), Err(CodecError::UnknownTag(99)));
+    // empty body: no tag at all
+    assert_eq!(
+        codec::decode(&frame(&[])),
+        Err(CodecError::Truncated { need: 1, have: 0 })
+    );
+}
+
+#[test]
+fn unknown_vector_mode_rejected() {
+    // XOnly whose vector claims mode 7
+    let body = [4u8, 7, 0, 0, 0, 0];
+    assert_eq!(codec::decode(&frame(&body)), Err(CodecError::UnknownVecMode(7)));
+}
+
+#[test]
+fn nnz_overrunning_declared_d_rejected() {
+    // XOnly, sparse vector: d=2 but nnz=5
+    let mut body = vec![4u8, 1];
+    body.extend_from_slice(&2u32.to_le_bytes());
+    body.extend_from_slice(&5u32.to_le_bytes());
+    assert_eq!(
+        codec::decode(&frame(&body)),
+        Err(CodecError::NnzOverrun { nnz: 5, d: 2 })
+    );
+}
+
+#[test]
+fn sparse_index_out_of_range_rejected() {
+    // d=4, nnz=1, index 9
+    let mut body = vec![4u8, 1];
+    body.extend_from_slice(&4u32.to_le_bytes());
+    body.extend_from_slice(&1u32.to_le_bytes());
+    body.extend_from_slice(&9u32.to_le_bytes());
+    body.extend_from_slice(&1.0f32.to_le_bytes());
+    assert_eq!(
+        codec::decode(&frame(&body)),
+        Err(CodecError::IndexInvalid { idx: 9, d: 4 })
+    );
+}
+
+#[test]
+fn non_increasing_sparse_indices_rejected() {
+    // d=4, nnz=2, indices (2, 1): duplicates/reordering are not canonical
+    let mut body = vec![4u8, 1];
+    body.extend_from_slice(&4u32.to_le_bytes());
+    body.extend_from_slice(&2u32.to_le_bytes());
+    for idx in [2u32, 1] {
+        body.extend_from_slice(&idx.to_le_bytes());
+        body.extend_from_slice(&1.0f32.to_le_bytes());
+    }
+    assert_eq!(
+        codec::decode(&frame(&body)),
+        Err(CodecError::IndexInvalid { idx: 1, d: 4 })
+    );
+}
+
+#[test]
+fn huge_sparse_dimension_rejected_before_allocation() {
+    // sparse vector claiming d = u32::MAX from a tiny frame
+    let mut body = vec![4u8, 1];
+    body.extend_from_slice(&u32::MAX.to_le_bytes());
+    body.extend_from_slice(&0u32.to_le_bytes());
+    assert_eq!(
+        codec::decode(&frame(&body)),
+        Err(CodecError::DimTooLarge { d: u32::MAX })
+    );
+}
+
+/// A sparse header can declare a dimension far larger than the bytes it
+/// carries (nnz=0); a session that knows its real `d` must be able to
+/// reject the amplification before the decoder allocates.
+#[test]
+fn session_dim_bound_rejects_sparse_amplification() {
+    // ~20-byte XOnly frame declaring d = 1M, nnz = 0
+    let huge = 1_000_000u32;
+    let mut body = vec![4u8, 1];
+    body.extend_from_slice(&huge.to_le_bytes());
+    body.extend_from_slice(&0u32.to_le_bytes());
+    let f = frame(&body);
+    // within the generic cap, the decoder accepts it...
+    assert!(codec::decode(&f).is_ok());
+    // ...but a transport bound to the session's d rejects it unallocated
+    assert_eq!(
+        codec::decode_bounded(&f, 64),
+        Err(CodecError::DimTooLarge { d: huge })
+    );
+}
+
+#[test]
+fn trailing_bytes_rejected() {
+    let body = [0u8, 42]; // Ready plus one stray byte
+    assert_eq!(
+        codec::decode(&frame(&body)),
+        Err(CodecError::TrailingBytes { extra: 1 })
+    );
+}
+
+#[test]
+fn arbitrary_byte_soup_never_panics() {
+    forall(
+        "decode(soup) returns, never panics",
+        |r| {
+            let n = gen_usize(r, 0..96);
+            (0..n).map(|_| (r.next_u64() & 0xFF) as u8).collect::<Vec<u8>>()
+        },
+        |soup| {
+            let _ = codec::decode(soup);
+            let _ = codec::decode_body(soup);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn truncations_of_valid_frames_always_error() {
+    forall(
+        "any strict prefix of a frame fails to decode",
+        |r| {
+            let up = gen_upload(r);
+            let frame = codec::encode_upload(&up);
+            let cut = gen_usize(r, 0..frame.len());
+            (frame, cut)
+        },
+        |(frame, cut)| {
+            ensure(
+                codec::decode(&frame[..*cut]).is_err(),
+                format!("truncation to {cut}/{} decoded", frame.len()),
+            )
+        },
+    );
+}
+
+#[test]
+fn single_byte_corruptions_never_panic() {
+    forall(
+        "bit-flipped frames decode or error, never panic",
+        |r| {
+            let up = gen_upload(r);
+            let mut frame = codec::encode_upload(&up);
+            let i = gen_usize(r, 0..frame.len());
+            frame[i] ^= 1 << gen_usize(r, 0..8);
+            frame
+        },
+        |frame| {
+            let _ = codec::decode(frame);
+            Ok(())
+        },
+    );
+}

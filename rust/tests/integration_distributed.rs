@@ -153,8 +153,14 @@ fn bytes_accounting_scales_with_rounds() {
     c.max_rounds = 8;
     let b = simulator::run(Problem::Ridge, &data, c, SimParams::analytic(6));
     assert!(b.counters.bytes_communicated > a.counters.bytes_communicated);
-    // sync round: p uploads (2d floats) + p broadcasts (2d floats)
-    let d = 6u64;
-    let per_round = 3 * (2 * d * 4) * 2;
+    // sync round: p State uploads + p view broadcasts, priced as the
+    // codec frames the TCP transport would actually carry
+    use centralvr::dist::messages::{GlobalView, Upload};
+    let state = Upload::State { x: vec![0.0; 6], gbar: vec![0.0; 6] };
+    let view = GlobalView { x: vec![0.0; 6], gbar: vec![0.0; 6] };
+    let per_pair = state.bytes() + view.bytes();
+    let per_round = 3 * per_pair;
     assert_eq!(a.counters.bytes_communicated % per_round, 0);
+    // frame counter: one frame per upload and one per broadcast reply
+    assert_eq!(a.counters.frames, a.counters.bytes_communicated / per_pair * 2);
 }

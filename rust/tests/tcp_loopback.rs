@@ -1,0 +1,301 @@
+//! Real-socket integration: distributed algorithms over 127.0.0.1 with 4
+//! workers, each driving its own TCP connection ("threads as processes":
+//! no shared memory, every byte crosses the loopback stack), checked for
+//! final-iterate parity against deterministic in-process [`LocalNode`]
+//! runs on the same seed — and, for CVR-Sync, against the discrete-event
+//! simulator's endpoint and byte/frame accounting.
+//!
+//! Ports are ephemeral (`127.0.0.1:0`), so the suite is parallel-safe;
+//! CI additionally runs it with `--test-threads=1` for determinism.
+
+use std::net::TcpListener;
+use std::thread;
+
+use centralvr::config::schema::Algorithm;
+use centralvr::data::shard::ShardedDataset;
+use centralvr::data::synth;
+use centralvr::dist::local::LocalNode;
+use centralvr::dist::messages::{GlobalView, Upload};
+use centralvr::dist::server::ServerState;
+use centralvr::dist::transport::{self, ServeConfig, ServeReport, WorkerReport};
+use centralvr::dist::DistConfig;
+use centralvr::exec::simulator::{self, SimParams};
+use centralvr::model::glm::Problem;
+use centralvr::util::math;
+
+const P: usize = 4;
+const N_PER: usize = 48;
+const D: usize = 6;
+
+fn toy() -> ShardedDataset {
+    ShardedDataset::from_shards(synth::toy_least_squares_per_worker(P, N_PER, D, 9))
+}
+
+fn cfg(algorithm: Algorithm) -> DistConfig {
+    DistConfig {
+        algorithm,
+        p: P,
+        eta: 0.02,
+        max_rounds: 8,
+        tol: 0.0, // fixed budget: no early stop on either side
+        seed: 33,
+        record_every: P,
+        ..Default::default()
+    }
+}
+
+/// Full TCP run: server thread + P client threads over loopback.
+fn tcp_run(data: &ShardedDataset, cfg: DistConfig) -> (ServeReport, Vec<WorkerReport>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let scfg = ServeConfig { p: P, easgd_beta: cfg.easgd_beta };
+    thread::scope(|scope| {
+        let server = scope.spawn(move || transport::serve(listener, scfg).unwrap());
+        let workers: Vec<_> = (0..P)
+            .map(|s| {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    transport::run_worker(
+                        &addr,
+                        s,
+                        Problem::Ridge,
+                        data.shard(s),
+                        data.n_total(),
+                        cfg,
+                    )
+                    .unwrap()
+                })
+            })
+            .collect();
+        let wreps = workers.into_iter().map(|h| h.join().unwrap()).collect();
+        (server.join().unwrap(), wreps)
+    })
+}
+
+fn zero_view() -> GlobalView {
+    GlobalView { x: vec![0.0; D], gbar: vec![0.0; D] }
+}
+
+fn nodes(data: &ShardedDataset, cfg: DistConfig) -> Vec<LocalNode<'_>> {
+    (0..P)
+        .map(|s| LocalNode::new(s, data.shard(s), Problem::Ridge, cfg, data.n_total()))
+        .collect()
+}
+
+/// One barrier round's uploads, collected in worker order.
+fn collect_uploads<'a>(
+    nodes: &mut [LocalNode<'a>],
+    f: impl FnMut(&mut LocalNode<'a>) -> Upload,
+) -> Vec<Upload> {
+    nodes.iter_mut().map(f).collect()
+}
+
+/// In-process reference replaying exactly the order the TCP server
+/// services workers in: barrier rounds collect uploads in worker order;
+/// async uploads apply in worker order within each sweep, every worker
+/// seeing the view snapshotted right after its own apply.
+fn reference(data: &ShardedDataset, cfg: DistConfig) -> ServerState {
+    let mut server = ServerState::new(D, P, cfg.easgd_beta);
+    let weights: Vec<f64> = (0..P).map(|s| data.weight(s)).collect();
+    let mut nodes = nodes(data, cfg);
+    match cfg.algorithm {
+        Algorithm::CentralVrSync => {
+            let mut view = zero_view();
+            for _ in 0..cfg.max_rounds {
+                let ups = collect_uploads(&mut nodes, |n| n.cvr_sync_round(&view));
+                server.apply_barrier_round(&ups, &weights).unwrap();
+                view = server.view();
+            }
+        }
+        Algorithm::CentralVrAsync => {
+            let mut views = vec![zero_view(); P];
+            for _ in 0..cfg.max_rounds {
+                for (s, node) in nodes.iter_mut().enumerate() {
+                    let up = node.cvr_async_round(&views[s]);
+                    server.apply_delta(&up);
+                    views[s] = server.view();
+                }
+            }
+        }
+        Algorithm::DistSvrg => {
+            let mut view = zero_view();
+            let mut round = 0;
+            while round < cfg.max_rounds {
+                let ups = collect_uploads(&mut nodes, |n| n.dsvrg_grad_partial(&view));
+                server.apply_barrier_round(&ups, &weights).unwrap();
+                let v = server.view();
+                round += 1;
+                if round >= cfg.max_rounds {
+                    break;
+                }
+                let ups = collect_uploads(&mut nodes, |n| n.dsvrg_inner_round(&v));
+                server.apply_barrier_round(&ups, &weights).unwrap();
+                view = server.view();
+                round += 1;
+            }
+        }
+        Algorithm::DistSaga => {
+            let mut views = vec![zero_view(); P];
+            for round in 0..cfg.max_rounds {
+                for (s, node) in nodes.iter_mut().enumerate() {
+                    let up = if round == 0 {
+                        node.dsaga_init()
+                    } else {
+                        node.dsaga_round(&views[s])
+                    };
+                    server.apply_delta(&up);
+                    views[s] = server.view();
+                }
+            }
+        }
+        Algorithm::Easgd => {
+            for _ in 0..cfg.max_rounds {
+                for node in nodes.iter_mut() {
+                    let up = node.easgd_round();
+                    let x_new = server.apply_elastic(&up);
+                    node.easgd_adopt(x_new);
+                }
+            }
+        }
+        Algorithm::PsSvrg => {
+            let ps_cycle = (2 * N_PER).div_ceil(cfg.ps_batch.max(1));
+            let mut round = 0;
+            while round < cfg.max_rounds {
+                // freeze barrier: nothing applied, everyone sees the view
+                let v = server.view();
+                let ups = collect_uploads(&mut nodes, |n| n.ps_svrg_snapshot(&v));
+                server.apply_barrier_round(&ups, &weights).unwrap();
+                let mut vs = vec![server.view(); P];
+                for _ in 0..ps_cycle {
+                    if round >= cfg.max_rounds {
+                        break;
+                    }
+                    for (s, node) in nodes.iter_mut().enumerate() {
+                        let up = node.ps_svrg_round(&vs[s]);
+                        server.apply_grad_step(&up);
+                        vs[s] = server.view();
+                    }
+                    round += 1;
+                }
+                round += 1;
+            }
+        }
+        a => panic!("no reference for {a:?}"),
+    }
+    server
+}
+
+#[test]
+fn cvr_sync_loopback_matches_in_process_reference() {
+    let data = toy();
+    let c = cfg(Algorithm::CentralVrSync);
+    let (rep, wreps) = tcp_run(&data, c);
+    let golden = reference(&data, c);
+    let dx = math::max_abs_diff(&rep.x, &golden.x);
+    assert!(dx <= 1e-5, "iterate drifted: {dx}");
+    let dg = math::max_abs_diff(&rep.gbar, &golden.gbar);
+    assert!(dg <= 1e-5, "gbar drifted: {dg}");
+    // the wire carried exactly what bytes() priced
+    assert_eq!(rep.bytes_on_wire, rep.bytes_accounted);
+    // client-side ledgers close against the server's
+    let client_total: u64 = wreps.iter().map(|w| w.bytes_sent + w.bytes_received).sum();
+    assert_eq!(client_total, rep.bytes_on_wire + rep.bytes_handshake);
+    assert!(wreps.iter().all(|w| w.rounds == c.max_rounds));
+}
+
+/// The simulator with homogeneous workers services barrier rounds in
+/// worker order — exactly like the TCP server — so endpoints AND the
+/// byte/frame books must agree between a real-socket run and a simulated
+/// one on the same seed.
+#[test]
+fn cvr_sync_loopback_matches_simulator_endpoint_and_bytes() {
+    let data = toy();
+    let c = cfg(Algorithm::CentralVrSync);
+    let (rep, _) = tcp_run(&data, c);
+    let sim = simulator::run(Problem::Ridge, &data, c, SimParams::analytic(D));
+    let dx = math::max_abs_diff(&rep.x, &sim.trace.x);
+    assert!(dx <= 1e-5, "TCP vs simulator endpoint: {dx}");
+    assert_eq!(rep.bytes_on_wire, sim.counters.bytes_communicated);
+    assert_eq!(rep.frames, sim.counters.frames);
+}
+
+#[test]
+fn cvr_async_loopback_matches_in_process_reference() {
+    let data = toy();
+    let c = cfg(Algorithm::CentralVrAsync);
+    let (rep, wreps) = tcp_run(&data, c);
+    let golden = reference(&data, c);
+    let dx = math::max_abs_diff(&rep.x, &golden.x);
+    assert!(dx <= 1e-5, "iterate drifted: {dx}");
+    let dg = math::max_abs_diff(&rep.gbar, &golden.gbar);
+    assert!(dg <= 1e-5, "gbar drifted: {dg}");
+    assert_eq!(rep.bytes_on_wire, rep.bytes_accounted);
+    // deltas go sparse only when genuinely sparse; either way the books
+    // close against the per-worker ledgers
+    let client_total: u64 = wreps.iter().map(|w| w.bytes_sent + w.bytes_received).sum();
+    assert_eq!(client_total, rep.bytes_on_wire + rep.bytes_handshake);
+}
+
+#[test]
+fn dsaga_loopback_matches_in_process_reference() {
+    let data = toy();
+    let mut c = cfg(Algorithm::DistSaga);
+    c.tau = N_PER; // one local epoch per round
+    let (rep, _) = tcp_run(&data, c);
+    let golden = reference(&data, c);
+    let dx = math::max_abs_diff(&rep.x, &golden.x);
+    assert!(dx <= 1e-5, "iterate drifted: {dx}");
+    let dg = math::max_abs_diff(&rep.gbar, &golden.gbar);
+    assert!(dg <= 1e-5, "gbar drifted: {dg}");
+    assert_eq!(rep.bytes_on_wire, rep.bytes_accounted);
+}
+
+#[test]
+fn dsvrg_loopback_matches_in_process_reference() {
+    let data = toy();
+    let c = cfg(Algorithm::DistSvrg);
+    let (rep, _) = tcp_run(&data, c);
+    let golden = reference(&data, c);
+    let dx = math::max_abs_diff(&rep.x, &golden.x);
+    assert!(dx <= 1e-5, "iterate drifted: {dx}");
+    assert_eq!(rep.bytes_on_wire, rep.bytes_accounted);
+}
+
+#[test]
+fn easgd_loopback_matches_in_process_reference() {
+    let data = toy();
+    let mut c = cfg(Algorithm::Easgd);
+    c.tau = 8;
+    let (rep, _) = tcp_run(&data, c);
+    let golden = reference(&data, c);
+    let dx = math::max_abs_diff(&rep.x, &golden.x);
+    assert!(dx <= 1e-5, "elastic center drifted: {dx}");
+    assert_eq!(rep.bytes_on_wire, rep.bytes_accounted);
+}
+
+/// Topology sanity: a worker that sharded for a different p must be
+/// rejected at the handshake, not silently averaged with wrong weights.
+#[test]
+fn serve_rejects_mismatched_worker_count() {
+    use centralvr::dist::codec::Hello;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let scfg = ServeConfig { p: 2, easgd_beta: 0.9 };
+    let server = thread::spawn(move || transport::serve(listener, scfg));
+    let hello = Hello { s: 0, p: 4, n_s: 10, d: 3 };
+    let _client = transport::TcpClient::connect(&addr, hello).unwrap();
+    let err = server.join().unwrap().unwrap_err();
+    assert!(err.to_string().contains("sharded for p=4"), "{err}");
+}
+
+#[test]
+fn ps_svrg_loopback_matches_in_process_reference() {
+    let data = toy();
+    let mut c = cfg(Algorithm::PsSvrg);
+    c.ps_batch = 8;
+    let (rep, _) = tcp_run(&data, c);
+    let golden = reference(&data, c);
+    let dx = math::max_abs_diff(&rep.x, &golden.x);
+    assert!(dx <= 1e-5, "iterate drifted: {dx}");
+    assert_eq!(rep.bytes_on_wire, rep.bytes_accounted);
+}
