@@ -1,8 +1,13 @@
 //! Bench: micro/hot-path measurements feeding EXPERIMENTS.md §Perf —
 //! per-gradient native cost across dimensions, fused vr_step vs a naive
 //! 3-pass update, whole native epochs, HLO-engine epochs (dispatch
-//! overhead of the AOT path), simulator event throughput, and server
-//! apply latency.
+//! overhead of the AOT path), simulator event throughput, server apply
+//! latency, and parallel-simulator wall-clock scaling (writes
+//! `results/BENCH_parallel_sim.json`).
+//!
+//! Sections can be selected by substring:
+//! `cargo bench --bench hot_paths -- parallel_sim` runs only the
+//! parallel-simulator scaling section (the one CI exercises).
 
 mod common;
 
@@ -35,46 +40,57 @@ fn naive_vr_step(x: &mut [f32], a: &[f32], gbar: &[f32], coef: f32, eta: f32, la
 }
 
 fn main() {
+    // substring section filter: no filter args = run everything. Cargo
+    // appends flags like --bench to harness-less binaries, so anything
+    // starting with '-' is not a section filter.
+    let only: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with('-'))
+        .collect();
+    let enabled =
+        |name: &str| only.is_empty() || only.iter().any(|a| name.contains(a.as_str()));
     let b = common::Bench::group("hot_paths");
 
     // --- per-gradient native cost across d ---
-    for d in [20usize, 100, 1000] {
-        let n = 2000;
-        let ds = synth::toy_classification(n, d, 1);
-        let mut eng = NativeEngine::new();
-        let mut x = vec![0.0f32; d];
-        let mut alpha = vec![0.0f32; n];
-        let gbar = vec![0.0f32; d];
-        let mut gtilde = vec![0.0f32; d];
-        let perm: Vec<u32> = (0..n as u32).collect();
-        let s = b.case(&format!("native_epoch_d{d}"), 2, 10, || {
-            eng.centralvr_epoch(
-                Problem::Logistic,
-                &ds,
-                &perm,
-                &mut x,
-                &mut alpha,
-                &gbar,
-                &mut gtilde,
-                1e-3,
-                1e-4,
+    if enabled("native_epoch") {
+        for d in [20usize, 100, 1000] {
+            let n = 2000;
+            let ds = synth::toy_classification(n, d, 1);
+            let mut eng = NativeEngine::new();
+            let mut x = vec![0.0f32; d];
+            let mut alpha = vec![0.0f32; n];
+            let gbar = vec![0.0f32; d];
+            let mut gtilde = vec![0.0f32; d];
+            let perm: Vec<u32> = (0..n as u32).collect();
+            let s = b.case(&format!("native_epoch_d{d}"), 2, 10, || {
+                eng.centralvr_epoch(
+                    Problem::Logistic,
+                    &ds,
+                    &perm,
+                    &mut x,
+                    &mut alpha,
+                    &gbar,
+                    &mut gtilde,
+                    1e-3,
+                    1e-4,
+                );
+                black_box(x[0])
+            });
+            b.metric(
+                &format!("native_ns_per_grad_d{d}"),
+                s.median * 1e9 / n as f64,
+                "ns/grad",
             );
-            black_box(x[0])
-        });
-        b.metric(
-            &format!("native_ns_per_grad_d{d}"),
-            s.median * 1e9 / n as f64,
-            "ns/grad",
-        );
-        b.metric(
-            &format!("native_gflops_d{d}"),
-            (n * (8 * d + 20)) as f64 / s.median / 1e9,
-            "GFLOP/s effective",
-        );
+            b.metric(
+                &format!("native_gflops_d{d}"),
+                (n * (8 * d + 20)) as f64 / s.median / 1e9,
+                "GFLOP/s effective",
+            );
+        }
     }
 
     // --- fused vr_step vs naive 3-pass ---
-    {
+    if enabled("vr_step") {
         let d = 100;
         let mut r = Pcg64::new(2);
         let a: Vec<f32> = (0..d).map(|_| r.normal() as f32).collect();
@@ -101,7 +117,7 @@ fn main() {
     // twin materializes a 50k x 5k f32 matrix (~1 GB); both epochs run the
     // identical update sequence, so the endpoint iterates double as the
     // CSR-vs-dense parity check at full scale.
-    {
+    if enabled("csr") {
         let (n, d) = (50_000usize, 5_000usize);
         let sp = synth::sparse_classification(n, d, 0.01, 7);
         let dn = sp.to_dense();
@@ -159,53 +175,55 @@ fn main() {
     }
 
     // --- HLO engine epoch (AOT path dispatch cost) ---
-    let dir = HloEngine::default_dir();
-    if HloEngine::AVAILABLE && std::path::Path::new(&dir).join("manifest.json").exists() {
-        let (n, d) = (256usize, 16usize);
-        let ds = synth::toy_classification(n, d, 3);
-        let mut hlo = HloEngine::new(&dir).expect("hlo");
-        let mut nat = NativeEngine::new();
-        let mut x = vec![0.0f32; d];
-        let mut alpha = vec![0.0f32; n];
-        let gbar = vec![0.0f32; d];
-        let mut gtilde = vec![0.0f32; d];
-        let perm: Vec<u32> = (0..n as u32).collect();
-        let h = b.case("hlo_epoch_n256_d16", 2, 10, || {
-            hlo.centralvr_epoch(
-                Problem::Logistic,
-                &ds,
-                &perm,
-                &mut x,
-                &mut alpha,
-                &gbar,
-                &mut gtilde,
-                1e-3,
-                1e-4,
-            );
-            black_box(x[0])
-        });
-        let mut x = vec![0.0f32; d];
-        let nn = b.case("native_epoch_n256_d16", 2, 10, || {
-            nat.centralvr_epoch(
-                Problem::Logistic,
-                &ds,
-                &perm,
-                &mut x,
-                &mut alpha,
-                &gbar,
-                &mut gtilde,
-                1e-3,
-                1e-4,
-            );
-            black_box(x[0])
-        });
-        b.metric("hlo_vs_native_epoch", h.median / nn.median, "x (HLO/native)");
-    } else {
-        println!("hot_paths/hlo_epoch: SKIPPED (needs --features pjrt and `make artifacts`)");
+    if enabled("hlo_epoch") {
+        let dir = HloEngine::default_dir();
+        if HloEngine::AVAILABLE && std::path::Path::new(&dir).join("manifest.json").exists() {
+            let (n, d) = (256usize, 16usize);
+            let ds = synth::toy_classification(n, d, 3);
+            let mut hlo = HloEngine::new(&dir).expect("hlo");
+            let mut nat = NativeEngine::new();
+            let mut x = vec![0.0f32; d];
+            let mut alpha = vec![0.0f32; n];
+            let gbar = vec![0.0f32; d];
+            let mut gtilde = vec![0.0f32; d];
+            let perm: Vec<u32> = (0..n as u32).collect();
+            let h = b.case("hlo_epoch_n256_d16", 2, 10, || {
+                hlo.centralvr_epoch(
+                    Problem::Logistic,
+                    &ds,
+                    &perm,
+                    &mut x,
+                    &mut alpha,
+                    &gbar,
+                    &mut gtilde,
+                    1e-3,
+                    1e-4,
+                );
+                black_box(x[0])
+            });
+            let mut x = vec![0.0f32; d];
+            let nn = b.case("native_epoch_n256_d16", 2, 10, || {
+                nat.centralvr_epoch(
+                    Problem::Logistic,
+                    &ds,
+                    &perm,
+                    &mut x,
+                    &mut alpha,
+                    &gbar,
+                    &mut gtilde,
+                    1e-3,
+                    1e-4,
+                );
+                black_box(x[0])
+            });
+            b.metric("hlo_vs_native_epoch", h.median / nn.median, "x (HLO/native)");
+        } else {
+            println!("hot_paths/hlo_epoch: SKIPPED (needs --features pjrt and `make artifacts`)");
+        }
     }
 
     // --- server apply latency ---
-    {
+    if enabled("server_apply") {
         let d = 1000;
         let mut server = ServerState::new(d, 16, 0.9);
         let up = Upload::Delta {
@@ -222,7 +240,7 @@ fn main() {
     }
 
     // --- simulator event throughput ---
-    {
+    if enabled("simulator_events") {
         let (p, n_per, d) = (16usize, 100usize, 20usize);
         let data =
             ShardedDataset::from_shards(synth::toy_least_squares_per_worker(p, n_per, d, 5));
@@ -251,5 +269,79 @@ fn main() {
             (40 * p * n_per) as f64 / s.median,
             "grad evals/s",
         );
+    }
+
+    // --- parallel simulator wall-clock scaling ---
+    // The compute/apply split lets the simulator fan worker compute
+    // halves across threads with bit-identical results; this section
+    // measures the wall-clock payoff at p = 1/4/8/16 (threads = 1 vs
+    // available cores) on a compute-heavy CVR-Sync workload and writes
+    // the perf-trajectory artifact results/BENCH_parallel_sim.json.
+    if enabled("parallel_sim") {
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let (n_per, d, rounds) = (3000usize, 100usize, 6usize);
+        let mut entries = Vec::new();
+        for p in [1usize, 4, 8, 16] {
+            let data = ShardedDataset::from_shards(synth::toy_least_squares_per_worker(
+                p, n_per, d, 5,
+            ));
+            let cfg = DistConfig {
+                algorithm: Algorithm::CentralVrSync,
+                p,
+                eta: 0.125 / d as f32,
+                max_rounds: rounds,
+                tol: 0.0,
+                record_every: 1_000_000, // metrics off: measure the engine
+                ..Default::default()
+            };
+            let serial = b.case(&format!("parallel_sim_p{p}_t1"), 1, 3, || {
+                let rep =
+                    simulator::run(Problem::Ridge, &data, cfg, SimParams::analytic(d));
+                black_box(rep.trace.grad_evals)
+            });
+            let threads = cores.max(2); // >1 even on a 1-core host: measures overhead honestly
+            let parallel = b.case(&format!("parallel_sim_p{p}_t{threads}"), 1, 3, || {
+                let rep = simulator::run(
+                    Problem::Ridge,
+                    &data,
+                    cfg,
+                    SimParams::analytic(d).with_threads(threads),
+                );
+                black_box(rep.trace.grad_evals)
+            });
+            let speedup = serial.median / parallel.median;
+            b.metric(&format!("parallel_sim_speedup_p{p}"), speedup, "x");
+            entries.push(format!(
+                "    {{\"p\": {p}, \"threads\": {threads}, \"t_serial_s\": {:.6}, \
+                 \"t_parallel_s\": {:.6}, \"speedup\": {:.3}}}",
+                serial.median, parallel.median, speedup
+            ));
+        }
+        let note = if cores < 4 {
+            format!(
+                "host has only {cores} core(s): fan-out cannot exceed that; \
+                 speedups are capped accordingly"
+            )
+        } else {
+            String::from("speedup at p=16 is the Fig-3-scale data point")
+        };
+        let json = format!(
+            "{{\n  \"bench\": \"parallel_sim\",\n  \"workload\": \
+             \"cvr-sync n_per={n_per} d={d} rounds={rounds}\",\n  \
+             \"host_cores\": {cores},\n  \"note\": \"{note}\",\n  \"runs\": [\n{}\n  ]\n}}\n",
+            entries.join(",\n")
+        );
+        let out_dir = concat!(env!("CARGO_MANIFEST_DIR"), "/../results");
+        let path = format!("{out_dir}/BENCH_parallel_sim.json");
+        if let Err(e) = std::fs::create_dir_all(out_dir)
+            .and_then(|()| std::fs::write(&path, &json))
+        {
+            println!("hot_paths/parallel_sim: could not write {path}: {e}");
+        } else {
+            println!("hot_paths/parallel_sim: wrote {path}");
+        }
+        print!("{json}");
     }
 }

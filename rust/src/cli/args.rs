@@ -27,6 +27,8 @@ common options:
   --epochs N           epoch budget        --tau N       comm period
   --tol X              rel-grad-norm tol   --seed N      RNG seed
   --engine E           native|hlo          --threads     real threads
+  --sim-threads N      simulator compute fan-out width (default 1 =
+                       serial driver; any N gives bit-identical results)
   --scale S            quick|full (figure harnesses)
   --d N                feature dim (calibrate / --dataset)
   --artifacts DIR      artifact directory (default: artifacts/)

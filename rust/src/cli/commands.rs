@@ -170,14 +170,18 @@ fn train(args: &Args) -> Result<()> {
                 trace.elapsed_s
             );
         } else {
+            // compute-half fan-out; results are bit-identical for any
+            // width, so the knob only trades wall-clock time
+            let sim_threads = args.get_usize("sim-threads")?.unwrap_or(1).max(1);
             let rep = simulator::run(
                 cfg.problem,
                 &sharded,
                 dcfg,
-                SimParams::calibrated(data.d()),
+                SimParams::calibrated(data.d()).with_threads(sim_threads),
             );
             println!(
-                "sim: converged={} rel={:.3e} grad_evals={} t_virtual={:.4}s events={} bytes={}",
+                "sim: converged={} rel={:.3e} grad_evals={} t_virtual={:.4}s events={} \
+                 bytes={} threads={sim_threads}",
                 rep.trace.converged,
                 rep.trace.series.final_rel(),
                 rep.trace.grad_evals,
@@ -214,13 +218,22 @@ fn dist(args: &Args) -> Result<()> {
             );
             let rep = transport::serve(listener, ServeConfig { p, easgd_beta })?;
             println!(
-                "dist serve: updates={} frames={} bytes={} (accounted={}) handshake={}B",
+                "dist serve: updates={} frames={} bytes={} (accounted={}) handshake={}B stops={}",
                 rep.updates,
                 rep.frames,
                 rep.bytes_on_wire,
                 rep.bytes_accounted,
-                rep.bytes_handshake
+                rep.bytes_handshake,
+                rep.stops
             );
+            if rep.stops > 0 {
+                eprintln!(
+                    "dist serve: WARNING: pushed Stop to {} worker(s) parked in a barrier \
+                     that could no longer fill — a desynced schedule (uneven shards) or a \
+                     departed peer; the run ended before every worker finished its budget",
+                    rep.stops
+                );
+            }
             if let Some(path) = args.get("out") {
                 let mut text = String::with_capacity(rep.x.len() * 12);
                 for v in &rep.x {

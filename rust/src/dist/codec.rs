@@ -72,6 +72,7 @@ const TAG_ELASTIC_PUSH: u8 = 5;
 const TAG_GRAD_STEP: u8 = 6;
 const TAG_VIEW: u8 = 7;
 const TAG_HELLO: u8 = 8;
+const TAG_STOP: u8 = 9;
 
 const MODE_DENSE: u8 = 0;
 const MODE_SPARSE: u8 = 1;
@@ -100,6 +101,11 @@ pub enum WireMsg {
     Hello(Hello),
     Upload(Upload),
     View(GlobalView),
+    /// Server -> worker: stop cleanly instead of waiting for a reply that
+    /// will never come. Pushed when a desynced barrier schedule (e.g.
+    /// PS-SVRG on uneven shards) can no longer complete; a worker that
+    /// receives it ends its run at the current round and disconnects.
+    Stop,
 }
 
 /// Decoder rejection: every malformed input maps to one of these; the
@@ -211,6 +217,11 @@ pub fn hello_frame_len() -> u64 {
     4 + (1 + 4 + 4 + 8 + 4)
 }
 
+/// Encoded frame size of a server-push `Stop` (prefix + tag).
+pub fn stop_frame_len() -> u64 {
+    4 + 1
+}
+
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
@@ -247,19 +258,23 @@ fn write_vec(buf: &mut Vec<u8>, v: &[f32], allow_sparse: bool) {
     }
 }
 
-/// Write the body via `fill`, then patch the length prefix — one pass
-/// over the payload instead of sizing (and sparsity-planning) it twice.
-fn with_prefix(fill: impl FnOnce(&mut Vec<u8>)) -> Vec<u8> {
-    let mut buf = vec![0u8; 4]; // length prefix, patched below
-    fill(&mut buf);
+/// Write the body via `fill` into a caller-owned buffer, then patch the
+/// length prefix — one pass over the payload instead of sizing (and
+/// sparsity-planning) it twice. The buffer is cleared first, so a session
+/// can reuse one `Vec` across every frame it encodes and amortize the
+/// allocation away (the encode hot path at text-scale `d`).
+fn with_prefix_into(buf: &mut Vec<u8>, fill: impl FnOnce(&mut Vec<u8>)) {
+    buf.clear();
+    buf.extend_from_slice(&[0u8; 4]); // length prefix, patched below
+    fill(buf);
     let body_len = (buf.len() - 4) as u32;
     buf[..4].copy_from_slice(&body_len.to_le_bytes());
-    buf
 }
 
-/// Encode one upload as a complete frame (length prefix included).
-pub fn encode_upload(up: &Upload) -> Vec<u8> {
-    let frame = with_prefix(|buf| match up {
+/// Encode one upload into a reusable buffer (complete frame, prefix
+/// included; previous contents are discarded).
+pub fn encode_upload_into(up: &Upload, buf: &mut Vec<u8>) {
+    with_prefix_into(buf, |buf| match up {
         Upload::Ready => buf.push(TAG_READY),
         Upload::Delta { dx, dgbar } => {
             buf.push(TAG_DELTA);
@@ -290,39 +305,72 @@ pub fn encode_upload(up: &Upload) -> Vec<u8> {
         }
     });
     debug_assert_eq!(
-        frame.len() as u64,
+        buf.len() as u64,
         upload_frame_len(up),
         "bytes() drifted from the encoder"
     );
-    frame
 }
 
-/// Encode one view as a complete frame (length prefix included).
-pub fn encode_view(v: &GlobalView) -> Vec<u8> {
-    let frame = with_prefix(|buf| {
+/// Encode one upload as a complete frame (length prefix included).
+pub fn encode_upload(up: &Upload) -> Vec<u8> {
+    let mut buf = Vec::new();
+    encode_upload_into(up, &mut buf);
+    buf
+}
+
+/// Encode one view into a reusable buffer (complete frame, prefix
+/// included; previous contents are discarded).
+pub fn encode_view_into(v: &GlobalView, buf: &mut Vec<u8>) {
+    with_prefix_into(buf, |buf| {
         buf.push(TAG_VIEW);
         write_vec(buf, &v.x, false);
         write_vec(buf, &v.gbar, false);
     });
     debug_assert_eq!(
-        frame.len() as u64,
+        buf.len() as u64,
         view_frame_len(v),
         "bytes() drifted from the encoder"
     );
-    frame
 }
 
-/// Encode a handshake as a complete frame (length prefix included).
-pub fn encode_hello(h: &Hello) -> Vec<u8> {
-    let frame = with_prefix(|buf| {
+/// Encode one view as a complete frame (length prefix included).
+pub fn encode_view(v: &GlobalView) -> Vec<u8> {
+    let mut buf = Vec::new();
+    encode_view_into(v, &mut buf);
+    buf
+}
+
+/// Encode a handshake into a reusable buffer (complete frame, prefix
+/// included; previous contents are discarded).
+pub fn encode_hello_into(h: &Hello, buf: &mut Vec<u8>) {
+    with_prefix_into(buf, |buf| {
         buf.push(TAG_HELLO);
         put_u32(buf, h.s);
         put_u32(buf, h.p);
         put_u64(buf, h.n_s);
         put_u32(buf, h.d);
     });
-    debug_assert_eq!(frame.len() as u64, hello_frame_len());
-    frame
+    debug_assert_eq!(buf.len() as u64, hello_frame_len());
+}
+
+/// Encode a handshake as a complete frame (length prefix included).
+pub fn encode_hello(h: &Hello) -> Vec<u8> {
+    let mut buf = Vec::new();
+    encode_hello_into(h, &mut buf);
+    buf
+}
+
+/// Encode a server-push `Stop` into a reusable buffer.
+pub fn encode_stop_into(buf: &mut Vec<u8>) {
+    with_prefix_into(buf, |buf| buf.push(TAG_STOP));
+    debug_assert_eq!(buf.len() as u64, stop_frame_len());
+}
+
+/// Encode a server-push `Stop` as a complete frame.
+pub fn encode_stop() -> Vec<u8> {
+    let mut buf = Vec::new();
+    encode_stop_into(&mut buf);
+    buf
 }
 
 // ---------------------------------------------------------------------------
@@ -453,6 +501,7 @@ pub fn decode_body_bounded(body: &[u8], max_dim: u32) -> Result<WireMsg, CodecEr
             let d = cur.u32()?;
             WireMsg::Hello(Hello { s, p, n_s, d })
         }
+        TAG_STOP => WireMsg::Stop,
         other => return Err(CodecError::UnknownTag(other)),
     };
     cur.finish()?;
@@ -503,6 +552,32 @@ mod tests {
         assert_eq!(vec_len(&tie, true), 1 + 4 + 16);
         // sparse never chosen when disallowed
         assert_eq!(vec_len(&sparse1, false), 1 + 4 + 16);
+    }
+
+    #[test]
+    fn stop_is_five_bytes_and_roundtrips() {
+        let frame = encode_stop();
+        assert_eq!(frame, vec![1, 0, 0, 0, TAG_STOP]);
+        assert_eq!(frame.len() as u64, stop_frame_len());
+        // decodes even under the tightest session bound (carries no vectors)
+        assert_eq!(decode_bounded(&frame, 0), Ok(WireMsg::Stop));
+    }
+
+    #[test]
+    fn encode_into_reuses_the_buffer_and_matches_the_allocating_path() {
+        let mut buf = Vec::new();
+        let big = Upload::State { x: vec![1.0; 64], gbar: vec![-1.0; 64] };
+        encode_upload_into(&big, &mut buf);
+        assert_eq!(buf, encode_upload(&big));
+        let cap = buf.capacity();
+        // a smaller frame reuses the grown allocation
+        let small = Upload::XOnly { x: vec![2.0; 8] };
+        encode_upload_into(&small, &mut buf);
+        assert_eq!(buf, encode_upload(&small));
+        assert_eq!(buf.capacity(), cap, "reused buffer must not reallocate");
+        let v = GlobalView { x: vec![0.5; 8], gbar: vec![0.25; 8] };
+        encode_view_into(&v, &mut buf);
+        assert_eq!(buf, encode_view(&v));
     }
 
     #[test]

@@ -16,12 +16,23 @@
 //! [`crate::data::dataset::RowView`], so every distributed algorithm runs
 //! CSR shards natively (see `rust/tests/sparse_parity.rs`).
 //!
-//! Three drivers share these rounds: the real-thread engine
-//! ([`crate::exec::threads`]), the discrete-event simulator
-//! ([`crate::exec::simulator`]), and the TCP transport
-//! ([`crate::dist::transport::run_worker`]), which runs a node in its own
-//! OS process against a socket server.
+//! Every round is split into two halves with [`RoundMachine`]:
+//! a pure **compute** half ([`RoundMachine::compute`]) that reads the
+//! worker's shard plus the last absorbed [`GlobalView`] and produces the
+//! [`Upload`] to send — no server access — and an **absorb** half
+//! ([`RoundMachine::absorb`]) that ingests the server's reply. The
+//! machine also owns the per-algorithm round *sequencing* (D-SVRG's
+//! gradient-sync/inner alternation, PS-SVRG's freeze/snapshot/step
+//! cycle, D-SAGA's table-filling round 0, the round budget), so it is
+//! the single canonical state machine all three drivers execute:
+//! the real-thread engine ([`crate::exec::threads`]), the discrete-event
+//! simulator ([`crate::exec::simulator`]) — whose parallel mode exists
+//! precisely because compute halves of different workers are
+//! independent — and the TCP transport
+//! ([`crate::dist::transport::run_worker`]), which runs a machine in its
+//! own OS process against a socket server.
 
+use crate::config::schema::Algorithm;
 use crate::data::dataset::Dataset;
 use crate::dist::messages::{GlobalView, Upload};
 use crate::dist::DistConfig;
@@ -370,6 +381,178 @@ impl<'a> LocalNode<'a> {
     }
 }
 
+/// Which round a worker computes next in a multi-phase protocol.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundPhase {
+    /// CVR / D-SAGA / EASGD regular round, or a PS-SVRG server step.
+    Regular,
+    /// PS-SVRG: zero-cost freeze barrier before a snapshot, so every
+    /// worker anchors at the same quiescent server x.
+    SnapReady,
+    /// D-SVRG & PS-SVRG: compute the gradient partial at the new anchor.
+    GradSync,
+    /// D-SVRG: inner loop after a completed gradient sync.
+    Inner,
+}
+
+/// The compute half's result: the upload to send plus the work it
+/// charged (zero for the PS-SVRG freeze marker, which runs no math).
+#[derive(Clone, Debug)]
+pub struct RoundOutput {
+    pub upload: Upload,
+    /// Gradient evaluations this round charged.
+    pub evals: u64,
+    /// Parameter updates this round performed.
+    pub iters: u64,
+}
+
+/// The canonical per-worker round state machine: owns a [`LocalNode`],
+/// the last absorbed [`GlobalView`], the protocol phase, and the round
+/// budget. Every driver executes the same two-beat loop:
+///
+/// ```text
+/// while let Some(out) = machine.compute() {   // pure: no server access
+///     let view = <send out.upload, await the server's reply>;
+///     machine.absorb(view);                   // ingest the reply
+/// }
+/// ```
+///
+/// `compute` is a pure function of (machine state, shard): two machines
+/// for different workers can run their compute halves concurrently —
+/// which is exactly what the parallel simulator does — while every
+/// server interaction stays serialized in the driver.
+pub struct RoundMachine<'a> {
+    node: LocalNode<'a>,
+    /// Last absorbed server reply (zeros before the first exchange, the
+    /// same initial view every driver hands out).
+    view: GlobalView,
+    phase: RoundPhase,
+    /// Completed compute halves; one budget unit each, including the
+    /// PS-SVRG freeze marker (matching the simulator's historical
+    /// accounting, now canonical for all drivers).
+    rounds: usize,
+    /// PS-SVRG server rounds per snapshot cycle (~2n_s/b, per worker).
+    ps_cycle: usize,
+}
+
+impl<'a> RoundMachine<'a> {
+    pub fn new(node: LocalNode<'a>) -> RoundMachine<'a> {
+        let d = node.shard.d();
+        let ps_cycle = (2 * node.shard.n()).div_ceil(node.cfg.ps_batch.max(1));
+        let phase = match node.cfg.algorithm {
+            Algorithm::DistSvrg => RoundPhase::GradSync,
+            Algorithm::PsSvrg => RoundPhase::SnapReady,
+            _ => RoundPhase::Regular,
+        };
+        RoundMachine {
+            node,
+            view: GlobalView {
+                x: vec![0.0; d],
+                gbar: vec![0.0; d],
+            },
+            phase,
+            rounds: 0,
+            ps_cycle,
+        }
+    }
+
+    /// The wrapped worker node (diagnostics / accounting).
+    pub fn node(&self) -> &LocalNode<'a> {
+        &self.node
+    }
+
+    /// Compute halves executed so far (budget units).
+    pub fn rounds(&self) -> usize {
+        self.rounds
+    }
+
+    /// The phase the next `compute` call will execute.
+    pub fn phase(&self) -> RoundPhase {
+        self.phase
+    }
+
+    /// True once the round budget is exhausted.
+    pub fn finished(&self) -> bool {
+        self.rounds >= self.node.cfg.max_rounds
+    }
+
+    /// Compute half: run this round's local math against the last
+    /// absorbed view and return the upload to send. Touches only worker
+    /// state — never the server — so compute halves of distinct workers
+    /// are mutually independent. Returns `None` once the budget is spent.
+    pub fn compute(&mut self) -> Option<RoundOutput> {
+        if self.finished() {
+            return None;
+        }
+        let upload = match (self.node.cfg.algorithm, self.phase) {
+            (Algorithm::CentralVrSync, _) => self.node.cvr_sync_round(&self.view),
+            (Algorithm::CentralVrAsync, _) => self.node.cvr_async_round(&self.view),
+            (Algorithm::DistSvrg, RoundPhase::GradSync) => {
+                self.node.dsvrg_grad_partial(&self.view)
+            }
+            (Algorithm::DistSvrg, _) => self.node.dsvrg_inner_round(&self.view),
+            (Algorithm::DistSaga, _) => {
+                if self.rounds == 0 {
+                    self.node.dsaga_init()
+                } else {
+                    self.node.dsaga_round(&self.view)
+                }
+            }
+            (Algorithm::Easgd, _) => self.node.easgd_round(),
+            (Algorithm::PsSvrg, RoundPhase::SnapReady) => Upload::Ready,
+            (Algorithm::PsSvrg, RoundPhase::GradSync) => self.node.ps_svrg_snapshot(&self.view),
+            (Algorithm::PsSvrg, _) => self.node.ps_svrg_round(&self.view),
+            (a, ph) => panic!("not a distributed algorithm: {a:?} (phase {ph:?})"),
+        };
+        let (evals, iters) = if matches!(upload, Upload::Ready) {
+            (0, 0) // freeze marker: no compute charged
+        } else {
+            (self.node.last_round_evals, self.node.last_round_iters)
+        };
+        self.rounds += 1;
+        self.phase = self.phase_after();
+        Some(RoundOutput {
+            upload,
+            evals,
+            iters,
+        })
+    }
+
+    /// The phase following the round just computed (reads the already
+    /// incremented round counter, like the simulator historically did at
+    /// reply-scheduling time).
+    fn phase_after(&self) -> RoundPhase {
+        match self.node.cfg.algorithm {
+            Algorithm::DistSvrg => match self.phase {
+                RoundPhase::GradSync => RoundPhase::Inner,
+                _ => RoundPhase::GradSync,
+            },
+            Algorithm::PsSvrg => {
+                // cycle = [SnapReady, GradSync, ps_cycle x Regular]
+                let cycle_len = self.ps_cycle + 2;
+                match self.rounds % cycle_len {
+                    0 => RoundPhase::SnapReady,
+                    1 => RoundPhase::GradSync,
+                    _ => RoundPhase::Regular,
+                }
+            }
+            _ => RoundPhase::Regular,
+        }
+    }
+
+    /// Absorb half: ingest the server's reply to the last upload. EASGD
+    /// adopts the elastically updated iterate immediately (its rounds
+    /// never read a stored view); everyone else stores the view for the
+    /// next compute half.
+    pub fn absorb(&mut self, view: GlobalView) {
+        if self.node.cfg.algorithm == Algorithm::Easgd {
+            self.node.easgd_adopt(view.x);
+        } else {
+            self.view = view;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -606,5 +789,120 @@ mod tests {
             decayed < constant,
             "decay should damp movement: {decayed} vs {constant}"
         );
+    }
+
+    fn machine(data: &ShardedDataset, c: DistConfig) -> RoundMachine<'_> {
+        RoundMachine::new(LocalNode::new(
+            0,
+            data.shard(0),
+            Problem::Ridge,
+            c,
+            data.n_total(),
+        ))
+    }
+
+    #[test]
+    fn machine_dsvrg_alternates_phases_and_respects_budget() {
+        let data = toy(2, 16, 3, 4);
+        let mut c = cfg(Algorithm::DistSvrg, 2);
+        c.max_rounds = 5;
+        let mut m = machine(&data, c);
+        let mut kinds = Vec::new();
+        while let Some(out) = m.compute() {
+            kinds.push(out.upload.kind());
+            m.absorb(GlobalView {
+                x: vec![0.0; 3],
+                gbar: vec![0.0; 3],
+            });
+        }
+        assert_eq!(
+            kinds,
+            vec!["grad-partial", "x-only", "grad-partial", "x-only", "grad-partial"]
+        );
+        assert!(m.finished());
+        assert_eq!(m.rounds(), 5);
+        assert!(m.compute().is_none(), "budget must stay spent");
+    }
+
+    #[test]
+    fn machine_ps_svrg_cycle_counts_freeze_as_a_round() {
+        let data = toy(2, 8, 3, 4);
+        let mut c = cfg(Algorithm::PsSvrg, 2);
+        c.ps_batch = 4; // ps_cycle = 2*8/4 = 4
+        c.max_rounds = 14; // two full cycles (6 each) + [Ready, snapshot]
+        let mut m = machine(&data, c);
+        let mut kinds = Vec::new();
+        while let Some(out) = m.compute() {
+            if matches!(out.upload, Upload::Ready) {
+                assert_eq!(out.evals, 0, "freeze must charge no compute");
+                assert_eq!(out.iters, 0);
+            }
+            kinds.push(out.upload.kind());
+            m.absorb(GlobalView {
+                x: vec![0.0; 3],
+                gbar: vec![0.0; 3],
+            });
+        }
+        let cycle = ["ready", "grad-partial", "grad-step", "grad-step", "grad-step", "grad-step"];
+        let mut expect: Vec<&str> = Vec::new();
+        expect.extend(cycle);
+        expect.extend(cycle);
+        expect.extend(["ready", "grad-partial"]);
+        assert_eq!(kinds, expect);
+    }
+
+    #[test]
+    fn machine_dsaga_first_round_is_the_table_fill() {
+        let data = toy(2, 24, 3, 1);
+        let mut c = cfg(Algorithm::DistSaga, 2);
+        c.tau = 5;
+        c.max_rounds = 3;
+        let mut m = machine(&data, c);
+        let first = m.compute().unwrap();
+        assert_eq!(first.evals, 24, "round 0 fills the table over the shard");
+        m.absorb(GlobalView {
+            x: vec![0.0; 3],
+            gbar: vec![0.0; 3],
+        });
+        let second = m.compute().unwrap();
+        assert_eq!(second.evals, 5, "later rounds run tau iterations");
+    }
+
+    /// The machine must replay exactly what a hand-driven node does: same
+    /// methods, same order, same RNG stream => bit-identical uploads.
+    #[test]
+    fn machine_replays_hand_driven_cvr_sync_exactly() {
+        let data = toy(2, 24, 3, 5);
+        let c = cfg(Algorithm::CentralVrSync, 2);
+        let mut m = machine(&data, c);
+        let mut node = LocalNode::new(0, data.shard(0), Problem::Ridge, c, data.n_total());
+        let mut view = GlobalView {
+            x: vec![0.0; 3],
+            gbar: vec![0.0; 3],
+        };
+        for round in 0..3 {
+            let out = m.compute().unwrap();
+            let up = node.cvr_sync_round(&view);
+            assert_eq!(out.upload, up, "round {round} diverged");
+            view = GlobalView {
+                x: vec![0.1 * (round + 1) as f32; 3],
+                gbar: vec![0.0; 3],
+            };
+            m.absorb(view.clone());
+        }
+    }
+
+    #[test]
+    fn machine_easgd_absorb_adopts_the_reply() {
+        let data = toy(2, 24, 3, 2);
+        let mut c = cfg(Algorithm::Easgd, 2);
+        c.tau = 4;
+        let mut m = machine(&data, c);
+        let _ = m.compute().unwrap();
+        m.absorb(GlobalView {
+            x: vec![1.0, 2.0, 3.0],
+            gbar: Vec::new(),
+        });
+        assert_eq!(m.node().x(), &[1.0, 2.0, 3.0]);
     }
 }

@@ -54,6 +54,20 @@ impl Upload {
         crate::dist::codec::upload_frame_len(self)
     }
 
+    /// Barrier kinds are collected (server inbox / barrier buffer) until
+    /// all `p` workers have arrived; the remaining kinds are applied and
+    /// answered immediately. The upload kind alone determines the routing
+    /// — every driver (threads, simulator, TCP server) dispatches on it.
+    pub fn is_barrier(&self) -> bool {
+        matches!(
+            self,
+            Upload::Ready
+                | Upload::State { .. }
+                | Upload::GradPartial { .. }
+                | Upload::XOnly { .. }
+        )
+    }
+
     /// Short label for logs and traces.
     pub fn kind(&self) -> &'static str {
         match self {
@@ -183,6 +197,19 @@ mod tests {
         }
         let v = GlobalView { x: vec![1.0; d], gbar: vec![2.0; d] };
         assert_eq!(v.bytes(), codec::encode_view(&v).len() as u64);
+    }
+
+    /// The routing every driver shares: barrier kinds collect until all
+    /// p arrive, the rest apply immediately.
+    #[test]
+    fn barrier_routing_by_kind() {
+        assert!(Upload::Ready.is_barrier());
+        assert!(Upload::State { x: vec![], gbar: vec![] }.is_barrier());
+        assert!(Upload::GradPartial { gsum: vec![], n: 0 }.is_barrier());
+        assert!(Upload::XOnly { x: vec![] }.is_barrier());
+        assert!(!Upload::Delta { dx: vec![], dgbar: vec![] }.is_barrier());
+        assert!(!Upload::ElasticPush { x: vec![] }.is_barrier());
+        assert!(!Upload::GradStep { dx: vec![] }.is_barrier());
     }
 
     #[test]

@@ -6,14 +6,17 @@
 //! [`DistConfig`] hyper-parameter bundle shared by every execution
 //! engine.
 //!
-//! The protocol is deliberately engine-agnostic: a round is
-//! `LocalNode::*_round(&GlobalView) -> Upload`, and the server exposes one
-//! `apply_*` per upload kind. [`crate::exec::threads`] drives these under
-//! a mutex on real threads; [`crate::exec::simulator`] drives the *same*
-//! methods from a discrete-event loop with virtual time; and
-//! [`transport`] drives them over real sockets between OS processes — so
-//! convergence behaviour is identical and only the clock (and the process
-//! boundary) differs.
+//! The protocol is deliberately engine-agnostic: every round is the
+//! [`local::RoundMachine`] two-beat — a pure `compute()` half producing
+//! the [`messages::Upload`], then an `absorb(view)` half ingesting the
+//! server's reply — and the server exposes one `apply_*` per upload kind
+//! (barrier-vs-immediate routing is `Upload::is_barrier()`).
+//! [`crate::exec::threads`] drives the machine under a mutex on real
+//! threads; [`crate::exec::simulator`] drives the *same* machine from a
+//! discrete-event loop with virtual time, fanning independent compute
+//! halves across a thread pool; and [`transport`] drives it over real
+//! sockets between OS processes — so convergence behaviour is identical
+//! and only the clock (and the process boundary) differs.
 //!
 //! # Wire format
 //!

@@ -213,6 +213,17 @@ impl ServerState {
     pub fn pending_count(&self) -> usize {
         self.inbox_count
     }
+
+    /// Drop a partially collected barrier round. A transport calls this
+    /// while winding down a desynced run (server-push `Stop`): the parked
+    /// deposits can never complete, so they must not poison the
+    /// disconnect bookkeeping.
+    pub fn clear_inbox(&mut self) {
+        for slot in &mut self.inbox {
+            *slot = None;
+        }
+        self.inbox_count = 0;
+    }
 }
 
 #[cfg(test)]
@@ -325,6 +336,21 @@ mod tests {
         // inbox is reusable for the next round
         assert!(s.deposit(0, Upload::Ready).is_none());
         assert_eq!(s.pending_count(), 1);
+    }
+
+    #[test]
+    fn clear_inbox_discards_a_partial_round() {
+        let mut s = ServerState::new(1, 3, 0.9);
+        assert!(s.deposit(0, Upload::Ready).is_none());
+        assert!(s.deposit(2, Upload::Ready).is_none());
+        assert_eq!(s.pending_count(), 2);
+        s.clear_inbox();
+        assert_eq!(s.pending_count(), 0);
+        // slots are reusable: the same workers can deposit again
+        assert!(s.deposit(0, Upload::Ready).is_none());
+        assert!(s.deposit(2, Upload::Ready).is_none());
+        let round = s.deposit(1, Upload::Ready).unwrap();
+        assert_eq!(round.len(), 3);
     }
 
     #[test]

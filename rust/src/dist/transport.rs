@@ -8,19 +8,29 @@
 //!   It accepts `p` connections, identifies each worker from its
 //!   [`Hello`] handshake (worker slot, shard size for barrier weights,
 //!   feature dimension), then services uploads in a deterministic
-//!   worker-order scan: barrier kinds (`Ready`/`State`/`GradPartial`/
-//!   `XOnly`) go through [`ServerState::deposit`] and are applied with
-//!   [`ServerState::apply_barrier_round`] when the round completes;
-//!   async kinds (`Delta`/`ElasticPush`/`GradStep`) are applied and
-//!   answered immediately. The scan order makes async runs reproducible:
-//!   uploads apply in worker order within each sweep, exactly like the
-//!   discrete-event simulator with homogeneous workers.
+//!   worker-order scan: barrier kinds go through [`ServerState::deposit`]
+//!   and are applied with [`ServerState::apply_barrier_round`] when the
+//!   round completes; async kinds are applied and answered immediately
+//!   (the routing is `Upload::is_barrier()`, shared with every other
+//!   driver). The scan order makes async runs reproducible: uploads
+//!   apply in worker order within each sweep, exactly like the
+//!   discrete-event simulator with homogeneous workers. If the barrier
+//!   schedule desyncs — e.g. PS-SVRG on *uneven* shards, where
+//!   `ps_cycle` differs per worker and budgets run out mid-cycle — the
+//!   server pushes a `Stop` frame to every parked worker and winds the
+//!   run down cleanly instead of erroring (PR 4 shipped without this and
+//!   died with "barrier stalled").
 //! * [`TcpClient`] — one worker's connection: handshake on connect, then
-//!   `exchange(upload) -> view` round trips.
-//! * [`run_worker`] — drives a [`LocalNode`] through its full round
-//!   budget over a [`TcpClient`], mirroring `exec::threads::worker_loop`
-//!   round-for-round so TCP endpoints are comparable with the in-process
-//!   engines on the same seed (see `rust/tests/tcp_loopback.rs`).
+//!   `exchange(upload) -> Some(view)` round trips (`None` = the server
+//!   pushed `Stop`). Encode and frame-read buffers are owned by the
+//!   session and reused across frames, so steady-state rounds allocate
+//!   nothing on the wire path even at text-scale `d`.
+//! * [`run_worker`] — drives the canonical [`RoundMachine`]
+//!   compute/absorb state machine from [`crate::dist::local`] over a
+//!   [`TcpClient`]. No round sequencing lives here: the same machine
+//!   drives `exec::threads` and `exec::simulator`, so TCP endpoints are
+//!   comparable with the in-process engines on the same seed (see
+//!   `rust/tests/tcp_loopback.rs`).
 //!
 //! Byte accounting is measured twice on purpose: [`ServeReport`] carries
 //! both the actual frame lengths moved over the socket
@@ -34,14 +44,45 @@ use std::net::{TcpListener, TcpStream};
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::config::schema::Algorithm;
 use crate::data::dataset::Dataset;
 use crate::dist::codec::{self, Hello, WireMsg, MAX_FRAME_BODY};
-use crate::dist::local::LocalNode;
+use crate::dist::local::{LocalNode, RoundMachine};
 use crate::dist::messages::{GlobalView, Upload};
 use crate::dist::server::ServerState;
 use crate::dist::DistConfig;
 use crate::model::glm::Problem;
+
+/// Read one complete frame (prefix + body) into a reusable buffer,
+/// replacing its contents. Returns `Ok(false)` on a clean EOF at a frame
+/// boundary; EOF mid-frame, a hostile length prefix, or an I/O failure
+/// are errors. Reusing one buffer per session keeps the decode hot path
+/// allocation-free for the frame bytes (the decoded vectors themselves
+/// are owned by the returned message).
+pub fn read_frame_into(r: &mut impl Read, max_body: u32, buf: &mut Vec<u8>) -> Result<bool> {
+    let mut prefix = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        let k = r.read(&mut prefix[got..])?;
+        if k == 0 {
+            if got == 0 {
+                return Ok(false);
+            }
+            bail!("connection closed mid length prefix ({got}/4 bytes)");
+        }
+        got += k;
+    }
+    let len = u32::from_le_bytes(prefix);
+    ensure!(
+        len <= max_body,
+        "frame body of {len} bytes exceeds cap {max_body}"
+    );
+    buf.clear();
+    buf.resize(4 + len as usize, 0);
+    buf[..4].copy_from_slice(&prefix);
+    r.read_exact(&mut buf[4..])
+        .context("connection closed mid frame body")?;
+    Ok(true)
+}
 
 /// Read one complete frame (prefix + body). Returns `Ok(None)` on a clean
 /// EOF at a frame boundary; EOF mid-frame, a hostile length prefix, or an
@@ -56,28 +97,28 @@ pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
 /// [`codec::max_body_for_dim`]`(d)` to keep a hostile 4-byte prefix from
 /// forcing a [`MAX_FRAME_BODY`]-sized allocation.
 pub fn read_frame_bounded(r: &mut impl Read, max_body: u32) -> Result<Option<Vec<u8>>> {
-    let mut prefix = [0u8; 4];
-    let mut got = 0usize;
-    while got < 4 {
-        let k = r.read(&mut prefix[got..])?;
-        if k == 0 {
-            if got == 0 {
-                return Ok(None);
-            }
-            bail!("connection closed mid length prefix ({got}/4 bytes)");
-        }
-        got += k;
+    let mut buf = Vec::new();
+    if read_frame_into(r, max_body, &mut buf)? {
+        Ok(Some(buf))
+    } else {
+        Ok(None)
     }
-    let len = u32::from_le_bytes(prefix);
-    ensure!(
-        len <= max_body,
-        "frame body of {len} bytes exceeds cap {max_body}"
-    );
-    let mut frame = vec![0u8; 4 + len as usize];
-    frame[..4].copy_from_slice(&prefix);
-    r.read_exact(&mut frame[4..])
-        .context("connection closed mid frame body")?;
-    Ok(Some(frame))
+}
+
+/// Read and decode one message into a session-owned frame buffer,
+/// returning it with its on-wire frame size. `max_dim` bounds both the
+/// frame-buffer allocation (via [`codec::max_body_for_dim`]) and the
+/// decoded-vector allocation a hostile header could otherwise force.
+pub fn read_msg_into(
+    r: &mut impl Read,
+    max_dim: u32,
+    buf: &mut Vec<u8>,
+) -> Result<Option<(WireMsg, u64)>> {
+    if !read_frame_into(r, codec::max_body_for_dim(max_dim), buf)? {
+        return Ok(None);
+    }
+    let msg = codec::decode_bounded(buf, max_dim)?;
+    Ok(Some((msg, buf.len() as u64)))
 }
 
 /// Read and decode one message, returning it with its on-wire frame size.
@@ -87,16 +128,11 @@ pub fn read_msg(r: &mut impl Read) -> Result<Option<(WireMsg, u64)>> {
 
 /// [`read_msg`] with a cap on declared vector dimensions: once a session
 /// has established its `d`, passing it here bounds both the frame-buffer
-/// allocation (via [`codec::max_body_for_dim`]) and the decoded-vector
-/// allocation a hostile header could otherwise force from a tiny frame.
+/// allocation and the decoded-vector allocation (see [`read_msg_into`],
+/// which additionally reuses the frame buffer).
 pub fn read_msg_bounded(r: &mut impl Read, max_dim: u32) -> Result<Option<(WireMsg, u64)>> {
-    match read_frame_bounded(r, codec::max_body_for_dim(max_dim))? {
-        None => Ok(None),
-        Some(frame) => {
-            let msg = codec::decode_bounded(&frame, max_dim)?;
-            Ok(Some((msg, frame.len() as u64)))
-        }
-    }
+    let mut buf = Vec::new();
+    read_msg_into(r, max_dim, &mut buf)
 }
 
 /// One worker's connection to the central server.
@@ -104,6 +140,11 @@ pub struct TcpClient {
     stream: TcpStream,
     /// Session feature dimension; bounds reply decoding.
     dim: u32,
+    /// Reused encode buffer (arena: one allocation per session, not per
+    /// frame).
+    ebuf: Vec<u8>,
+    /// Reused frame-read buffer.
+    rbuf: Vec<u8>,
     /// Actual frame bytes written (handshake included).
     pub bytes_sent: u64,
     /// Actual frame bytes read.
@@ -119,26 +160,37 @@ impl TcpClient {
         let mut client = TcpClient {
             stream,
             dim: hello.d,
+            ebuf: Vec::new(),
+            rbuf: Vec::new(),
             bytes_sent: 0,
             bytes_received: 0,
         };
-        client.send_raw(&codec::encode_hello(&hello))?;
+        codec::encode_hello_into(&hello, &mut client.ebuf);
+        client.flush_ebuf()?;
         Ok(client)
     }
 
-    fn send_raw(&mut self, frame: &[u8]) -> Result<()> {
-        self.stream.write_all(frame)?;
-        self.bytes_sent += frame.len() as u64;
+    fn flush_ebuf(&mut self) -> Result<()> {
+        self.stream.write_all(&self.ebuf)?;
+        self.bytes_sent += self.ebuf.len() as u64;
         Ok(())
     }
 
-    /// One protocol round trip: send an upload, block for the reply view.
-    pub fn exchange(&mut self, up: &Upload) -> Result<GlobalView> {
-        self.send_raw(&codec::encode_upload(up))?;
-        match read_msg_bounded(&mut self.stream, self.dim)? {
+    /// One protocol round trip: send an upload, block for the reply.
+    /// `Ok(Some(view))` is the normal reply; `Ok(None)` means the server
+    /// pushed a `Stop` frame — the run is over and the worker should wind
+    /// down cleanly at its current round.
+    pub fn exchange(&mut self, up: &Upload) -> Result<Option<GlobalView>> {
+        codec::encode_upload_into(up, &mut self.ebuf);
+        self.flush_ebuf()?;
+        match read_msg_into(&mut self.stream, self.dim, &mut self.rbuf)? {
             Some((WireMsg::View(v), n)) => {
                 self.bytes_received += n;
-                Ok(v)
+                Ok(Some(v))
+            }
+            Some((WireMsg::Stop, n)) => {
+                self.bytes_received += n;
+                Ok(None)
             }
             Some((other, _)) => bail!("expected a GlobalView reply, got {other:?}"),
             None => bail!("server closed the connection mid round"),
@@ -164,17 +216,25 @@ pub struct ServeReport {
     pub gbar: Vec<f32>,
     /// Server updates applied.
     pub updates: u64,
-    /// Actual bytes of Upload/GlobalView frames on the wire, both
+    /// Actual bytes of Upload/GlobalView/Stop frames on the wire, both
     /// directions (handshakes excluded).
     pub bytes_on_wire: u64,
-    /// The same traffic priced by `Upload::bytes()`/`GlobalView::bytes()`.
-    /// Always equals `bytes_on_wire`; reported separately so tests can
-    /// assert the accounting never drifts from the codec.
+    /// The same traffic priced by `Upload::bytes()`/`GlobalView::bytes()`
+    /// (and `codec::stop_frame_len()`). Always equals `bytes_on_wire`;
+    /// reported separately so tests can assert the accounting never
+    /// drifts from the codec.
     pub bytes_accounted: u64,
     /// Hello handshake bytes (not charged by the in-process engines).
     pub bytes_handshake: u64,
-    /// Upload + view frames carried (handshakes excluded).
+    /// Upload + view + stop frames carried (handshakes excluded).
     pub frames: u64,
+    /// Server-push `Stop` frames sent. Nonzero means the run wound down
+    /// before every worker finished its budget: either a desynced
+    /// barrier schedule (expected on uneven shards) or a peer that
+    /// vanished at a frame boundary — the wire cannot tell the two
+    /// apart, so callers should treat `stops > 0` as a degraded run
+    /// (a crash *mid-frame* still fails [`serve`] loudly).
+    pub stops: u64,
 }
 
 fn check_dims(up: &Upload, d: usize) -> Result<()> {
@@ -190,27 +250,32 @@ fn check_dims(up: &Upload, d: usize) -> Result<()> {
     Ok(())
 }
 
-fn is_barrier_kind(up: &Upload) -> bool {
-    matches!(
-        up,
-        Upload::Ready | Upload::State { .. } | Upload::GradPartial { .. } | Upload::XOnly { .. }
-    )
-}
-
 /// Run the central server until every worker has disconnected cleanly.
 ///
 /// Deterministic by construction: workers are serviced in worker-id order
 /// (blocking on each in turn), never by arrival timing, so a TCP run is a
 /// pure function of the workers' seeds — races cannot change the math.
 ///
-/// Workers must share one barrier schedule: unlike `exec::threads`, there
-/// is no server->worker stop signal, so if schedules desync — e.g.
-/// PS-SVRG on *uneven* shards, where `ps_cycle` differs per worker and
-/// budgets run out mid-cycle — the run ends with a loud "barrier stalled"
-/// error rather than a hang or silently wrong math. Stop propagation is a
-/// ROADMAP follow-on.
+/// Workers normally share one barrier schedule. When schedules desync —
+/// e.g. PS-SVRG on *uneven* shards, where `ps_cycle` differs per worker
+/// and budgets run out mid-cycle — some workers exit while others sit
+/// parked in a barrier that can never fill. The server detects that state
+/// (every live worker parked, at least one gone), pushes a `Stop` frame
+/// to each parked worker, discards the orphaned deposits, and completes
+/// the run cleanly, reporting the wind-down in [`ServeReport::stops`].
+/// A peer that *crashes* at a frame boundary is indistinguishable from a
+/// budget-complete exit on the wire, so such a crash also ends as a
+/// `stops > 0` wind-down rather than an error (mid-frame crashes still
+/// error loudly); a worker-side goodbye frame that carries the completed
+/// round count is the ROADMAP follow-on that would separate the two.
+/// Convergence-based early stop is still not propagated over the wire;
+/// `Stop` only resolves barriers that cannot fill.
 pub fn serve(listener: TcpListener, cfg: ServeConfig) -> Result<ServeReport> {
     ensure!(cfg.p >= 1, "need at least one worker");
+    // session-owned arenas: one frame-read + one encode buffer for the
+    // whole run, reused across workers and rounds
+    let mut rbuf: Vec<u8> = Vec::new();
+    let mut ebuf: Vec<u8> = Vec::new();
     // accept phase: p connections, identified by their Hello
     let mut slots: Vec<Option<TcpStream>> = (0..cfg.p).map(|_| None).collect();
     let mut n_s = vec![0u64; cfg.p];
@@ -221,7 +286,7 @@ pub fn serve(listener: TcpListener, cfg: ServeConfig) -> Result<ServeReport> {
         stream.set_nodelay(true).ok();
         // a Hello carries no vectors, so bound decoding at dim 0: hostile
         // first frames cannot force a large allocation pre-handshake
-        let Some((msg, len)) = read_msg_bounded(&mut stream, 0)? else {
+        let Some((msg, len)) = read_msg_into(&mut stream, 0, &mut rbuf)? else {
             bail!("worker closed before its Hello");
         };
         let h = match msg {
@@ -262,28 +327,39 @@ pub fn serve(listener: TcpListener, cfg: ServeConfig) -> Result<ServeReport> {
     let mut bytes_on_wire = 0u64;
     let mut bytes_accounted = 0u64;
     let mut frames = 0u64;
+    let mut stops = 0u64;
 
     while open > 0 {
-        // every live worker already deposited into a barrier that can no
-        // longer complete (some peer disconnected): fail loudly instead
-        // of spinning
-        ensure!(
-            (0..cfg.p).any(|s| !done[s] && !in_barrier[s]),
-            "barrier stalled at {}/{} deposits with all remaining workers waiting",
-            state.pending_count(),
-            cfg.p
-        );
+        // every live worker is parked in a barrier that can no longer
+        // fill (some peer is gone): push Stop frames and wind down
+        // cleanly instead of erroring
+        if (0..cfg.p).all(|s| done[s] || in_barrier[s]) {
+            codec::encode_stop_into(&mut ebuf);
+            for s in 0..cfg.p {
+                if done[s] {
+                    continue;
+                }
+                conns[s].write_all(&ebuf)?;
+                frames += 1;
+                stops += 1;
+                bytes_on_wire += ebuf.len() as u64;
+                bytes_accounted += codec::stop_frame_len();
+                in_barrier[s] = false;
+            }
+            // the parked deposits can never complete a round
+            state.clear_inbox();
+            continue; // next sweep reads the stopped workers' clean EOFs
+        }
         for s in 0..cfg.p {
             if done[s] || in_barrier[s] {
                 continue;
             }
-            let Some((msg, len)) = read_msg_bounded(&mut conns[s], d as u32)? else {
+            let Some((msg, len)) = read_msg_into(&mut conns[s], d as u32, &mut rbuf)? else {
+                // a disconnect while peers sit in a half-collected barrier
+                // is the desync case: the stall check above fires on the
+                // next pass and Stops the parked workers cleanly
                 done[s] = true;
                 open -= 1;
-                ensure!(
-                    state.pending_count() == 0,
-                    "worker {s} disconnected while a barrier round was pending"
-                );
                 continue;
             };
             let up = match msg {
@@ -294,17 +370,17 @@ pub fn serve(listener: TcpListener, cfg: ServeConfig) -> Result<ServeReport> {
             frames += 1;
             bytes_on_wire += len;
             bytes_accounted += up.bytes();
-            if is_barrier_kind(&up) {
+            if up.is_barrier() {
                 in_barrier[s] = true;
                 if let Some(round) = state.deposit(s, up) {
                     state.apply_barrier_round(&round, &weights)?;
                     let view = state.view();
-                    let enc = codec::encode_view(&view);
+                    codec::encode_view_into(&view, &mut ebuf);
                     let view_bytes = view.bytes();
                     for (conn, waiting) in conns.iter_mut().zip(in_barrier.iter_mut()) {
-                        conn.write_all(&enc)?;
+                        conn.write_all(&ebuf)?;
                         frames += 1;
-                        bytes_on_wire += enc.len() as u64;
+                        bytes_on_wire += ebuf.len() as u64;
                         bytes_accounted += view_bytes;
                         *waiting = false;
                     }
@@ -325,10 +401,10 @@ pub fn serve(listener: TcpListener, cfg: ServeConfig) -> Result<ServeReport> {
                     }
                     _ => unreachable!("non-barrier kinds are exactly these three"),
                 };
-                let enc = codec::encode_view(&view);
-                conns[s].write_all(&enc)?;
+                codec::encode_view_into(&view, &mut ebuf);
+                conns[s].write_all(&ebuf)?;
                 frames += 1;
-                bytes_on_wire += enc.len() as u64;
+                bytes_on_wire += ebuf.len() as u64;
                 bytes_accounted += view.bytes();
             }
         }
@@ -341,6 +417,7 @@ pub fn serve(listener: TcpListener, cfg: ServeConfig) -> Result<ServeReport> {
         bytes_accounted,
         bytes_handshake,
         frames,
+        stops,
     })
 }
 
@@ -357,16 +434,18 @@ pub struct WorkerReport {
     pub bytes_sent: u64,
     /// Actual frame bytes read.
     pub bytes_received: u64,
+    /// True if the server pushed a `Stop` before the budget ran out.
+    pub stopped_by_server: bool,
     /// Final local iterate (diagnostics).
     pub x: Vec<f32>,
 }
 
-/// Drive one worker's full round budget over TCP. The loop mirrors
-/// `exec::threads::worker_loop` round-for-round (including D-SVRG's
-/// two-phase rounds and PS-SVRG's snapshot cycle), so a TCP run does the
-/// same math as the in-process engines on the same seed. Convergence-based
-/// early stop is not propagated over the wire: TCP runs execute the fixed
-/// `max_rounds` budget.
+/// Drive one worker's full round budget over TCP. All round sequencing
+/// lives in [`RoundMachine`] — this loop is the same compute/exchange/
+/// absorb two-beat the thread engine runs, so a TCP run does the same
+/// math as the in-process engines on the same seed. Convergence-based
+/// early stop is not propagated over the wire; a server-push `Stop`
+/// (desynced barrier schedule) ends the run cleanly at the current round.
 pub fn run_worker(
     addr: &str,
     s: usize,
@@ -376,7 +455,7 @@ pub fn run_worker(
     cfg: DistConfig,
 ) -> Result<WorkerReport> {
     let d = shard.d();
-    let mut node = LocalNode::new(s, shard, problem, cfg, n_global);
+    let mut machine = RoundMachine::new(LocalNode::new(s, shard, problem, cfg, n_global));
     let hello = Hello {
         s: s as u32,
         p: cfg.p as u32,
@@ -384,90 +463,28 @@ pub fn run_worker(
         d: d as u32,
     };
     let mut client = TcpClient::connect(addr, hello)?;
-    let mut view = GlobalView {
-        x: vec![0.0; d],
-        gbar: vec![0.0; d],
-    };
-    let ps_cycle = (2 * shard.n()).div_ceil(cfg.ps_batch.max(1));
     let mut grad_evals = 0u64;
     let mut iterations = 0u64;
-    let mut round = 0usize;
-    while round < cfg.max_rounds {
-        match cfg.algorithm {
-            Algorithm::CentralVrSync => {
-                let up = node.cvr_sync_round(&view);
-                grad_evals += node.last_round_evals;
-                iterations += node.last_round_iters;
-                view = client.exchange(&up)?;
+    let mut stopped_by_server = false;
+    while let Some(out) = machine.compute() {
+        grad_evals += out.evals;
+        iterations += out.iters;
+        match client.exchange(&out.upload)? {
+            Some(view) => machine.absorb(view),
+            None => {
+                stopped_by_server = true;
+                break;
             }
-            Algorithm::CentralVrAsync => {
-                let up = node.cvr_async_round(&view);
-                grad_evals += node.last_round_evals;
-                iterations += node.last_round_iters;
-                view = client.exchange(&up)?;
-            }
-            Algorithm::DistSvrg => {
-                let up = node.dsvrg_grad_partial(&view);
-                grad_evals += node.last_round_evals;
-                iterations += node.last_round_iters;
-                let v = client.exchange(&up)?;
-                // each phase counts as a round (same semantics as the
-                // in-process engines, so budgets line up exactly)
-                round += 1;
-                if round >= cfg.max_rounds {
-                    break;
-                }
-                let up = node.dsvrg_inner_round(&v);
-                grad_evals += node.last_round_evals;
-                iterations += node.last_round_iters;
-                view = client.exchange(&up)?;
-            }
-            Algorithm::DistSaga => {
-                let up = if round == 0 {
-                    node.dsaga_init()
-                } else {
-                    node.dsaga_round(&view)
-                };
-                grad_evals += node.last_round_evals;
-                iterations += node.last_round_iters;
-                view = client.exchange(&up)?;
-            }
-            Algorithm::Easgd => {
-                let up = node.easgd_round();
-                grad_evals += node.last_round_evals;
-                iterations += node.last_round_iters;
-                let v = client.exchange(&up)?;
-                node.easgd_adopt(v.x);
-            }
-            Algorithm::PsSvrg => {
-                let v = client.exchange(&Upload::Ready)?;
-                let up = node.ps_svrg_snapshot(&v);
-                grad_evals += node.last_round_evals;
-                iterations += node.last_round_iters;
-                let mut v = client.exchange(&up)?;
-                for _ in 0..ps_cycle {
-                    if round >= cfg.max_rounds {
-                        break;
-                    }
-                    let up = node.ps_svrg_round(&v);
-                    grad_evals += node.last_round_evals;
-                    iterations += node.last_round_iters;
-                    v = client.exchange(&up)?;
-                    round += 1;
-                }
-                view = v;
-            }
-            a => bail!("not a distributed algorithm: {a:?}"),
         }
-        round += 1;
     }
     Ok(WorkerReport {
-        rounds: round,
+        rounds: machine.rounds(),
         grad_evals,
         iterations,
         bytes_sent: client.bytes_sent,
         bytes_received: client.bytes_received,
-        x: node.x().to_vec(),
+        stopped_by_server,
+        x: machine.node().x().to_vec(),
     })
 }
 
@@ -536,6 +553,27 @@ mod tests {
         assert_eq!(m2, WireMsg::View(view.clone()));
         assert_eq!(n2, view.bytes());
         assert!(read_msg(&mut r).unwrap().is_none());
+    }
+
+    /// The reused frame buffer must be fully replaced per message — a
+    /// longer previous frame cannot leak trailing bytes into a shorter
+    /// successor.
+    #[test]
+    fn read_msg_into_replaces_buffer_contents() {
+        let big = Upload::XOnly { x: vec![1.0; 32] };
+        let small = Upload::Ready;
+        let mut stream = codec::encode_upload(&big);
+        stream.extend_from_slice(&codec::encode_upload(&small));
+        let mut r = Cursor::new(stream);
+        let mut buf = Vec::new();
+        let (m1, n1) = read_msg_into(&mut r, 32, &mut buf).unwrap().unwrap();
+        assert_eq!(m1, WireMsg::Upload(big.clone()));
+        assert_eq!(n1, big.bytes());
+        let cap = buf.capacity();
+        let (m2, n2) = read_msg_into(&mut r, 32, &mut buf).unwrap().unwrap();
+        assert_eq!(m2, WireMsg::Upload(small));
+        assert_eq!(n2, 5);
+        assert_eq!(buf.capacity(), cap, "reused buffer must not reallocate");
     }
 
     #[test]

@@ -2,14 +2,33 @@
 //! cluster (up to 960 workers on Xeon E5 nodes), per DESIGN.md §3.
 //!
 //! The algorithm math is REAL: every event executes actual
-//! [`LocalNode`] rounds on actual shard data, so convergence curves are
-//! genuine. Only the *clock* is virtual: worker compute is charged from
-//! the calibrated [`CostModel`] (x per-worker speed multipliers for
-//! heterogeneity), messages pay latency + size/bandwidth, and the central
-//! server serializes updates behind a lock with a per-message service time
-//! (the paper's "locked" asynchronous implementation, §6.2).
+//! [`RoundMachine`] compute halves on actual shard data, so convergence
+//! curves are genuine. Only the *clock* is virtual: worker compute is
+//! charged from the calibrated [`CostModel`] (x per-worker speed
+//! multipliers for heterogeneity), messages pay latency + size/bandwidth,
+//! and the central server serializes updates behind a lock with a
+//! per-message service time (the paper's "locked" asynchronous
+//! implementation, §6.2).
 //!
-//! Supported algorithms and their event patterns:
+//! # Compute/apply split and parallel execution
+//!
+//! The event loop exploits the protocol's structural fact (the same one
+//! the paper's linear-scaling claim rests on): worker compute halves
+//! between server interactions are mutually independent — a
+//! [`RoundMachine::compute`] touches only its own worker's state — and
+//! only the [`ServerState`] applications must serialize. The loop
+//! therefore drains every *consecutive* run of `Reply` events from the
+//! queue into one compute batch, fans the batch out across a scoped
+//! `std::thread::scope` pool ([`SimParams::threads`], default 1 =
+//! serial), and then processes the batch's results — and every server
+//! `Arrive` event — strictly in virtual-time order. Because batch
+//! membership and result processing follow the exact event order the
+//! serial driver uses, traces, counters, and virtual times are
+//! bit-identical for every thread count (asserted by
+//! `rust/tests/sim_parallel_parity.rs`).
+//!
+//! Supported algorithms and their event patterns (sequencing lives in
+//! [`RoundMachine`], shared with the thread and TCP drivers):
 //! * CVR-Sync            — barrier round: all p upload, server averages,
 //!                         broadcast (Algorithm 2);
 //! * CVR-Async / D-SAGA  — free-running rounds, delta-apply under the
@@ -25,9 +44,8 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::sync::Arc;
 
-use crate::config::schema::Algorithm;
 use crate::data::shard::ShardedDataset;
-use crate::dist::local::LocalNode;
+use crate::dist::local::{LocalNode, RoundMachine, RoundOutput};
 use crate::dist::messages::{GlobalView, Upload};
 use crate::dist::server::ServerState;
 use crate::dist::DistConfig;
@@ -45,6 +63,10 @@ pub struct SimParams {
     pub cost: CostModel,
     /// Hard cap on simulated events (runaway guard).
     pub max_events: u64,
+    /// Compute-half fan-out width: worker rounds in one batch run on up
+    /// to this many OS threads. 1 = the serial driver. Any value yields
+    /// bit-identical traces; >1 only changes wall-clock time.
+    pub threads: usize,
 }
 
 impl SimParams {
@@ -52,6 +74,7 @@ impl SimParams {
         SimParams {
             cost: CostModel::analytic(d),
             max_events: 50_000_000,
+            threads: 1,
         }
     }
 
@@ -59,32 +82,25 @@ impl SimParams {
         SimParams {
             cost: CostModel::calibrate(d),
             max_events: 50_000_000,
+            threads: 1,
         }
     }
-}
 
-/// Worker lifecycle phase (which round type it runs next).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum Phase {
-    /// CVR / D-SAGA / EASGD regular round (or D-SAGA init on round 0).
-    Regular,
-    /// PS-SVRG: zero-cost freeze barrier before a snapshot, so every
-    /// worker anchors at the same quiescent server x.
-    SnapReady,
-    /// D-SVRG & PS-SVRG: compute the gradient partial at the new anchor.
-    GradSync,
-    /// D-SVRG: inner loop after a completed gradient sync.
-    Inner,
+    /// Set the compute fan-out width (clamped to >= 1).
+    pub fn with_threads(mut self, threads: usize) -> SimParams {
+        self.threads = threads.max(1);
+        self
+    }
 }
 
 #[derive(Debug)]
 enum EventKind {
-    /// An upload from worker `s` (produced in round phase `phase`)
-    /// reaches the server inbox.
-    Arrive { s: usize, upload: Upload, phase: Phase },
-    /// The server's reply reaches worker `s`, which immediately computes
-    /// its next round (charging virtual compute time).
-    Reply { s: usize, view: GlobalView, phase: Phase },
+    /// An upload from worker `s` reaches the server inbox. Barrier kinds
+    /// collect in the server inbox; the rest apply immediately.
+    Arrive { s: usize, upload: Upload },
+    /// The server's reply reaches worker `s`, which absorbs it and
+    /// computes its next round (charging virtual compute time).
+    Reply { s: usize, view: GlobalView },
 }
 
 struct Event {
@@ -115,6 +131,15 @@ impl Ord for Event {
     }
 }
 
+/// One compute half awaiting execution: the worker, the virtual time its
+/// reply landed (t0 for the next round), and the view to absorb first
+/// (`None` for the t=0 kick-off, which uses the machine's initial zeros).
+struct ComputeItem {
+    s: usize,
+    t0: f64,
+    view: Option<GlobalView>,
+}
+
 /// Result of a simulated distributed run.
 pub struct SimReport {
     pub trace: RunTrace,
@@ -135,12 +160,62 @@ pub fn run(
     Sim::new(problem, data, cfg, params).run()
 }
 
+/// Execute a batch of compute halves, fanning out across up to `threads`
+/// scoped OS threads. Each item borrows a *distinct* machine (one
+/// in-flight event per worker is a protocol invariant), so the fan-out
+/// needs no locks; results land in per-chunk output slots and are
+/// consumed by the caller in event order.
+fn compute_halves<'data>(
+    machines: &mut [RoundMachine<'data>],
+    items: &mut [ComputeItem],
+    threads: usize,
+) -> Vec<Option<RoundOutput>> {
+    fn step(m: &mut RoundMachine, view: Option<GlobalView>) -> Option<RoundOutput> {
+        if let Some(v) = view {
+            m.absorb(v);
+        }
+        m.compute()
+    }
+
+    let mut slots: Vec<Option<&mut RoundMachine<'data>>> =
+        machines.iter_mut().map(Some).collect();
+    let mut jobs: Vec<(&mut RoundMachine<'data>, Option<GlobalView>)> = items
+        .iter_mut()
+        .map(|it| {
+            let m = slots[it.s]
+                .take()
+                .expect("one in-flight event per worker");
+            (m, it.view.take())
+        })
+        .collect();
+    let mut outs: Vec<Option<RoundOutput>> = Vec::new();
+    outs.resize_with(jobs.len(), || None);
+    let k = threads.min(jobs.len()).max(1);
+    if k <= 1 {
+        for ((m, view), slot) in jobs.iter_mut().zip(outs.iter_mut()) {
+            *slot = step(m, view.take());
+        }
+    } else {
+        let chunk = jobs.len().div_ceil(k);
+        std::thread::scope(|scope| {
+            for (job_chunk, out_chunk) in jobs.chunks_mut(chunk).zip(outs.chunks_mut(chunk)) {
+                scope.spawn(move || {
+                    for ((m, view), slot) in job_chunk.iter_mut().zip(out_chunk.iter_mut()) {
+                        *slot = step(m, view.take());
+                    }
+                });
+            }
+        });
+    }
+    outs
+}
+
 struct Sim<'a> {
     problem: Problem,
     data: &'a ShardedDataset,
     cfg: DistConfig,
     params: SimParams,
-    nodes: Vec<LocalNode<'a>>,
+    machines: Vec<RoundMachine<'a>>,
     server: ServerState,
     speeds: Vec<f64>,
     weights: Vec<f64>,
@@ -148,19 +223,14 @@ struct Sim<'a> {
     seq: u64,
     // FIFO server-lock model
     server_free_at: f64,
-    // barrier collection
-    pending: Vec<Option<Upload>>,
-    pending_count: usize,
+    // barrier timing (collection itself lives in the server inbox)
     barrier_last_arrival: f64,
-    // bookkeeping
-    rounds: Vec<u32>,
-    // PS-SVRG snapshot cadence (rounds per cycle; round 0 of a cycle = sync)
-    ps_cycle: u32,
     counters: Arc<Counters>,
     series: Series,
     check: ConvergenceCheck,
     applies_since_record: usize,
     total_grad_evals: u64,
+    total_iterations: u64,
     converged: bool,
     events: u64,
     now: f64,
@@ -177,8 +247,8 @@ impl<'a> Sim<'a> {
         assert_eq!(cfg.p, p, "cfg.p must match shard count");
         let d = data.d();
         let n_global = data.n_total();
-        let nodes: Vec<LocalNode> = (0..p)
-            .map(|s| LocalNode::new(s, data.shard(s), problem, cfg, n_global))
+        let machines: Vec<RoundMachine> = (0..p)
+            .map(|s| RoundMachine::new(LocalNode::new(s, data.shard(s), problem, cfg, n_global)))
             .collect();
         let mut rng = Pcg64::new(cfg.seed ^ 0x5157_AB1E);
         let spread = cfg.network.hetero_spread.max(1.0);
@@ -194,30 +264,25 @@ impl<'a> Sim<'a> {
             })
             .collect();
         let weights: Vec<f64> = (0..p).map(|s| data.weight(s)).collect();
-        let n_s = data.shard(0).n();
-        let ps_cycle = ((2 * n_s).div_ceil(cfg.ps_batch.max(1))) as u32;
         Sim {
             problem,
             data,
             cfg,
             params,
-            nodes,
+            machines,
             server: ServerState::new(d, p, cfg.easgd_beta),
             speeds,
             weights,
             heap: BinaryHeap::new(),
             seq: 0,
             server_free_at: 0.0,
-            pending: (0..p).map(|_| None).collect(),
-            pending_count: 0,
             barrier_last_arrival: 0.0,
-            rounds: vec![0; p],
-            ps_cycle,
             counters: Counters::new(),
             series: Series::new(cfg.algorithm.name()),
             check: ConvergenceCheck::new(cfg.tol),
             applies_since_record: 0,
             total_grad_evals: 0,
+            total_iterations: 0,
             converged: false,
             events: 0,
             now: 0.0,
@@ -233,91 +298,38 @@ impl<'a> Sim<'a> {
         });
     }
 
-    fn initial_phase(&self) -> Phase {
-        match self.cfg.algorithm {
-            Algorithm::DistSvrg => Phase::GradSync,
-            Algorithm::PsSvrg => Phase::SnapReady,
-            _ => Phase::Regular,
-        }
-    }
-
-    fn is_barrier(&self, phase: Phase) -> bool {
-        match self.cfg.algorithm {
-            Algorithm::CentralVrSync | Algorithm::DistSvrg => true,
-            Algorithm::PsSvrg => phase != Phase::Regular,
-            _ => false,
-        }
-    }
-
-    /// Execute worker `s`'s next round at virtual time `t0`, scheduling the
-    /// resulting upload's arrival at the server.
-    fn run_worker_round(&mut self, s: usize, t0: f64, view: &GlobalView, phase: Phase) {
-        if self.converged || self.rounds[s] >= self.cfg.max_rounds as u32 {
+    /// Execute a batch of compute halves (in parallel when
+    /// `params.threads > 1`), then serialize the results in event order:
+    /// charge counters, price compute + transfer time, and schedule each
+    /// upload's arrival at the server.
+    fn run_compute_batch(&mut self, mut items: Vec<ComputeItem>) {
+        if items.is_empty() || self.converged {
+            // post-convergence replies are popped (and counted) but do no
+            // work — identical to the serial driver's historical behavior
             return;
         }
-        let node = &mut self.nodes[s];
-        let upload = match (self.cfg.algorithm, phase) {
-            (Algorithm::CentralVrSync, _) => node.cvr_sync_round(view),
-            (Algorithm::CentralVrAsync, _) => node.cvr_async_round(view),
-            (Algorithm::DistSvrg, Phase::GradSync) => node.dsvrg_grad_partial(view),
-            (Algorithm::DistSvrg, _) => node.dsvrg_inner_round(view),
-            (Algorithm::DistSaga, _) => {
-                if self.rounds[s] == 0 {
-                    node.dsaga_init()
-                } else {
-                    node.dsaga_round(view)
-                }
-            }
-            (Algorithm::Easgd, _) => {
-                if !view.x.is_empty() && self.rounds[s] > 0 {
-                    node.easgd_adopt(view.x.clone());
-                }
-                node.easgd_round()
-            }
-            (Algorithm::PsSvrg, Phase::SnapReady) => Upload::Ready,
-            (Algorithm::PsSvrg, Phase::GradSync) => node.ps_svrg_snapshot(view),
-            (Algorithm::PsSvrg, _) => node.ps_svrg_round(view),
-            (a, ph) => panic!("unsupported algorithm {a:?} phase {ph:?}"),
-        };
-        if matches!(upload, Upload::Ready) {
-            // freeze-barrier marker: no compute, tiny message
-            self.rounds[s] += 1;
-            let bytes = upload.bytes();
+        self.counters.add_compute_batch();
+        let outs = compute_halves(&mut self.machines, &mut items, self.params.threads);
+        for (item, out) in items.iter().zip(outs) {
+            let Some(out) = out else {
+                continue; // round budget exhausted: worker goes quiet
+            };
+            self.total_grad_evals += out.evals;
+            self.total_iterations += out.iters;
+            self.counters.add_grad_evals(out.evals);
+            self.counters.add_iterations(out.iters);
+            // Ready (freeze marker) charges zero evals => zero compute time
+            let compute = self.params.cost.block_time(out.evals, self.speeds[item.s]);
+            let bytes = out.upload.bytes();
             self.counters.add_frame_bytes(bytes);
-            let arrive = t0 + self.cfg.network.transfer_time(bytes);
-            self.push(arrive, EventKind::Arrive { s, upload, phase });
-            return;
-        }
-        let evals = node.last_round_evals;
-        let iters = node.last_round_iters;
-        self.total_grad_evals += evals;
-        self.counters.add_grad_evals(evals);
-        self.counters.add_iterations(iters);
-        self.rounds[s] += 1;
-        let compute = self.params.cost.block_time(evals, self.speeds[s]);
-        let bytes = upload.bytes();
-        self.counters.add_frame_bytes(bytes);
-        let arrive = t0 + compute + self.cfg.network.transfer_time(bytes);
-        self.push(arrive, EventKind::Arrive { s, upload, phase });
-    }
-
-    /// The phase a worker enters after the server answers `phase`.
-    fn next_phase(&self, s: usize, phase: Phase) -> Phase {
-        match self.cfg.algorithm {
-            Algorithm::DistSvrg => match phase {
-                Phase::GradSync => Phase::Inner,
-                _ => Phase::GradSync,
-            },
-            Algorithm::PsSvrg => {
-                // cycle = [SnapReady, GradSync, ps_cycle x Regular]
-                let cycle_len = self.ps_cycle + 2;
-                match self.rounds[s] % cycle_len {
-                    0 => Phase::SnapReady,
-                    1 => Phase::GradSync,
-                    _ => Phase::Regular,
-                }
-            }
-            _ => Phase::Regular,
+            let arrive = item.t0 + compute + self.cfg.network.transfer_time(bytes);
+            self.push(
+                arrive,
+                EventKind::Arrive {
+                    s: item.s,
+                    upload: out.upload,
+                },
+            );
         }
     }
 
@@ -345,29 +357,37 @@ impl<'a> Sim<'a> {
         }
     }
 
+    /// Server half of an arrival: barrier kinds collect in the server
+    /// inbox, the rest apply immediately — both strictly serialized in
+    /// virtual-time order.
+    fn arrive(&mut self, t: f64, s: usize, upload: Upload) {
+        if upload.is_barrier() {
+            self.barrier_collect(t, s, upload);
+        } else {
+            self.async_apply(t, s, upload);
+        }
+    }
+
     /// Server applies an async upload (FIFO lock model) and replies.
     fn async_apply(&mut self, t: f64, s: usize, upload: Upload) {
         let start = self.server_free_at.max(t);
         let done = start + self.cfg.network.server_service_s;
         self.server_free_at = done;
         self.counters.add_server_round();
-        let view = match self.cfg.algorithm {
-            Algorithm::CentralVrAsync | Algorithm::DistSaga => {
+        let view = match &upload {
+            Upload::Delta { .. } => {
                 self.server.apply_delta(&upload);
                 self.server.view()
             }
-            Algorithm::Easgd => {
-                let x_new = self.server.apply_elastic(&upload);
-                GlobalView {
-                    x: x_new,
-                    gbar: Vec::new(),
-                }
-            }
-            Algorithm::PsSvrg => {
+            Upload::ElasticPush { .. } => GlobalView {
+                x: self.server.apply_elastic(&upload),
+                gbar: Vec::new(),
+            },
+            Upload::GradStep { .. } => {
                 self.server.apply_grad_step(&upload);
                 self.server.view()
             }
-            a => panic!("async apply for sync algorithm {a:?}"),
+            other => panic!("barrier upload {} routed to async apply", other.kind()),
         };
         self.applies_since_record += 1;
         if self.applies_since_record >= self.cfg.record_every {
@@ -376,39 +396,27 @@ impl<'a> Sim<'a> {
         }
         let bytes = view.bytes();
         self.counters.add_frame_bytes(bytes);
-        let phase = self.next_phase(s, Phase::Regular);
         let reply_at = done + self.cfg.network.transfer_time(bytes);
-        self.push(reply_at, EventKind::Reply { s, view, phase });
+        self.push(reply_at, EventKind::Reply { s, view });
     }
 
-    /// Barrier collection: stash the upload; when all p arrived, apply and
-    /// broadcast.
-    fn barrier_collect(&mut self, t: f64, s: usize, upload: Upload, phase: Phase) {
-        assert!(self.pending[s].is_none(), "double upload from worker {s}");
-        self.pending[s] = Some(upload);
-        self.pending_count += 1;
+    /// Barrier collection: deposit into the server inbox; when all p have
+    /// arrived, apply the round (kind-dispatched) and broadcast.
+    fn barrier_collect(&mut self, t: f64, s: usize, upload: Upload) {
         self.barrier_last_arrival = self.barrier_last_arrival.max(t);
-        if self.pending_count < self.cfg.p {
+        let Some(round) = self.server.deposit(s, upload) else {
             return;
-        }
-        let uploads: Vec<Upload> = self.pending.iter_mut().map(|u| u.take().unwrap()).collect();
-        self.pending_count = 0;
+        };
         // serialized processing of p messages under the lock
-        let done = self.barrier_last_arrival + self.cfg.p as f64 * self.cfg.network.server_service_s;
+        let done =
+            self.barrier_last_arrival + self.cfg.p as f64 * self.cfg.network.server_service_s;
         self.barrier_last_arrival = 0.0;
         self.counters.add_server_round();
-        match (self.cfg.algorithm, phase) {
-            (Algorithm::CentralVrSync, _) => {
-                self.server.apply_sync_average(&uploads, &self.weights)
-            }
-            (Algorithm::DistSvrg, Phase::GradSync) | (Algorithm::PsSvrg, Phase::GradSync) => {
-                self.server.apply_grad_partials(&uploads)
-            }
-            (Algorithm::PsSvrg, Phase::SnapReady) => {} // freeze only
-            (Algorithm::DistSvrg, _) => self.server.apply_x_average(&uploads, &self.weights),
-            (a, ph) => panic!("barrier for {a:?} {ph:?}"),
-        }
-        if phase != Phase::SnapReady {
+        let freeze = matches!(round[0], Upload::Ready);
+        self.server
+            .apply_barrier_round(&round, &self.weights)
+            .expect("lockstep barrier rounds are kind-uniform");
+        if !freeze {
             self.record(done);
         }
         // broadcast
@@ -416,38 +424,60 @@ impl<'a> Sim<'a> {
             let view = self.server.view();
             let bytes = view.bytes();
             self.counters.add_frame_bytes(bytes);
-            let phase_next = self.next_phase(s, phase);
             let reply_at = done + self.cfg.network.transfer_time(bytes);
-            self.push(reply_at, EventKind::Reply { s, view, phase: phase_next });
+            self.push(reply_at, EventKind::Reply { s, view });
         }
     }
 
     fn run(mut self) -> SimReport {
         // initial record at t=0 (x = 0)
         self.record(0.0);
-        // kick off every worker at t=0
-        let phase0 = self.initial_phase();
-        for s in 0..self.cfg.p {
-            let view = self.server.view();
-            self.run_worker_round(s, 0.0, &view, phase0);
-        }
-        while let Some(ev) = self.heap.pop() {
+        // kick off every worker at t=0: the first compute batch
+        let kick: Vec<ComputeItem> = (0..self.cfg.p)
+            .map(|s| ComputeItem {
+                s,
+                t0: 0.0,
+                view: None,
+            })
+            .collect();
+        self.run_compute_batch(kick);
+        'events: loop {
+            // drain every consecutive Reply at the head of the queue into
+            // one compute batch (their compute halves are independent)
+            let mut batch: Vec<ComputeItem> = Vec::new();
+            while matches!(
+                self.heap.peek().map(|e| &e.kind),
+                Some(EventKind::Reply { .. })
+            ) {
+                let ev = self.heap.pop().expect("peeked above");
+                self.events += 1;
+                if self.events > self.params.max_events {
+                    self.run_compute_batch(batch);
+                    break 'events;
+                }
+                self.now = ev.t;
+                let EventKind::Reply { s, view } = ev.kind else {
+                    unreachable!("peek matched Reply");
+                };
+                batch.push(ComputeItem {
+                    s,
+                    t0: ev.t,
+                    view: Some(view),
+                });
+            }
+            self.run_compute_batch(batch);
+            // then one serialized server event
+            let Some(ev) = self.heap.pop() else {
+                break;
+            };
             self.events += 1;
             if self.events > self.params.max_events {
                 break;
             }
             self.now = ev.t;
             match ev.kind {
-                EventKind::Arrive { s, upload, phase } => {
-                    if self.is_barrier(phase) {
-                        self.barrier_collect(ev.t, s, upload, phase);
-                    } else {
-                        self.async_apply(ev.t, s, upload);
-                    }
-                }
-                EventKind::Reply { s, view, phase } => {
-                    self.run_worker_round(s, ev.t, &view, phase);
-                }
+                EventKind::Arrive { s, upload } => self.arrive(ev.t, s, upload),
+                EventKind::Reply { .. } => unreachable!("replies drained above"),
             }
         }
         // final record at the last event time if not already converged
@@ -458,7 +488,7 @@ impl<'a> Sim<'a> {
             .set_stored_scalars(self.stored_scalars_estimate());
         let trace = RunTrace {
             grad_evals: self.total_grad_evals,
-            iterations: self.counters.snapshot().iterations,
+            iterations: self.total_iterations,
             elapsed_s: self.now,
             converged: self.converged,
             x: self.server.x.clone(),
@@ -467,12 +497,13 @@ impl<'a> Sim<'a> {
         SimReport {
             trace,
             counters: self.counters.snapshot(),
-            rounds_per_worker: self.rounds,
+            rounds_per_worker: self.machines.iter().map(|m| m.rounds() as u32).collect(),
             events: self.events,
         }
     }
 
     fn stored_scalars_estimate(&self) -> u64 {
+        use crate::config::schema::Algorithm;
         match self.cfg.algorithm {
             Algorithm::CentralVrSync | Algorithm::CentralVrAsync | Algorithm::DistSaga => {
                 self.data.n_total() as u64
@@ -487,6 +518,7 @@ impl<'a> Sim<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::schema::Algorithm;
     use crate::data::synth;
 
     fn toy_sharded(p: usize, n_per: usize, d: usize) -> ShardedDataset {
@@ -610,6 +642,30 @@ mod tests {
         assert_eq!(a.trace.x, b.trace.x);
         assert_eq!(a.events, b.events);
         assert!((a.trace.elapsed_s - b.trace.elapsed_s).abs() < 1e-12);
+    }
+
+    /// The headline determinism guarantee of the parallel driver: any
+    /// thread count produces bit-identical results (the full six-algorithm
+    /// matrix lives in `rust/tests/sim_parallel_parity.rs`).
+    #[test]
+    fn parallel_compute_is_bit_identical_to_serial() {
+        let data = toy_sharded(4, 64, 5);
+        let mut cfg = base_cfg(Algorithm::CentralVrSync, 4);
+        cfg.tol = 0.0;
+        cfg.max_rounds = 6;
+        let serial = run(Problem::Ridge, &data, cfg, SimParams::analytic(5));
+        let parallel = run(
+            Problem::Ridge,
+            &data,
+            cfg,
+            SimParams::analytic(5).with_threads(4),
+        );
+        assert_eq!(serial.trace.x, parallel.trace.x);
+        assert_eq!(serial.events, parallel.events);
+        assert_eq!(serial.counters, parallel.counters);
+        assert_eq!(serial.trace.elapsed_s.to_bits(), parallel.trace.elapsed_s.to_bits());
+        // barrier rounds batch all p compute halves together
+        assert!(serial.counters.compute_batches >= cfg.max_rounds as u64);
     }
 
     #[test]

@@ -6,15 +6,19 @@
 //! On this box (1 core) thread runs validate the *concurrent protocol* —
 //! interleavings, barrier correctness, delta-application algebra under
 //! contention — while the scaling figures come from the simulator. The
-//! algorithm math is identical: both engines drive the same
-//! [`LocalNode`] / [`ServerState`] methods.
+//! round sequencing is not duplicated here: every worker thread drives
+//! the shared [`RoundMachine`] compute/absorb state machine from
+//! [`crate::dist::local`], exactly like the simulator and the TCP
+//! transport, so all three drivers do identical math on the same seed.
+//! This loop only decides *where* each upload goes — barrier kinds into
+//! the collective exchange, the rest through the server lock.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 
 use crate::config::schema::Algorithm;
 use crate::data::shard::ShardedDataset;
-use crate::dist::local::LocalNode;
+use crate::dist::local::{LocalNode, RoundMachine, RoundOutput};
 use crate::dist::messages::{GlobalView, Upload};
 use crate::dist::server::ServerState;
 use crate::dist::DistConfig;
@@ -23,15 +27,6 @@ use crate::metrics::recorder::{RunTrace, Sample, Series};
 use crate::model::glm::Problem;
 use crate::model::gradients;
 use crate::util::timer::Stopwatch;
-
-/// What the barrier leader does with the collected uploads.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum BarrierApply {
-    SyncAverage,
-    GradPartials,
-    XAverage,
-    Freeze,
-}
 
 struct BarrierState {
     bufs: Vec<Option<Upload>>,
@@ -77,9 +72,10 @@ impl<'a> Shared<'a> {
         }
     }
 
-    /// Deposit an upload; the last arriver applies and broadcasts.
-    /// Returns None if the run was stopped while waiting.
-    fn barrier_exchange(&self, s: usize, upload: Upload, apply: BarrierApply) -> Option<GlobalView> {
+    /// Deposit an upload; the last arriver applies the kind-dispatched
+    /// barrier round ([`ServerState::apply_barrier_round`]) and
+    /// broadcasts. Returns None if the run was stopped while waiting.
+    fn barrier_exchange(&self, s: usize, upload: Upload) -> Option<GlobalView> {
         let mut st = self.barrier.lock().unwrap();
         assert!(st.bufs[s].is_none(), "double deposit from {s}");
         st.bufs[s] = Some(upload);
@@ -88,19 +84,15 @@ impl<'a> Shared<'a> {
         if st.count == self.cfg.p {
             let uploads: Vec<Upload> = st.bufs.iter_mut().map(|b| b.take().unwrap()).collect();
             st.count = 0;
+            let freeze = matches!(uploads[0], Upload::Ready);
             let view = {
                 let mut server = self.server.lock().unwrap();
-                match apply {
-                    BarrierApply::SyncAverage => {
-                        server.apply_sync_average(&uploads, &self.weights)
-                    }
-                    BarrierApply::GradPartials => server.apply_grad_partials(&uploads),
-                    BarrierApply::XAverage => server.apply_x_average(&uploads, &self.weights),
-                    BarrierApply::Freeze => {}
-                }
+                server
+                    .apply_barrier_round(&uploads, &self.weights)
+                    .expect("lockstep barrier rounds are kind-uniform");
                 server.view()
             };
-            if apply != BarrierApply::Freeze {
+            if !freeze {
                 self.record(&view.x);
             }
             st.view = view.clone();
@@ -123,26 +115,24 @@ impl<'a> Shared<'a> {
         Some(st.view.clone())
     }
 
-    /// Async server interaction under the lock.
+    /// Async server interaction under the lock (kind-dispatched, the same
+    /// routing as the simulator and the TCP server).
     fn async_apply(&self, upload: Upload) -> GlobalView {
         let mut server = self.server.lock().unwrap();
-        let view = match self.cfg.algorithm {
-            Algorithm::CentralVrAsync | Algorithm::DistSaga => {
+        let view = match &upload {
+            Upload::Delta { .. } => {
                 server.apply_delta(&upload);
                 server.view()
             }
-            Algorithm::Easgd => {
-                let x_new = server.apply_elastic(&upload);
-                GlobalView {
-                    x: x_new,
-                    gbar: Vec::new(),
-                }
-            }
-            Algorithm::PsSvrg => {
+            Upload::ElasticPush { .. } => GlobalView {
+                x: server.apply_elastic(&upload),
+                gbar: Vec::new(),
+            },
+            Upload::GradStep { .. } => {
                 server.apply_grad_step(&upload);
                 server.view()
             }
-            a => panic!("async apply for {a:?}"),
+            other => panic!("barrier upload {} routed to async apply", other.kind()),
         };
         let n = self.applies.fetch_add(1, Ordering::Relaxed) + 1;
         if n % (self.cfg.record_every as u64).max(1) == 0 {
@@ -152,11 +142,9 @@ impl<'a> Shared<'a> {
         view
     }
 
-    fn account(&self, node: &LocalNode) {
-        self.grad_evals
-            .fetch_add(node.last_round_evals, Ordering::Relaxed);
-        self.iterations
-            .fetch_add(node.last_round_iters, Ordering::Relaxed);
+    fn account(&self, out: &RoundOutput) {
+        self.grad_evals.fetch_add(out.evals, Ordering::Relaxed);
+        self.iterations.fetch_add(out.iters, Ordering::Relaxed);
     }
 
     fn stopped(&self) -> bool {
@@ -202,8 +190,9 @@ pub fn run(problem: Problem, data: &ShardedDataset, cfg: DistConfig) -> RunTrace
             let shard = data.shard(s);
             let n_global = data.n_total();
             scope.spawn(move || {
-                let mut node = LocalNode::new(s, shard, problem, cfg, n_global);
-                worker_loop(shared, &mut node);
+                let node = LocalNode::new(s, shard, problem, cfg, n_global);
+                let mut machine = RoundMachine::new(node);
+                worker_loop(shared, &mut machine);
             });
         }
     });
@@ -221,94 +210,26 @@ pub fn run(problem: Problem, data: &ShardedDataset, cfg: DistConfig) -> RunTrace
     }
 }
 
-fn worker_loop(shared: &Shared, node: &mut LocalNode) {
-    let cfg = shared.cfg;
-    let d = node.shard().d();
-    let mut view = GlobalView {
-        x: vec![0.0; d],
-        gbar: vec![0.0; d],
-    };
-    let n_s = node.shard().n();
-    let ps_cycle = (2 * n_s).div_ceil(cfg.ps_batch.max(1));
-    let mut round = 0usize;
-    while round < cfg.max_rounds && !shared.stopped() {
-        match cfg.algorithm {
-            Algorithm::CentralVrSync => {
-                let up = node.cvr_sync_round(&view);
-                shared.account(node);
-                match shared.barrier_exchange(node.s, up, BarrierApply::SyncAverage) {
-                    Some(v) => view = v,
-                    None => return,
-                }
+/// One worker thread's life: the canonical compute/absorb two-beat —
+/// compute the round (pure, no server), route the upload (barrier kinds
+/// to the collective exchange, the rest through the server lock), absorb
+/// the reply. All sequencing lives in [`RoundMachine`].
+fn worker_loop(shared: &Shared, machine: &mut RoundMachine) {
+    while !shared.stopped() {
+        let Some(out) = machine.compute() else {
+            break; // round budget exhausted
+        };
+        shared.account(&out);
+        let s = machine.node().s;
+        let view = if out.upload.is_barrier() {
+            match shared.barrier_exchange(s, out.upload) {
+                Some(v) => v,
+                None => return, // stopped while parked at the barrier
             }
-            Algorithm::CentralVrAsync => {
-                let up = node.cvr_async_round(&view);
-                shared.account(node);
-                view = shared.async_apply(up);
-            }
-            Algorithm::DistSvrg => {
-                let up = node.dsvrg_grad_partial(&view);
-                shared.account(node);
-                let v = match shared.barrier_exchange(node.s, up, BarrierApply::GradPartials) {
-                    Some(v) => v,
-                    None => return,
-                };
-                // each phase counts as a round (same semantics as the
-                // simulator, so cross-engine runs do identical work)
-                round += 1;
-                if round >= cfg.max_rounds {
-                    break;
-                }
-                let up = node.dsvrg_inner_round(&v);
-                shared.account(node);
-                match shared.barrier_exchange(node.s, up, BarrierApply::XAverage) {
-                    Some(v) => view = v,
-                    None => return,
-                }
-            }
-            Algorithm::DistSaga => {
-                let up = if round == 0 {
-                    node.dsaga_init()
-                } else {
-                    node.dsaga_round(&view)
-                };
-                shared.account(node);
-                view = shared.async_apply(up);
-            }
-            Algorithm::Easgd => {
-                let up = node.easgd_round();
-                shared.account(node);
-                let v = shared.async_apply(up);
-                node.easgd_adopt(v.x);
-            }
-            Algorithm::PsSvrg => {
-                // snapshot cycle: freeze -> grad partials -> ps_cycle rounds
-                let v = match shared.barrier_exchange(node.s, Upload::Ready, BarrierApply::Freeze)
-                {
-                    Some(v) => v,
-                    None => return,
-                };
-                let up = node.ps_svrg_snapshot(&v);
-                shared.account(node);
-                let mut v = match shared.barrier_exchange(node.s, up, BarrierApply::GradPartials)
-                {
-                    Some(v) => v,
-                    None => return,
-                };
-                for _ in 0..ps_cycle {
-                    if shared.stopped() || round >= cfg.max_rounds {
-                        break;
-                    }
-                    let up = node.ps_svrg_round(&v);
-                    shared.account(node);
-                    v = shared.async_apply(up);
-                    round += 1;
-                }
-                view = v;
-            }
-            a => panic!("not a distributed algorithm: {a:?}"),
-        }
-        round += 1;
+        } else {
+            shared.async_apply(out.upload)
+        };
+        machine.absorb(view);
         // On few-core hosts a worker can otherwise run its entire budget
         // before peers get a timeslice, which starves the async averaging
         // of any mixing; yielding after each round restores the
@@ -320,7 +241,7 @@ fn worker_loop(shared: &Shared, node: &mut LocalNode) {
     // algorithms have no one waiting on the departed worker: the others
     // keep refining the central solution to their own budgets.
     if matches!(
-        cfg.algorithm,
+        shared.cfg.algorithm,
         Algorithm::CentralVrSync | Algorithm::DistSvrg | Algorithm::PsSvrg
     ) {
         shared.stop.store(true, Ordering::SeqCst);

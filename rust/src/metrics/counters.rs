@@ -23,6 +23,11 @@ pub struct Counters {
     pub frames: AtomicU64,
     /// Round-trips with the central server.
     pub server_rounds: AtomicU64,
+    /// Compute-half batches the simulator dispatched (each batch fans out
+    /// across the `--sim-threads` pool). Batch structure is determined by
+    /// event order alone, so the count is thread-count-invariant — the
+    /// parallel-vs-serial parity suite asserts it.
+    pub compute_batches: AtomicU64,
 }
 
 impl Counters {
@@ -58,6 +63,11 @@ impl Counters {
         self.server_rounds.fetch_add(1, Ordering::Relaxed);
     }
 
+    #[inline]
+    pub fn add_compute_batch(&self) {
+        self.compute_batches.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> CounterSnapshot {
         CounterSnapshot {
             grad_evals: self.grad_evals.load(Ordering::Relaxed),
@@ -66,6 +76,7 @@ impl Counters {
             bytes_communicated: self.bytes_communicated.load(Ordering::Relaxed),
             frames: self.frames.load(Ordering::Relaxed),
             server_rounds: self.server_rounds.load(Ordering::Relaxed),
+            compute_batches: self.compute_batches.load(Ordering::Relaxed),
         }
     }
 }
@@ -79,6 +90,7 @@ pub struct CounterSnapshot {
     pub bytes_communicated: u64,
     pub frames: u64,
     pub server_rounds: u64,
+    pub compute_batches: u64,
 }
 
 impl CounterSnapshot {

@@ -1,0 +1,160 @@
+//! Parallel-simulator determinism suite: the compute/apply round split
+//! lets `exec::simulator` fan worker compute halves out across a thread
+//! pool, and the contract is that ANY thread count produces bit-identical
+//! results — same `RunTrace` samples (every f64 compared by bit pattern),
+//! same `Counters`, same event count, same per-worker rounds — because
+//! batch membership and result processing follow the exact event order of
+//! the serial driver. This suite pins that contract for all six
+//! distributed algorithms on both Dense and CSR shards; the TCP loopback
+//! parity tests rest on it (homogeneous sim == worker-order TCP).
+
+use centralvr::config::schema::Algorithm;
+use centralvr::data::shard::ShardedDataset;
+use centralvr::data::synth;
+use centralvr::dist::DistConfig;
+use centralvr::exec::simulator::{self, SimParams, SimReport};
+use centralvr::model::glm::Problem;
+
+const P: usize = 4;
+const D: usize = 8;
+
+fn dense_shards() -> ShardedDataset {
+    ShardedDataset::from_shards(synth::toy_least_squares_per_worker(P, 48, D, 11))
+}
+
+fn csr_shards() -> ShardedDataset {
+    // 15% density stays below the dense-load threshold => genuinely CSR
+    let ds = synth::sparse_classification(48 * P, D, 0.15, 11);
+    assert!(ds.is_sparse(), "suite must exercise the CSR path");
+    ShardedDataset::split(&ds, P, 11)
+}
+
+fn cfg(algorithm: Algorithm) -> DistConfig {
+    DistConfig {
+        algorithm,
+        p: P,
+        eta: 0.01,
+        tau: 0,
+        max_rounds: 8,
+        tol: 0.0, // fixed budget: every driver does the full schedule
+        seed: 29,
+        record_every: 2,
+        ps_batch: 8,
+        ..Default::default()
+    }
+}
+
+/// Bitwise comparison of two reports: no tolerance anywhere.
+fn assert_identical(a: &SimReport, b: &SimReport, what: &str) {
+    assert_eq!(a.trace.x, b.trace.x, "{what}: final iterate");
+    assert_eq!(a.trace.grad_evals, b.trace.grad_evals, "{what}: grad evals");
+    assert_eq!(a.trace.iterations, b.trace.iterations, "{what}: iterations");
+    assert_eq!(a.trace.converged, b.trace.converged, "{what}: converged");
+    assert_eq!(
+        a.trace.elapsed_s.to_bits(),
+        b.trace.elapsed_s.to_bits(),
+        "{what}: virtual end time"
+    );
+    assert_eq!(a.events, b.events, "{what}: event count");
+    assert_eq!(a.rounds_per_worker, b.rounds_per_worker, "{what}: rounds");
+    assert_eq!(a.counters, b.counters, "{what}: counters (bytes/frames/batches)");
+    let (pa, pb) = (&a.trace.series.points, &b.trace.series.points);
+    assert_eq!(pa.len(), pb.len(), "{what}: sample count");
+    for (i, (sa, sb)) in pa.iter().zip(pb).enumerate() {
+        assert_eq!(sa.time_s.to_bits(), sb.time_s.to_bits(), "{what}: sample {i} time");
+        assert_eq!(sa.grad_evals, sb.grad_evals, "{what}: sample {i} grad evals");
+        assert_eq!(
+            sa.rel_grad_norm.to_bits(),
+            sb.rel_grad_norm.to_bits(),
+            "{what}: sample {i} rel grad norm"
+        );
+        assert_eq!(
+            sa.objective.to_bits(),
+            sb.objective.to_bits(),
+            "{what}: sample {i} objective"
+        );
+    }
+}
+
+fn check(algorithm: Algorithm, problem: Problem, data: &ShardedDataset, what: &str) {
+    let c = cfg(algorithm);
+    let serial = simulator::run(problem, data, c, SimParams::analytic(D));
+    // 3 does not divide p=4 evenly, so chunked fan-out is exercised too
+    for threads in [3usize, 8] {
+        let parallel = simulator::run(
+            problem,
+            data,
+            c,
+            SimParams::analytic(D).with_threads(threads),
+        );
+        assert_identical(&serial, &parallel, &format!("{what} threads={threads}"));
+    }
+    // sanity: the run did real work
+    assert!(serial.trace.grad_evals > 0, "{what}: no gradients evaluated");
+    assert!(serial.counters.compute_batches > 0, "{what}: no batches");
+}
+
+const ALGOS: [Algorithm; 6] = [
+    Algorithm::CentralVrSync,
+    Algorithm::CentralVrAsync,
+    Algorithm::DistSvrg,
+    Algorithm::DistSaga,
+    Algorithm::Easgd,
+    Algorithm::PsSvrg,
+];
+
+#[test]
+fn all_algorithms_bit_identical_on_dense_shards() {
+    let data = dense_shards();
+    for algo in ALGOS {
+        check(algo, Problem::Ridge, &data, algo.name());
+    }
+}
+
+#[test]
+fn all_algorithms_bit_identical_on_csr_shards() {
+    let data = csr_shards();
+    for algo in ALGOS {
+        check(algo, Problem::Logistic, &data, &format!("csr/{}", algo.name()));
+    }
+}
+
+/// Heterogeneous worker speeds interleave async replies with server
+/// arrivals, producing small ragged compute batches — the hardest case
+/// for batch-boundary determinism.
+#[test]
+fn async_heterogeneous_speeds_stay_bit_identical() {
+    let data = dense_shards();
+    for algo in [Algorithm::CentralVrAsync, Algorithm::DistSaga] {
+        let mut c = cfg(algo);
+        c.network.hetero_spread = 3.0;
+        c.max_rounds = 12;
+        let serial = simulator::run(Problem::Ridge, &data, c, SimParams::analytic(D));
+        let parallel = simulator::run(
+            Problem::Ridge,
+            &data,
+            c,
+            SimParams::analytic(D).with_threads(4),
+        );
+        assert_identical(&serial, &parallel, &format!("hetero/{}", algo.name()));
+    }
+}
+
+/// Convergence-based early stop clears the event queue mid-run; the
+/// parallel driver must cut off at exactly the same event.
+#[test]
+fn early_stop_cutoff_is_bit_identical() {
+    let data = dense_shards();
+    let mut c = cfg(Algorithm::CentralVrSync);
+    c.tol = 1e-4;
+    c.max_rounds = 60;
+    let serial = simulator::run(Problem::Ridge, &data, c, SimParams::analytic(D));
+    assert!(serial.trace.converged, "config must actually converge");
+    let parallel = simulator::run(
+        Problem::Ridge,
+        &data,
+        c,
+        SimParams::analytic(D).with_threads(4),
+    );
+    assert_identical(&serial, &parallel, "early-stop");
+}

@@ -158,17 +158,24 @@ fn reference(data: &ShardedDataset, cfg: DistConfig) -> ServerState {
             }
         }
         Algorithm::PsSvrg => {
+            // canonical RoundMachine budget semantics: every compute half
+            // — including the zero-cost Ready freeze — spends one round
             let ps_cycle = (2 * N_PER).div_ceil(cfg.ps_batch.max(1));
             let mut round = 0;
-            while round < cfg.max_rounds {
-                // freeze barrier: nothing applied, everyone sees the view
+            'run: while round < cfg.max_rounds {
+                // freeze barrier: Ready round, nothing applied
+                round += 1;
                 let v = server.view();
+                if round >= cfg.max_rounds {
+                    break;
+                }
                 let ups = collect_uploads(&mut nodes, |n| n.ps_svrg_snapshot(&v));
                 server.apply_barrier_round(&ups, &weights).unwrap();
+                round += 1;
                 let mut vs = vec![server.view(); P];
                 for _ in 0..ps_cycle {
                     if round >= cfg.max_rounds {
-                        break;
+                        break 'run;
                     }
                     for (s, node) in nodes.iter_mut().enumerate() {
                         let up = node.ps_svrg_round(&vs[s]);
@@ -177,7 +184,6 @@ fn reference(data: &ShardedDataset, cfg: DistConfig) -> ServerState {
                     }
                     round += 1;
                 }
-                round += 1;
             }
         }
         a => panic!("no reference for {a:?}"),
@@ -286,6 +292,62 @@ fn serve_rejects_mismatched_worker_count() {
     let _client = transport::TcpClient::connect(&addr, hello).unwrap();
     let err = server.join().unwrap().unwrap_err();
     assert!(err.to_string().contains("sharded for p=4"), "{err}");
+}
+
+/// PS-SVRG on *uneven* shards desyncs the barrier schedule: each worker's
+/// `ps_cycle` is ~2n_s/b, so one worker reaches its next freeze barrier
+/// while the other exhausts its budget mid-cycle and exits. PR 4 died
+/// here with a "barrier stalled" error; the server now pushes a `Stop`
+/// frame to every parked worker and the run winds down cleanly, books
+/// closed.
+#[test]
+fn ps_svrg_uneven_shards_shuts_down_via_server_stop() {
+    let p = 2;
+    let mut shards = synth::toy_least_squares_per_worker(p, 56, D, 9);
+    let short = shards[0].slice_rows(0, 40); // ps_cycle 10 vs 14
+    shards[0] = short;
+    let data = ShardedDataset::from_shards(shards);
+    let mut c = cfg(Algorithm::PsSvrg);
+    c.p = p;
+    c.ps_batch = 8;
+    // worker 0: Ready(1) Grad(2) 10 steps(12) Ready(13) -> parked;
+    // worker 1: Ready(1) Grad(2) 11 of 14 steps(13) -> budget spent, exits
+    c.max_rounds = 13;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let scfg = ServeConfig { p, easgd_beta: c.easgd_beta };
+    let (rep, wreps) = thread::scope(|scope| {
+        let server = scope.spawn(move || transport::serve(listener, scfg).unwrap());
+        let workers: Vec<_> = (0..p)
+            .map(|s| {
+                let addr = addr.clone();
+                let data = &data;
+                scope.spawn(move || {
+                    transport::run_worker(
+                        &addr,
+                        s,
+                        Problem::Ridge,
+                        data.shard(s),
+                        data.n_total(),
+                        c,
+                    )
+                    .unwrap()
+                })
+            })
+            .collect();
+        let wreps: Vec<WorkerReport> = workers.into_iter().map(|h| h.join().unwrap()).collect();
+        (server.join().unwrap(), wreps)
+    });
+    assert_eq!(rep.stops, 1, "exactly the parked worker gets a Stop");
+    assert!(wreps[0].stopped_by_server, "worker 0 was parked at the freeze");
+    assert!(!wreps[1].stopped_by_server, "worker 1 ran out its own budget");
+    assert_eq!(wreps[0].rounds, c.max_rounds);
+    assert_eq!(wreps[1].rounds, c.max_rounds);
+    // the wind-down keeps every ledger closed, Stop frame included
+    assert_eq!(rep.bytes_on_wire, rep.bytes_accounted);
+    let client_total: u64 = wreps.iter().map(|w| w.bytes_sent + w.bytes_received).sum();
+    assert_eq!(client_total, rep.bytes_on_wire + rep.bytes_handshake);
+    assert!(rep.x.iter().all(|v| v.is_finite()));
 }
 
 #[test]
