@@ -89,7 +89,7 @@ fn driver() {
     // real thing: loopback server + p spawned worker processes
     let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
     let addr = listener.local_addr().expect("local addr").to_string();
-    let scfg = ServeConfig { p: P, easgd_beta: cfg.easgd_beta };
+    let scfg = ServeConfig { p: P, easgd_beta: cfg.easgd_beta, read_timeout: None };
     let server = std::thread::spawn(move || transport::serve(listener, scfg));
     let exe = std::env::current_exe().expect("current_exe");
     let children: Vec<_> = (0..P)
@@ -136,5 +136,7 @@ fn driver() {
         rep.bytes_on_wire, sim.counters.bytes_communicated,
         "simulator charged different bytes than the wire carried"
     );
+    assert_eq!(rep.goodbyes, P as u64, "every worker process should say Goodbye");
+    assert_eq!(rep.crashes, 0, "no worker process should look crashed");
     println!("OK: multi-process TCP run matches the simulator and the byte books close.");
 }

@@ -2,8 +2,9 @@
 //! per-gradient native cost across dimensions, fused vr_step vs a naive
 //! 3-pass update, whole native epochs, HLO-engine epochs (dispatch
 //! overhead of the AOT path), simulator event throughput, server apply
-//! latency, and parallel-simulator wall-clock scaling (writes
-//! `results/BENCH_parallel_sim.json`).
+//! latency, parallel-simulator wall-clock scaling (writes
+//! `results/BENCH_parallel_sim.json`), and the hostile-network scenario
+//! sweep (writes `results/BENCH_scenario_sweep.json`).
 //!
 //! Sections can be selected by substring:
 //! `cargo bench --bench hot_paths -- parallel_sim` runs only the
@@ -343,5 +344,33 @@ fn main() {
             println!("hot_paths/parallel_sim: wrote {path}");
         }
         print!("{json}");
+    }
+
+    // --- hostile-network scenario sweep ---
+    // CVR-Async and PS-SVRG over a latency-profile x staleness-bound
+    // grid; each cell self-checks serial vs 3-thread bit-identity and the
+    // convergence-vs-staleness curves land in
+    // results/BENCH_scenario_sweep.json.
+    if enabled("scenario_sweep") {
+        use centralvr::harness::{scenario, Scale};
+        let out_dir = concat!(env!("CARGO_MANIFEST_DIR"), "/../results");
+        let t0 = std::time::Instant::now();
+        let cells = scenario::sweep(Scale::Quick).expect("scenario sweep");
+        b.metric("scenario_sweep_cells", cells.len() as f64, "runs");
+        b.metric("scenario_sweep_wall_s", t0.elapsed().as_secs_f64(), "s");
+        let parked: u64 = cells
+            .iter()
+            .map(|c| c.rep.scenario.map(|s| s.stale_parked).unwrap_or(0))
+            .sum();
+        b.metric("scenario_sweep_stale_parked_total", parked as f64, "uploads");
+        let json = scenario::to_json(Scale::Quick, &cells);
+        let path = format!("{out_dir}/BENCH_scenario_sweep.json");
+        if let Err(e) = std::fs::create_dir_all(out_dir)
+            .and_then(|()| std::fs::write(&path, &json))
+        {
+            println!("hot_paths/scenario_sweep: could not write {path}: {e}");
+        } else {
+            println!("hot_paths/scenario_sweep: wrote {path}");
+        }
     }
 }

@@ -10,7 +10,8 @@ usage: centralvr <command> [options]
 commands:
   train          run one experiment (presets, config files, or flags)
   figure <id>    regenerate a paper table/figure: fig1 | fig2conv |
-                 fig2scale | fig3conv | fig3scale | table1 | ablations | all
+                 fig2scale | fig3conv | fig3scale | table1 | ablations |
+                 scenario (hostile-network sweep) | all
   dist <role>    real TCP runs: serve (central server) | worker (one
                  shard in its own process)
   artifacts <op> list | check the AOT-compiled HLO artifacts
@@ -29,6 +30,10 @@ common options:
   --engine E           native|hlo          --threads     real threads
   --sim-threads N      simulator compute fan-out width (default 1 =
                        serial driver; any N gives bit-identical results)
+  --scenario FILE      hostile-network scenario TOML (stragglers, churn,
+                       staleness); simulator engine only
+  --read-timeout SECS  dist serve: declare a silent worker crashed after
+                       this many seconds (default: wait forever)
   --scale S            quick|full (figure harnesses)
   --d N                feature dim (calibrate / --dataset)
   --artifacts DIR      artifact directory (default: artifacts/)

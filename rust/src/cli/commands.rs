@@ -7,13 +7,14 @@ use crate::cli::args::{Args, USAGE};
 use crate::config::schema::{Algorithm, DatasetSpec, ExperimentConfig};
 use crate::config::presets;
 use crate::data::shard::ShardedDataset;
+use crate::dist::scenario::ScenarioSpec;
 use crate::dist::transport::{self, ServeConfig};
 use crate::dist::DistConfig;
 use crate::exec::cost_model::CostModel;
 use crate::exec::engine::EngineKind;
 use crate::exec::simulator::{self, SimParams};
 use crate::exec::threads;
-use crate::harness::{ablations, fig1, fig2, fig3, table1, Scale};
+use crate::harness::{ablations, fig1, fig2, fig3, scenario, table1, Scale};
 use crate::hlo_exec::HloEngine;
 use crate::model::glm::Problem;
 
@@ -160,6 +161,21 @@ fn train(args: &Args) -> Result<()> {
     } else {
         let sharded = ShardedDataset::split(&data, cfg.p, cfg.seed ^ SHARD_SALT);
         let dcfg = dist_config(&cfg);
+        // hostile-network scenarios replay inside the simulator's virtual
+        // clock; the wall-clock threads engine cannot honor them
+        let scenario = match args.get("scenario") {
+            None => None,
+            Some(path) => {
+                anyhow::ensure!(
+                    !args.has("threads"),
+                    "--scenario needs the simulator engine (virtual time); \
+                     drop --threads to use it"
+                );
+                let spec = ScenarioSpec::load(path)?;
+                spec.validate(dcfg.algorithm, dcfg.p)?;
+                Some(spec)
+            }
+        };
         if args.has("threads") {
             let trace = threads::run(cfg.problem, &sharded, dcfg);
             println!(
@@ -173,11 +189,12 @@ fn train(args: &Args) -> Result<()> {
             // compute-half fan-out; results are bit-identical for any
             // width, so the knob only trades wall-clock time
             let sim_threads = args.get_usize("sim-threads")?.unwrap_or(1).max(1);
-            let rep = simulator::run(
+            let rep = simulator::run_with_scenario(
                 cfg.problem,
                 &sharded,
                 dcfg,
                 SimParams::calibrated(data.d()).with_threads(sim_threads),
+                scenario.as_ref(),
             );
             println!(
                 "sim: converged={} rel={:.3e} grad_evals={} t_virtual={:.4}s events={} \
@@ -189,6 +206,18 @@ fn train(args: &Args) -> Result<()> {
                 rep.events,
                 rep.counters.bytes_communicated
             );
+            if let Some(stats) = rep.scenario {
+                println!(
+                    "scenario {}: deaths={} rejoins={} delayed={} stale_parked={} \
+                     max_applied_age={}",
+                    scenario.as_ref().map(|s| s.name.as_str()).unwrap_or("?"),
+                    stats.deaths,
+                    stats.rejoins,
+                    stats.delayed,
+                    stats.stale_parked,
+                    stats.max_applied_age
+                );
+            }
         }
     }
     Ok(())
@@ -210,27 +239,41 @@ fn dist(args: &Args) -> Result<()> {
         "serve" => {
             let p = args.get_usize("p")?.context("dist serve needs --p")?;
             let easgd_beta = args.get_f64("easgd-beta")?.unwrap_or(0.9) as f32;
+            let read_timeout = args
+                .get_f64("read-timeout")?
+                .map(std::time::Duration::from_secs_f64);
             let listener = std::net::TcpListener::bind(addr)
                 .with_context(|| format!("bind {addr}"))?;
             println!(
                 "dist serve: listening on {} for p={p} workers",
                 listener.local_addr()?
             );
-            let rep = transport::serve(listener, ServeConfig { p, easgd_beta })?;
+            let rep = transport::serve(listener, ServeConfig { p, easgd_beta, read_timeout })?;
             println!(
-                "dist serve: updates={} frames={} bytes={} (accounted={}) handshake={}B stops={}",
+                "dist serve: updates={} frames={} bytes={} (accounted={}) handshake={}B \
+                 stops={} goodbyes={} crashes={}",
                 rep.updates,
                 rep.frames,
                 rep.bytes_on_wire,
                 rep.bytes_accounted,
                 rep.bytes_handshake,
-                rep.stops
+                rep.stops,
+                rep.goodbyes,
+                rep.crashes
             );
-            if rep.stops > 0 {
+            if rep.crashes > 0 {
                 eprintln!(
-                    "dist serve: WARNING: pushed Stop to {} worker(s) parked in a barrier \
-                     that could no longer fill — a desynced schedule (uneven shards) or a \
-                     departed peer; the run ended before every worker finished its budget",
+                    "dist serve: WARNING: {} worker socket(s) died without a Goodbye — \
+                     crashed peers; the run wound down without them",
+                    rep.crashes
+                );
+            } else if rep.stops > 0 {
+                // every exit said Goodbye: the Stop frames were a clean
+                // wind-down of a desynced barrier schedule (uneven
+                // shards), not a crash
+                println!(
+                    "dist serve: note: pushed Stop to {} worker(s) parked in a barrier that \
+                     could no longer fill (desynced schedule); every worker exited cleanly",
                     rep.stops
                 );
             }
@@ -294,6 +337,7 @@ fn figure(args: &Args) -> Result<()> {
         "fig3scale" => fig3::report_scaling(scale)?,
         "table1" => table1::report(),
         "ablations" | "theory" => ablations::report_all()?,
+        "scenario" => scenario::report(scale)?,
         "all" => {
             fig1::report(scale)?;
             fig2::report_convergence(scale)?;

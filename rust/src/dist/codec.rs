@@ -73,6 +73,7 @@ const TAG_GRAD_STEP: u8 = 6;
 const TAG_VIEW: u8 = 7;
 const TAG_HELLO: u8 = 8;
 const TAG_STOP: u8 = 9;
+const TAG_GOODBYE: u8 = 10;
 
 const MODE_DENSE: u8 = 0;
 const MODE_SPARSE: u8 = 1;
@@ -106,6 +107,11 @@ pub enum WireMsg {
     /// PS-SVRG on uneven shards) can no longer complete; a worker that
     /// receives it ends its run at the current round and disconnects.
     Stop,
+    /// Worker -> server: clean exit, carrying the completed round count.
+    /// Sent right before the worker closes its socket — whether it spent
+    /// its budget or honored a server `Stop` — so the server can tell a
+    /// deliberate departure from a peer crashing at a frame boundary.
+    Goodbye { rounds: u64 },
 }
 
 /// Decoder rejection: every malformed input maps to one of these; the
@@ -220,6 +226,11 @@ pub fn hello_frame_len() -> u64 {
 /// Encoded frame size of a server-push `Stop` (prefix + tag).
 pub fn stop_frame_len() -> u64 {
     4 + 1
+}
+
+/// Encoded frame size of a worker `Goodbye` (prefix + tag + rounds).
+pub fn goodbye_frame_len() -> u64 {
+    4 + 1 + 8
 }
 
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
@@ -373,6 +384,22 @@ pub fn encode_stop() -> Vec<u8> {
     buf
 }
 
+/// Encode a worker `Goodbye` into a reusable buffer.
+pub fn encode_goodbye_into(rounds: u64, buf: &mut Vec<u8>) {
+    with_prefix_into(buf, |buf| {
+        buf.push(TAG_GOODBYE);
+        put_u64(buf, rounds);
+    });
+    debug_assert_eq!(buf.len() as u64, goodbye_frame_len());
+}
+
+/// Encode a worker `Goodbye` as a complete frame.
+pub fn encode_goodbye(rounds: u64) -> Vec<u8> {
+    let mut buf = Vec::new();
+    encode_goodbye_into(rounds, &mut buf);
+    buf
+}
+
 // ---------------------------------------------------------------------------
 // decoding
 // ---------------------------------------------------------------------------
@@ -502,6 +529,7 @@ pub fn decode_body_bounded(body: &[u8], max_dim: u32) -> Result<WireMsg, CodecEr
             WireMsg::Hello(Hello { s, p, n_s, d })
         }
         TAG_STOP => WireMsg::Stop,
+        TAG_GOODBYE => WireMsg::Goodbye { rounds: cur.u64()? },
         other => return Err(CodecError::UnknownTag(other)),
     };
     cur.finish()?;
@@ -561,6 +589,20 @@ mod tests {
         assert_eq!(frame.len() as u64, stop_frame_len());
         // decodes even under the tightest session bound (carries no vectors)
         assert_eq!(decode_bounded(&frame, 0), Ok(WireMsg::Stop));
+    }
+
+    #[test]
+    fn goodbye_is_thirteen_bytes_and_roundtrips() {
+        let frame = encode_goodbye(42);
+        assert_eq!(frame.len() as u64, goodbye_frame_len());
+        assert_eq!(frame[4], TAG_GOODBYE);
+        // decodes even under the tightest session bound (carries no vectors)
+        assert_eq!(
+            decode_bounded(&frame, 0),
+            Ok(WireMsg::Goodbye { rounds: 42 })
+        );
+        // a truncated rounds field is an error, not a panic
+        assert!(decode(&frame[..frame.len() - 2]).is_err());
     }
 
     #[test]

@@ -128,6 +128,28 @@ impl<'a> LocalNode<'a> {
         self.rounds_done
     }
 
+    /// Forget what was last uploaded (delta protocol). After a rejoin the
+    /// server admitted this worker with a zero contribution, so zeroing
+    /// `sent_x` / `sent_gbar` makes the next `cvr_async_round` upload the
+    /// worker's *full* iterate and pre-weighted gtilde — exactly the
+    /// contribution the rescaled server mean is missing.
+    pub fn reset_contribution(&mut self) {
+        math::zero(&mut self.sent_x);
+        math::zero(&mut self.sent_gbar);
+    }
+
+    /// Undo the `sent` bookkeeping of a delta upload the server refused
+    /// (bounded-staleness parking): the contribution never landed, so the
+    /// next round's delta must re-include the dropped movement or the
+    /// server's mean drifts permanently.
+    pub fn unsend_delta(&mut self, up: &Upload) {
+        let Upload::Delta { dx, dgbar } = up else {
+            panic!("unsend_delta expects Upload::Delta, got {}", up.kind());
+        };
+        math::axpy(-1.0, dx, &mut self.sent_x);
+        math::axpy(-1.0, dgbar, &mut self.sent_gbar);
+    }
+
     /// Shard weight in the global objective: n_s / n.
     fn weight(&self) -> f32 {
         self.shard.n() as f32 / self.n_global as f32
@@ -461,6 +483,18 @@ impl<'a> RoundMachine<'a> {
         &self.node
     }
 
+    /// Forget the last uploaded contribution (rejoin path; see
+    /// [`LocalNode::reset_contribution`]).
+    pub fn reset_contribution(&mut self) {
+        self.node.reset_contribution();
+    }
+
+    /// Roll back a refused delta upload (staleness parking; see
+    /// [`LocalNode::unsend_delta`]).
+    pub fn unsend_delta(&mut self, up: &Upload) {
+        self.node.unsend_delta(up);
+    }
+
     /// Compute halves executed so far (budget units).
     pub fn rounds(&self) -> usize {
         self.rounds
@@ -627,6 +661,50 @@ mod tests {
         }
         let diff = math::max_abs_diff(&server.x, &mean);
         assert!(diff < 1e-4, "server x not the mean: {diff}");
+    }
+
+    /// The rejoin contract: after `reset_contribution`, the next async
+    /// upload carries the full iterate and full pre-weighted gtilde, so
+    /// a server that admitted the worker at zero recovers the exact mean.
+    #[test]
+    fn reset_contribution_makes_next_delta_a_full_resend() {
+        let data = toy(1, 24, 3, 9);
+        let c = cfg(Algorithm::CentralVrAsync, 1);
+        let mut node = LocalNode::new(0, data.shard(0), Problem::Ridge, c, data.n_total());
+        let view = GlobalView { x: vec![0.0; 3], gbar: vec![0.0; 3] };
+        let _ = node.cvr_async_round(&view);
+        let _ = node.cvr_async_round(&view);
+        node.reset_contribution();
+        let up = node.cvr_async_round(&view);
+        let Upload::Delta { dx, dgbar } = up else {
+            panic!("wrong upload kind");
+        };
+        assert_eq!(dx, node.x().to_vec(), "dx must be the full iterate");
+        // dgbar equals the full pre-weighted epoch average (weight = 1 here
+        // because this worker owns the whole dataset)
+        let mut server = ServerState::new(3, 1, c.easgd_beta);
+        server.apply_delta(&Upload::Delta { dx, dgbar });
+        assert!(math::max_abs_diff(&server.x, node.x()) < 1e-6);
+    }
+
+    /// The parking contract: a delta the server refuses is unsent, so the
+    /// next applied delta re-includes the dropped movement and the server
+    /// mean lands exactly on the worker's iterate again.
+    #[test]
+    fn unsend_delta_reincludes_a_parked_round() {
+        let data = toy(1, 24, 3, 9);
+        let c = cfg(Algorithm::CentralVrAsync, 1);
+        let mut node = LocalNode::new(0, data.shard(0), Problem::Ridge, c, data.n_total());
+        let mut server = ServerState::new(3, 1, c.easgd_beta);
+        let up = node.cvr_async_round(&server.view());
+        server.apply_delta(&up);
+        // round 2 gets parked: never applied, bookkeeping rolled back
+        let parked = node.cvr_async_round(&server.view());
+        node.unsend_delta(&parked);
+        // round 3 is applied and must absorb round 2's movement too
+        let up = node.cvr_async_round(&server.view());
+        server.apply_delta(&up);
+        assert!(math::max_abs_diff(&server.x, node.x()) < 1e-6);
     }
 
     #[test]

@@ -34,6 +34,7 @@
 pub mod codec;
 pub mod local;
 pub mod messages;
+pub mod scenario;
 pub mod server;
 pub mod transport;
 

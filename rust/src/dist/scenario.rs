@@ -1,0 +1,551 @@
+//! Hostile-network scenario engine: a declarative description of the
+//! failure modes a polite cluster never shows — stragglers (per-worker
+//! latency distributions, heavy tails included), mid-run worker death
+//! and (re)join with server-side mean rescaling, message delay/reorder,
+//! and a bounded-staleness knob that parks uploads older than τ server
+//! updates (the regime Reddi et al., arXiv 1506.06840, and Zhang et
+//! al., arXiv 1508.01633, analyze for asynchronous VR methods).
+//!
+//! A [`ScenarioSpec`] is parsed from the repo's TOML subset
+//! ([`crate::config::toml`]) and handed to
+//! [`crate::exec::simulator::run_with_scenario`], where scenario events
+//! become first-class queue entries alongside the protocol's
+//! Arrive/Reply events. Every stochastic choice is sampled from one
+//! deterministic [`Pcg64`] stream in serialized event order, so a
+//! scenario run replays bit-identically at any `--sim-threads` width
+//! (pinned by `rust/tests/scenario_determinism.rs`). The TCP transport
+//! carries the physical subset — kill/reconnect fault injection — in
+//! `rust/tests/tcp_faults.rs`.
+//!
+//! TOML schema (all keys optional; unknown keys are rejected):
+//!
+//! ```toml
+//! [scenario]
+//! name = "heavy-tail"
+//! seed_salt = 7            # folded into the run seed for the event RNG
+//! staleness_tau = 4        # park async uploads older than 4 server updates
+//! delay_prob = 0.1         # per-upload chance of an extra delay draw
+//! delay = "uniform:1e-4:1e-3"
+//!
+//! [scenario.latency]       # extra worker->server latency per upload
+//! default = "pareto:1e-4:1.5"
+//! worker_0 = "constant:5e-3"   # per-worker override
+//!
+//! [scenario.churn]
+//! deaths  = ["1@4"]        # worker 1 crashes completing its 4th round
+//! rejoins = ["1@0.5"]      # ...and rejoins 0.5 virtual seconds later
+//! ```
+//!
+//! Latency distributions: `constant:V`, `uniform:LO:HI`, and the
+//! heavy-tail `pareto:SCALE:ALPHA` (density `~ x^-(alpha+1)` for
+//! `x >= scale`; `alpha <= 1` has infinite mean — the brutal-straggler
+//! setting).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::schema::Algorithm;
+use crate::config::toml::Document;
+use crate::util::rng::Pcg64;
+
+/// One latency distribution, in seconds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LatencyDist {
+    /// Fixed extra latency.
+    Constant(f64),
+    /// Uniform in `[lo, hi)`.
+    Uniform { lo: f64, hi: f64 },
+    /// Pareto heavy tail: `scale * U^(-1/alpha)` for uniform `U` — the
+    /// classic straggler model (smaller `alpha` = fatter tail).
+    Pareto { scale: f64, alpha: f64 },
+}
+
+impl LatencyDist {
+    /// Parse `"constant:V"`, `"uniform:LO:HI"`, or `"pareto:SCALE:ALPHA"`.
+    pub fn parse(s: &str) -> Result<LatencyDist> {
+        let parts: Vec<&str> = s.split(':').map(str::trim).collect();
+        let num = |t: &str| -> Result<f64> {
+            t.parse::<f64>()
+                .ok()
+                .filter(|v| v.is_finite())
+                .with_context(|| format!("bad number {t:?} in latency spec {s:?}"))
+        };
+        let dist = match parts.as_slice() {
+            ["constant", v] => LatencyDist::Constant(num(v)?),
+            ["uniform", lo, hi] => LatencyDist::Uniform { lo: num(lo)?, hi: num(hi)? },
+            ["pareto", scale, alpha] => {
+                LatencyDist::Pareto { scale: num(scale)?, alpha: num(alpha)? }
+            }
+            _ => bail!(
+                "bad latency spec {s:?}: expected constant:V, uniform:LO:HI, \
+                 or pareto:SCALE:ALPHA"
+            ),
+        };
+        dist.check().with_context(|| format!("latency spec {s:?}"))?;
+        Ok(dist)
+    }
+
+    fn check(&self) -> Result<()> {
+        match *self {
+            LatencyDist::Constant(v) => ensure!(v >= 0.0, "constant latency must be >= 0"),
+            LatencyDist::Uniform { lo, hi } => {
+                ensure!(lo >= 0.0 && hi >= lo, "uniform needs 0 <= lo <= hi")
+            }
+            LatencyDist::Pareto { scale, alpha } => {
+                ensure!(scale > 0.0 && alpha > 0.0, "pareto needs scale > 0, alpha > 0")
+            }
+        }
+        Ok(())
+    }
+
+    /// Draw one latency, in seconds. `Constant` consumes no RNG state, so
+    /// enabling it on one worker never shifts another worker's draws.
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        match *self {
+            LatencyDist::Constant(v) => v,
+            LatencyDist::Uniform { lo, hi } => lo + (hi - lo) * rng.next_f64(),
+            LatencyDist::Pareto { scale, alpha } => {
+                // 1 - U in (0, 1]: the inverse-CDF transform never divides by 0
+                scale * (1.0 - rng.next_f64()).powf(-1.0 / alpha)
+            }
+        }
+    }
+}
+
+/// A worker crash: worker `worker` dies while completing round `round`
+/// (1-based compute-half count); the upload of that round is lost.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DeathSpec {
+    pub worker: usize,
+    pub round: u64,
+}
+
+/// A worker rejoin: `after_s` virtual seconds after its death, the
+/// worker is re-admitted with a zero contribution (the server rescales
+/// its mean; the worker resends its full state on the next round).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RejoinSpec {
+    pub worker: usize,
+    pub after_s: f64,
+}
+
+/// Declarative description of a hostile-network run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ScenarioSpec {
+    /// Display name (defaults to empty).
+    pub name: String,
+    /// Folded into the run seed for the scenario RNG stream, so one
+    /// config can replay several noise realizations.
+    pub seed_salt: u64,
+    /// Extra worker->server latency applied to every upload, unless a
+    /// per-worker override exists.
+    pub default_latency: Option<LatencyDist>,
+    /// Per-worker latency overrides (worker index -> distribution).
+    pub worker_latency: BTreeMap<usize, LatencyDist>,
+    /// Per-upload probability of drawing an extra delay from `delay`
+    /// (delayed messages naturally reorder behind faster peers).
+    pub delay_prob: f64,
+    /// The extra-delay distribution (required when `delay_prob > 0`).
+    pub delay: Option<LatencyDist>,
+    /// Bounded staleness: an async upload computed against a view older
+    /// than this many server updates is parked (discarded unapplied; the
+    /// worker gets a fresh view instead). `None` = unbounded.
+    pub staleness_tau: Option<u64>,
+    /// Worker crashes.
+    pub deaths: Vec<DeathSpec>,
+    /// Worker rejoins (each must pair with a death of the same worker).
+    pub rejoins: Vec<RejoinSpec>,
+}
+
+impl ScenarioSpec {
+    /// Parse from TOML text. All scenario keys live under `[scenario]`;
+    /// unknown keys are rejected so a typo cannot silently disable a
+    /// fault.
+    pub fn from_toml_str(text: &str) -> Result<ScenarioSpec> {
+        Self::from_document(&Document::parse(text)?)
+    }
+
+    /// Read and parse a scenario file.
+    pub fn load(path: &str) -> Result<ScenarioSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read scenario {path}"))?;
+        Self::from_toml_str(&text).with_context(|| format!("scenario {path}"))
+    }
+
+    pub fn from_document(doc: &Document) -> Result<ScenarioSpec> {
+        ensure!(
+            doc.section_keys("scenario").next().is_some(),
+            "no [scenario] table found"
+        );
+        for key in doc.section_keys("scenario") {
+            let sub = &key["scenario.".len()..];
+            let known = matches!(
+                sub,
+                "name" | "seed_salt" | "staleness_tau" | "delay_prob" | "delay"
+                    | "churn.deaths" | "churn.rejoins"
+            ) || sub == "latency.default"
+                || sub
+                    .strip_prefix("latency.worker_")
+                    .is_some_and(|n| n.parse::<usize>().is_ok());
+            ensure!(known, "unknown scenario key {key:?}");
+        }
+        let mut spec = ScenarioSpec::default();
+        if let Some(v) = doc.get_str("scenario.name") {
+            spec.name = v.to_string();
+        }
+        if let Some(v) = doc.get_int("scenario.seed_salt") {
+            spec.seed_salt = v as u64;
+        }
+        if let Some(v) = doc.get_int("scenario.staleness_tau") {
+            ensure!(v >= 0, "staleness_tau must be >= 0");
+            spec.staleness_tau = Some(v as u64);
+        }
+        if let Some(v) = doc.get_float("scenario.delay_prob") {
+            ensure!((0.0..=1.0).contains(&v), "delay_prob must be in [0, 1]");
+            spec.delay_prob = v;
+        }
+        if let Some(v) = doc.get_str("scenario.delay") {
+            spec.delay = Some(LatencyDist::parse(v)?);
+        }
+        if let Some(v) = doc.get_str("scenario.latency.default") {
+            spec.default_latency = Some(LatencyDist::parse(v)?);
+        }
+        for key in doc.section_keys("scenario.latency") {
+            let sub = &key["scenario.latency.".len()..];
+            if let Some(n) = sub.strip_prefix("worker_") {
+                let s: usize = n.parse().with_context(|| format!("bad key {key:?}"))?;
+                let text = doc.get_str(key).with_context(|| format!("{key} must be a string"))?;
+                spec.worker_latency.insert(s, LatencyDist::parse(text)?);
+            }
+        }
+        if let Some(v) = doc.get("scenario.churn.deaths") {
+            let items = v.as_array().context("churn.deaths must be an array")?;
+            for item in items {
+                let text = item.as_str().context("churn.deaths entries must be strings")?;
+                let (w, r) = split_at_sign(text)?;
+                let round: u64 = r.parse().with_context(|| format!("bad round in {text:?}"))?;
+                ensure!(round >= 1, "death round must be >= 1 (rounds are 1-based): {text:?}");
+                spec.deaths.push(DeathSpec { worker: w, round });
+            }
+        }
+        if let Some(v) = doc.get("scenario.churn.rejoins") {
+            let items = v.as_array().context("churn.rejoins must be an array")?;
+            for item in items {
+                let text = item.as_str().context("churn.rejoins entries must be strings")?;
+                let (w, t) = split_at_sign(text)?;
+                let after_s: f64 = t.parse().with_context(|| format!("bad delay in {text:?}"))?;
+                ensure!(
+                    after_s.is_finite() && after_s > 0.0,
+                    "rejoin delay must be > 0 seconds: {text:?}"
+                );
+                spec.rejoins.push(RejoinSpec { worker: w, after_s });
+            }
+        }
+        Ok(spec)
+    }
+
+    /// The latency distribution governing worker `s`'s uploads, if any.
+    pub fn latency_for(&self, s: usize) -> Option<LatencyDist> {
+        self.worker_latency.get(&s).copied().or(self.default_latency)
+    }
+
+    /// True when any knob is set (an empty `[scenario]` table is inert).
+    pub fn is_active(&self) -> bool {
+        self.default_latency.is_some()
+            || !self.worker_latency.is_empty()
+            || self.delay_prob > 0.0
+            || self.staleness_tau.is_some()
+            || !self.deaths.is_empty()
+    }
+
+    /// Check the spec against a concrete run topology. Churn is limited
+    /// to the delta-protocol algorithms whose server-side contribution
+    /// algebra supports eviction: a barrier algorithm would deadlock on
+    /// a dead peer, EASGD's elastic center is not a mean of
+    /// contributions, and D-SAGA's incremental `dgbar` cannot resend a
+    /// full table after a rejoin — so deaths allow CVR-Async and D-SAGA,
+    /// rejoins CVR-Async only. Bounded staleness applies to async
+    /// uploads, so pure-barrier algorithms (CVR-Sync, D-SVRG) reject it.
+    pub fn validate(&self, algorithm: Algorithm, p: usize) -> Result<()> {
+        for (&s, _) in &self.worker_latency {
+            ensure!(s < p, "latency override for worker {s}, but p = {p}");
+        }
+        if self.delay_prob > 0.0 {
+            ensure!(self.delay.is_some(), "delay_prob > 0 needs a delay distribution");
+        }
+        if self.staleness_tau.is_some() {
+            ensure!(
+                matches!(
+                    algorithm,
+                    Algorithm::CentralVrAsync
+                        | Algorithm::DistSaga
+                        | Algorithm::Easgd
+                        | Algorithm::PsSvrg
+                ),
+                "staleness_tau needs an algorithm with async uploads; {} is pure-barrier",
+                algorithm.name()
+            );
+        }
+        if !self.deaths.is_empty() {
+            ensure!(
+                matches!(algorithm, Algorithm::CentralVrAsync | Algorithm::DistSaga),
+                "worker deaths need the delta protocol (CVR-Async or D-SAGA), got {}",
+                algorithm.name()
+            );
+            ensure!(
+                self.deaths.len() < p,
+                "cannot kill all {p} workers (at least one must survive)"
+            );
+        }
+        if !self.rejoins.is_empty() {
+            ensure!(
+                algorithm == Algorithm::CentralVrAsync,
+                "rejoins need CVR-Async (its delta upload resends the full \
+                 contribution after a reset), got {}",
+                algorithm.name()
+            );
+        }
+        let mut seen_death = vec![false; p];
+        for d in &self.deaths {
+            ensure!(d.worker < p, "death of worker {}, but p = {p}", d.worker);
+            ensure!(!seen_death[d.worker], "worker {} dies twice", d.worker);
+            seen_death[d.worker] = true;
+        }
+        let mut seen_rejoin = vec![false; p];
+        for r in &self.rejoins {
+            ensure!(r.worker < p, "rejoin of worker {}, but p = {p}", r.worker);
+            ensure!(!seen_rejoin[r.worker], "worker {} rejoins twice", r.worker);
+            ensure!(
+                seen_death[r.worker],
+                "worker {} rejoins but never dies",
+                r.worker
+            );
+            seen_rejoin[r.worker] = true;
+        }
+        Ok(())
+    }
+}
+
+fn split_at_sign(text: &str) -> Result<(usize, &str)> {
+    let (w, rest) = text
+        .split_once('@')
+        .with_context(|| format!("expected WORKER@VALUE, got {text:?}"))?;
+    let worker: usize = w
+        .trim()
+        .parse()
+        .with_context(|| format!("bad worker index in {text:?}"))?;
+    Ok((worker, rest.trim()))
+}
+
+/// What the scenario machinery actually did during a run — lives beside
+/// the ordinary counters in `SimReport` (the `CounterSnapshot` layout is
+/// pinned by the parity suites, so scenario effects report here).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ScenarioReport {
+    /// Workers that died.
+    pub deaths: u64,
+    /// Workers that rejoined.
+    pub rejoins: u64,
+    /// Uploads hit by an extra delay draw.
+    pub delayed: u64,
+    /// Async uploads parked (discarded unapplied) by the staleness bound.
+    pub stale_parked: u64,
+    /// Largest staleness age (in server updates) among *applied* async
+    /// uploads — with `staleness_tau = Some(t)` this never exceeds `t`.
+    pub max_applied_age: u64,
+    /// Total extra latency injected, virtual seconds (latency + delay).
+    pub extra_latency_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_dist_parses_all_three_forms() {
+        assert_eq!(
+            LatencyDist::parse("constant:0.005").unwrap(),
+            LatencyDist::Constant(0.005)
+        );
+        assert_eq!(
+            LatencyDist::parse("uniform:1e-4:1e-3").unwrap(),
+            LatencyDist::Uniform { lo: 1e-4, hi: 1e-3 }
+        );
+        assert_eq!(
+            LatencyDist::parse("pareto:1e-4:1.5").unwrap(),
+            LatencyDist::Pareto { scale: 1e-4, alpha: 1.5 }
+        );
+    }
+
+    #[test]
+    fn latency_dist_rejects_malformed_specs() {
+        for bad in [
+            "gauss:1:2",
+            "constant",
+            "uniform:1e-3",
+            "constant:-1",
+            "uniform:2:1",
+            "pareto:0:1",
+            "pareto:1:0",
+            "constant:nan",
+            "uniform:1:inf",
+        ] {
+            assert!(LatencyDist::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn samples_respect_their_support() {
+        let mut rng = Pcg64::new(17);
+        let u = LatencyDist::Uniform { lo: 0.25, hi: 0.5 };
+        let p = LatencyDist::Pareto { scale: 1e-3, alpha: 1.5 };
+        for _ in 0..1000 {
+            let v = u.sample(&mut rng);
+            assert!((0.25..0.5).contains(&v), "{v}");
+            let v = p.sample(&mut rng);
+            assert!(v >= 1e-3 && v.is_finite(), "{v}");
+            assert_eq!(LatencyDist::Constant(0.1).sample(&mut rng), 0.1);
+        }
+    }
+
+    #[test]
+    fn pareto_tail_is_heavier_than_uniform() {
+        // alpha = 1.1: finite mean, brutal tail — the max over 10k draws
+        // should dwarf the scale, which a uniform never does
+        let mut rng = Pcg64::new(3);
+        let p = LatencyDist::Pareto { scale: 1e-3, alpha: 1.1 };
+        let max = (0..10_000).map(|_| p.sample(&mut rng)).fold(0.0, f64::max);
+        assert!(max > 50e-3, "tail too light: max={max}");
+    }
+
+    fn full_spec() -> ScenarioSpec {
+        ScenarioSpec::from_toml_str(
+            r#"
+            [scenario]
+            name = "hostile"
+            seed_salt = 7
+            staleness_tau = 4
+            delay_prob = 0.1
+            delay = "uniform:1e-4:1e-3"
+            [scenario.latency]
+            default = "pareto:1e-4:1.5"
+            worker_0 = "constant:5e-3"
+            [scenario.churn]
+            deaths = ["1@4"]
+            rejoins = ["1@0.5"]
+            "#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn full_toml_roundtrip() {
+        let spec = full_spec();
+        assert_eq!(spec.name, "hostile");
+        assert_eq!(spec.seed_salt, 7);
+        assert_eq!(spec.staleness_tau, Some(4));
+        assert_eq!(spec.delay_prob, 0.1);
+        assert_eq!(spec.delay, Some(LatencyDist::Uniform { lo: 1e-4, hi: 1e-3 }));
+        assert_eq!(
+            spec.latency_for(0),
+            Some(LatencyDist::Constant(5e-3)),
+            "worker override wins"
+        );
+        assert_eq!(
+            spec.latency_for(3),
+            Some(LatencyDist::Pareto { scale: 1e-4, alpha: 1.5 }),
+            "others fall back to the default"
+        );
+        assert_eq!(spec.deaths, vec![DeathSpec { worker: 1, round: 4 }]);
+        assert_eq!(spec.rejoins, vec![RejoinSpec { worker: 1, after_s: 0.5 }]);
+        assert!(spec.is_active());
+        spec.validate(Algorithm::CentralVrAsync, 4).unwrap();
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected() {
+        for text in [
+            "[scenario]\nstale_tau = 4\n",
+            "[scenario.latency]\nworker_x = \"constant:1\"\n",
+            "[scenario.churn]\nkills = [\"1@4\"]\n",
+            "nothing = true\n",
+        ] {
+            assert!(ScenarioSpec::from_toml_str(text).is_err(), "{text:?}");
+        }
+    }
+
+    #[test]
+    fn churn_entries_are_validated_at_parse_time() {
+        for text in [
+            "[scenario.churn]\ndeaths = [\"1@0\"]\n",    // rounds are 1-based
+            "[scenario.churn]\ndeaths = [\"x@4\"]\n",    // bad worker
+            "[scenario.churn]\ndeaths = [\"14\"]\n",     // missing @
+            "[scenario.churn]\nrejoins = [\"1@0\"]\n",   // delay must be > 0
+            "[scenario.churn]\nrejoins = [\"1@-2\"]\n",
+            "[scenario.churn]\ndeaths = [4]\n",          // not a string
+        ] {
+            assert!(ScenarioSpec::from_toml_str(text).is_err(), "{text:?}");
+        }
+    }
+
+    #[test]
+    fn validate_enforces_topology_and_algorithm_rules() {
+        let spec = full_spec();
+        // worker 1 death/rejoin fine at p=4 with CVR-Async
+        spec.validate(Algorithm::CentralVrAsync, 4).unwrap();
+        // churn needs the delta protocol
+        assert!(spec.validate(Algorithm::CentralVrSync, 4).is_err());
+        assert!(spec.validate(Algorithm::Easgd, 4).is_err());
+        // rejoins are CVR-Async-only (D-SAGA can't resend its table)
+        assert!(spec.validate(Algorithm::DistSaga, 4).is_err());
+        let mut deaths_only = spec.clone();
+        deaths_only.rejoins.clear();
+        deaths_only.validate(Algorithm::DistSaga, 4).unwrap();
+        // staleness needs an async upload stream
+        let mut stale = ScenarioSpec { staleness_tau: Some(2), ..Default::default() };
+        stale.validate(Algorithm::PsSvrg, 4).unwrap();
+        assert!(stale.validate(Algorithm::DistSvrg, 4).is_err());
+        stale.staleness_tau = None;
+        // worker indices must fit the topology
+        let oob = ScenarioSpec {
+            deaths: vec![DeathSpec { worker: 9, round: 1 }],
+            ..Default::default()
+        };
+        assert!(oob.validate(Algorithm::CentralVrAsync, 4).is_err());
+        // rejoin without a death
+        let orphan = ScenarioSpec {
+            rejoins: vec![RejoinSpec { worker: 0, after_s: 1.0 }],
+            ..Default::default()
+        };
+        assert!(orphan.validate(Algorithm::CentralVrAsync, 4).is_err());
+        // cannot kill everyone
+        let all_dead = ScenarioSpec {
+            deaths: (0..2).map(|w| DeathSpec { worker: w, round: 1 }).collect(),
+            ..Default::default()
+        };
+        assert!(all_dead.validate(Algorithm::CentralVrAsync, 2).is_err());
+        // delay_prob needs a distribution
+        let no_dist = ScenarioSpec { delay_prob: 0.5, ..Default::default() };
+        assert!(no_dist.validate(Algorithm::CentralVrAsync, 2).is_err());
+    }
+
+    #[test]
+    fn empty_scenario_table_is_inert() {
+        let spec = ScenarioSpec::from_toml_str("[scenario]\nname = \"calm\"\n").unwrap();
+        assert!(!spec.is_active());
+        spec.validate(Algorithm::CentralVrSync, 4).unwrap();
+    }
+
+    #[test]
+    fn constant_draws_consume_no_rng_state() {
+        // a worker on a Constant dist must not perturb the stream that
+        // samples its peers — the determinism story depends on it
+        let mut a = Pcg64::new(5);
+        let mut b = Pcg64::new(5);
+        let c = LatencyDist::Constant(1.0);
+        let u = LatencyDist::Uniform { lo: 0.0, hi: 1.0 };
+        let _ = c.sample(&mut a);
+        assert_eq!(u.sample(&mut a), u.sample(&mut b));
+    }
+}

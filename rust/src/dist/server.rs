@@ -193,6 +193,45 @@ impl ServerState {
         Ok(())
     }
 
+    /// Evict a dead worker from the delta protocol (CVR-Async / D-SAGA).
+    ///
+    /// `contrib_x` / `contrib_gbar` are the sums of every `dx` / `dgbar`
+    /// the server actually *applied* for that worker (the engine tracks
+    /// them; an upload lost in flight never counts). The delta invariant
+    /// is `x = (1/p) * sum_s c_s` with `c_s` the worker's applied-`dx`
+    /// sum, so removing worker `s0` means
+    /// `x <- (p * x - c_s0) / (p - 1)` — the mean over the survivors —
+    /// and `gbar <- gbar - contrib_gbar_s0` since `gbar` is a plain sum
+    /// of pre-weighted contributions. Subsequent `apply_delta` calls
+    /// divide by the new `p`, which is exactly right for the rescaled
+    /// mean.
+    pub fn evict_contribution(&mut self, contrib_x: &[f32], contrib_gbar: &[f32]) {
+        assert!(self.p >= 2, "cannot evict the last worker");
+        assert_eq!(contrib_x.len(), self.x.len());
+        assert_eq!(contrib_gbar.len(), self.gbar.len());
+        let p_old = self.p as f32;
+        let p_new = p_old - 1.0;
+        for j in 0..self.x.len() {
+            self.x[j] = (p_old * self.x[j] - contrib_x[j]) / p_new;
+        }
+        math::axpy(-1.0, contrib_gbar, &mut self.gbar);
+        self.p -= 1;
+        self.updates += 1;
+    }
+
+    /// Admit a (re)joining worker with a zero contribution: the mean over
+    /// `p + 1` workers where the newcomer sits at the origin is
+    /// `x <- x * p / (p + 1)`. The worker resets its own `sent` state to
+    /// zero, so its next `Delta` carries its full iterate and restores
+    /// the mean. `gbar` is untouched (the newcomer contributes nothing
+    /// until its first upload).
+    pub fn admit_zero_contribution(&mut self) {
+        let p_old = self.p as f32;
+        math::scal(p_old / (p_old + 1.0), &mut self.x);
+        self.p += 1;
+        self.updates += 1;
+    }
+
     /// Deposit an upload into the server-side barrier inbox; returns the
     /// complete round (in worker order) once all `p` have arrived. The
     /// in-process engines run their own barrier collection; this is the
@@ -359,6 +398,70 @@ mod tests {
         let mut s = ServerState::new(1, 2, 0.9);
         let _ = s.deposit(0, Upload::Ready);
         let _ = s.deposit(0, Upload::Ready);
+    }
+
+    #[test]
+    fn evict_restores_mean_over_survivors() {
+        let mut s = ServerState::new(2, 3, 0.9);
+        // worker contributions: c0 = [3, 0], c1 = [0, 6], c2 = [0, 0]
+        s.apply_delta(&Upload::Delta { dx: vec![3.0, 0.0], dgbar: vec![1.0, 0.0] });
+        s.apply_delta(&Upload::Delta { dx: vec![0.0, 6.0], dgbar: vec![0.0, 2.0] });
+        assert!(close(&s.x, &[1.0, 2.0], 1e-6), "{:?}", s.x);
+        // worker 1 dies: survivors' mean is ([3,0] + [0,0]) / 2
+        s.evict_contribution(&[0.0, 6.0], &[0.0, 2.0]);
+        assert_eq!(s.p(), 2);
+        assert!(close(&s.x, &[1.5, 0.0], 1e-6), "{:?}", s.x);
+        assert!(close(&s.gbar, &[1.0, 0.0], 1e-6), "{:?}", s.gbar);
+        // the new p governs later deltas: worker 0 moves [3,0] -> [5,0]
+        s.apply_delta(&Upload::Delta { dx: vec![2.0, 0.0], dgbar: vec![0.0, 0.0] });
+        assert!(close(&s.x, &[2.5, 0.0], 1e-6), "{:?}", s.x);
+    }
+
+    #[test]
+    fn evict_a_zero_contribution_worker_is_a_pure_rescale() {
+        let mut s = ServerState::new(1, 2, 0.9);
+        s.apply_delta(&Upload::Delta { dx: vec![4.0], dgbar: vec![1.0] });
+        // the other worker never uploaded: its contribution is 0
+        s.evict_contribution(&[0.0], &[0.0]);
+        assert_eq!(s.p(), 1);
+        assert!(close(&s.x, &[4.0], 1e-6), "{:?}", s.x);
+        assert!(close(&s.gbar, &[1.0], 1e-6), "{:?}", s.gbar);
+    }
+
+    #[test]
+    fn admit_then_full_resend_restores_the_mean() {
+        let mut s = ServerState::new(1, 1, 0.9);
+        s.apply_delta(&Upload::Delta { dx: vec![6.0], dgbar: vec![2.0] });
+        assert!(close(&s.x, &[6.0], 1e-6));
+        // a fresh worker joins at the origin: mean over 2 is 3
+        s.admit_zero_contribution();
+        assert_eq!(s.p(), 2);
+        assert!(close(&s.x, &[3.0], 1e-6), "{:?}", s.x);
+        // its first delta carries its full iterate (sent state was reset)
+        s.apply_delta(&Upload::Delta { dx: vec![4.0], dgbar: vec![0.5] });
+        assert!(close(&s.x, &[5.0], 1e-6), "{:?}", s.x); // (6 + 4) / 2
+        assert!(close(&s.gbar, &[2.5], 1e-6), "{:?}", s.gbar);
+    }
+
+    #[test]
+    fn evict_then_admit_round_trips() {
+        let mut s = ServerState::new(2, 3, 0.9);
+        s.apply_delta(&Upload::Delta { dx: vec![3.0, 0.0], dgbar: vec![1.0, 1.0] });
+        let before = s.clone();
+        // kill a zero-contribution worker, then admit a replacement:
+        // p is back to 3 but x scaled by (3/2)*(2/3) = 1 — identical
+        s.evict_contribution(&[0.0, 0.0], &[0.0, 0.0]);
+        s.admit_zero_contribution();
+        assert_eq!(s.p(), before.p());
+        assert!(close(&s.x, &before.x, 1e-6), "{:?}", s.x);
+        assert!(close(&s.gbar, &before.gbar, 1e-6), "{:?}", s.gbar);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot evict the last worker")]
+    fn evicting_the_last_worker_panics() {
+        let mut s = ServerState::new(1, 1, 0.9);
+        s.evict_contribution(&[0.0], &[0.0]);
     }
 
     #[test]

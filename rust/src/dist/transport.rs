@@ -19,7 +19,11 @@
 //!   `ps_cycle` differs per worker and budgets run out mid-cycle — the
 //!   server pushes a `Stop` frame to every parked worker and winds the
 //!   run down cleanly instead of erroring (PR 4 shipped without this and
-//!   died with "barrier stalled").
+//!   died with "barrier stalled"). The server is also crash-resilient:
+//!   a worker that exits cleanly announces it with a Goodbye frame, and
+//!   a socket that dies without one (EOF, mid-frame error, or a
+//!   [`ServeConfig::read_timeout`] expiry) is counted as a crash, logged
+//!   loudly, and survived — the run keeps serving the remaining peers.
 //! * [`TcpClient`] — one worker's connection: handshake on connect, then
 //!   `exchange(upload) -> Some(view)` round trips (`None` = the server
 //!   pushed `Stop`). Encode and frame-read buffers are owned by the
@@ -41,6 +45,7 @@
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -176,6 +181,15 @@ impl TcpClient {
         Ok(())
     }
 
+    /// Announce a clean exit, carrying the completed round count. Sent
+    /// right before the worker closes its socket — both after a spent
+    /// budget and after honoring a server `Stop` — so the server can tell
+    /// a deliberate departure from a crash at a frame boundary.
+    pub fn send_goodbye(&mut self, rounds: u64) -> Result<()> {
+        codec::encode_goodbye_into(rounds, &mut self.ebuf);
+        self.flush_ebuf()
+    }
+
     /// One protocol round trip: send an upload, block for the reply.
     /// `Ok(Some(view))` is the normal reply; `Ok(None)` means the server
     /// pushed a `Stop` frame — the run is over and the worker should wind
@@ -198,6 +212,60 @@ impl TcpClient {
     }
 }
 
+/// Reconnect schedule for [`connect_with_retry`]: bounded exponential
+/// backoff. Attempt `k` (0-based) sleeps `base_delay * 2^(k-1)` before
+/// retrying, capped at `max_delay`; the first attempt fires immediately.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total connection attempts (at least 1 is always made).
+    pub attempts: u32,
+    /// Delay before the first retry.
+    pub base_delay: Duration,
+    /// Ceiling on the per-retry delay.
+    pub max_delay: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            attempts: 6,
+            base_delay: Duration::from_millis(50),
+            max_delay: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Sleep to take before retry number `retry` (0-based): pure doubling
+/// from `base_delay`, saturating at `max_delay` (and at the `Duration`
+/// range for absurd retry counts).
+pub fn backoff_delay(policy: RetryPolicy, retry: u32) -> Duration {
+    let mult = 1u32.checked_shl(retry).unwrap_or(u32::MAX);
+    policy.base_delay.saturating_mul(mult).min(policy.max_delay)
+}
+
+/// [`TcpClient::connect`] with bounded exponential backoff, so a worker
+/// started before its server binds (or while the server restarts its
+/// listener) joins as soon as the port opens instead of failing on the
+/// first refused connection.
+pub fn connect_with_retry(addr: &str, hello: Hello, policy: RetryPolicy) -> Result<TcpClient> {
+    let attempts = policy.attempts.max(1);
+    let mut last_err = None;
+    for attempt in 0..attempts {
+        if attempt > 0 {
+            std::thread::sleep(backoff_delay(policy, attempt - 1));
+        }
+        match TcpClient::connect(addr, hello) {
+            Ok(client) => return Ok(client),
+            Err(e) => last_err = Some(e),
+        }
+    }
+    let err = last_err.expect("at least one attempt was made");
+    Err(err.context(format!(
+        "worker {}: {attempts} connect attempts to {addr} failed",
+        hello.s
+    )))
+}
+
 /// Server-side knobs (everything else arrives in the Hello handshakes).
 #[derive(Clone, Copy, Debug)]
 pub struct ServeConfig {
@@ -205,6 +273,12 @@ pub struct ServeConfig {
     pub p: usize,
     /// EASGD elastic coefficient (applied as `beta / p` per push).
     pub easgd_beta: f32,
+    /// Per-connection read timeout. A worker silent for longer than this
+    /// is declared crashed (the server reads workers in id order, so the
+    /// bound covers a full local compute phase plus any peers serviced
+    /// first in the sweep — set it well above the worst-case round time,
+    /// or leave `None` to wait forever as the in-process engines do).
+    pub read_timeout: Option<Duration>,
 }
 
 /// What a completed [`serve`] run measured.
@@ -228,13 +302,19 @@ pub struct ServeReport {
     pub bytes_handshake: u64,
     /// Upload + view + stop frames carried (handshakes excluded).
     pub frames: u64,
-    /// Server-push `Stop` frames sent. Nonzero means the run wound down
-    /// before every worker finished its budget: either a desynced
-    /// barrier schedule (expected on uneven shards) or a peer that
-    /// vanished at a frame boundary — the wire cannot tell the two
-    /// apart, so callers should treat `stops > 0` as a degraded run
-    /// (a crash *mid-frame* still fails [`serve`] loudly).
+    /// Server-push `Stop` frames sent. Nonzero means some workers were
+    /// parked in a barrier that could no longer fill — a desynced
+    /// barrier schedule (expected on uneven shards) or a crashed peer.
+    /// With `crashes == 0` a stopped run is still a *clean* wind-down:
+    /// every worker said Goodbye on its way out.
     pub stops: u64,
+    /// Goodbye frames received: workers that exited deliberately
+    /// (budget spent, or honoring a server `Stop`) and said so.
+    pub goodbyes: u64,
+    /// Connections that died without a Goodbye — EOF or a mid-frame
+    /// error or a read timeout on a socket whose worker never announced
+    /// an exit. Each one is logged loudly; the run still completes.
+    pub crashes: u64,
 }
 
 fn check_dims(up: &Upload, d: usize) -> Result<()> {
@@ -263,11 +343,14 @@ fn check_dims(up: &Upload, d: usize) -> Result<()> {
 /// (every live worker parked, at least one gone), pushes a `Stop` frame
 /// to each parked worker, discards the orphaned deposits, and completes
 /// the run cleanly, reporting the wind-down in [`ServeReport::stops`].
-/// A peer that *crashes* at a frame boundary is indistinguishable from a
-/// budget-complete exit on the wire, so such a crash also ends as a
-/// `stops > 0` wind-down rather than an error (mid-frame crashes still
-/// error loudly); a worker-side goodbye frame that carries the completed
-/// round count is the ROADMAP follow-on that would separate the two.
+///
+/// Exits are disambiguated by the Goodbye frame: a worker leaving on
+/// purpose (budget spent, or honoring a `Stop`) announces itself first,
+/// counted in [`ServeReport::goodbyes`]. A socket that dies without one
+/// — EOF, a mid-frame error, or a [`ServeConfig::read_timeout`] expiry —
+/// is a crash: logged loudly on stderr, counted in
+/// [`ServeReport::crashes`], and survived (the worker is marked done and
+/// the run continues; its barrier peers are released by the stall check).
 /// Convergence-based early stop is still not propagated over the wire;
 /// `Stop` only resolves barriers that cannot fill.
 pub fn serve(listener: TcpListener, cfg: ServeConfig) -> Result<ServeReport> {
@@ -284,6 +367,7 @@ pub fn serve(listener: TcpListener, cfg: ServeConfig) -> Result<ServeReport> {
     for _ in 0..cfg.p {
         let (mut stream, _) = listener.accept()?;
         stream.set_nodelay(true).ok();
+        stream.set_read_timeout(cfg.read_timeout)?;
         // a Hello carries no vectors, so bound decoding at dim 0: hostile
         // first frames cannot force a large allocation pre-handshake
         let Some((msg, len)) = read_msg_into(&mut stream, 0, &mut rbuf)? else {
@@ -322,12 +406,15 @@ pub fn serve(listener: TcpListener, cfg: ServeConfig) -> Result<ServeReport> {
 
     let mut state = ServerState::new(d, cfg.p, cfg.easgd_beta);
     let mut done = vec![false; cfg.p];
+    let mut said_goodbye = vec![false; cfg.p];
     let mut in_barrier = vec![false; cfg.p];
     let mut open = cfg.p;
     let mut bytes_on_wire = 0u64;
     let mut bytes_accounted = 0u64;
     let mut frames = 0u64;
     let mut stops = 0u64;
+    let mut goodbyes = 0u64;
+    let mut crashes = 0u64;
 
     while open > 0 {
         // every live worker is parked in a barrier that can no longer
@@ -339,33 +426,84 @@ pub fn serve(listener: TcpListener, cfg: ServeConfig) -> Result<ServeReport> {
                 if done[s] {
                     continue;
                 }
-                conns[s].write_all(&ebuf)?;
+                in_barrier[s] = false;
+                if let Err(e) = conns[s].write_all(&ebuf) {
+                    crashes += 1;
+                    eprintln!("ERROR: dist serve: worker {s} unreachable for Stop (no Goodbye received): {e}");
+                    done[s] = true;
+                    open -= 1;
+                    continue;
+                }
                 frames += 1;
                 stops += 1;
                 bytes_on_wire += ebuf.len() as u64;
                 bytes_accounted += codec::stop_frame_len();
-                in_barrier[s] = false;
             }
             // the parked deposits can never complete a round
             state.clear_inbox();
-            continue; // next sweep reads the stopped workers' clean EOFs
+            continue; // next sweep reads the stopped workers' Goodbyes
         }
         for s in 0..cfg.p {
             if done[s] || in_barrier[s] {
                 continue;
             }
-            let Some((msg, len)) = read_msg_into(&mut conns[s], d as u32, &mut rbuf)? else {
-                // a disconnect while peers sit in a half-collected barrier
-                // is the desync case: the stall check above fires on the
-                // next pass and Stops the parked workers cleanly
+            let msg = match read_msg_into(&mut conns[s], d as u32, &mut rbuf) {
+                Ok(Some((msg, len))) => Some((msg, len)),
+                Ok(None) => None,
+                // a socket error mid-session (connection reset, a frame
+                // cut off partway, or a read_timeout expiry) is a crash:
+                // log it loudly, survive it, keep serving the peers
+                Err(e) => {
+                    let timed_out = e.downcast_ref::<std::io::Error>().is_some_and(|io| {
+                        matches!(
+                            io.kind(),
+                            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                        )
+                    });
+                    crashes += 1;
+                    if timed_out {
+                        eprintln!(
+                            "ERROR: dist serve: worker {s} silent past the read timeout \
+                             without a Goodbye; treating it as crashed"
+                        );
+                    } else {
+                        eprintln!("ERROR: dist serve: worker {s} socket died without a Goodbye: {e:#}");
+                    }
+                    done[s] = true;
+                    open -= 1;
+                    continue;
+                }
+            };
+            let Some((msg, len)) = msg else {
+                // EOF at a frame boundary: deliberate if the worker said
+                // Goodbye first, a crash otherwise. Either way peers in a
+                // half-collected barrier are released by the stall check
+                // on the next pass.
+                if !said_goodbye[s] {
+                    crashes += 1;
+                    eprintln!(
+                        "ERROR: dist serve: worker {s} disconnected without a Goodbye \
+                         (crash at a frame boundary)"
+                    );
+                }
                 done[s] = true;
                 open -= 1;
                 continue;
             };
             let up = match msg {
                 WireMsg::Upload(up) => up,
+                WireMsg::Goodbye { rounds: _ } => {
+                    // deliberate exit announced; the clean EOF follows.
+                    // Session-control traffic, priced with the handshakes
+                    // (the in-process engines charge neither).
+                    goodbyes += 1;
+                    said_goodbye[s] = true;
+                    bytes_handshake += len;
+                    continue;
+                }
                 other => bail!("worker {s}: expected an Upload, got {other:?}"),
             };
+            ensure!(!said_goodbye[s], "worker {s} sent an Upload after its Goodbye");
             check_dims(&up, d)?;
             frames += 1;
             bytes_on_wire += len;
@@ -377,12 +515,21 @@ pub fn serve(listener: TcpListener, cfg: ServeConfig) -> Result<ServeReport> {
                     let view = state.view();
                     codec::encode_view_into(&view, &mut ebuf);
                     let view_bytes = view.bytes();
-                    for (conn, waiting) in conns.iter_mut().zip(in_barrier.iter_mut()) {
-                        conn.write_all(&ebuf)?;
+                    for s2 in 0..cfg.p {
+                        in_barrier[s2] = false;
+                        if done[s2] {
+                            continue;
+                        }
+                        if let Err(e) = conns[s2].write_all(&ebuf) {
+                            crashes += 1;
+                            eprintln!("ERROR: dist serve: worker {s2} unreachable for barrier broadcast (no Goodbye received): {e}");
+                            done[s2] = true;
+                            open -= 1;
+                            continue;
+                        }
                         frames += 1;
                         bytes_on_wire += ebuf.len() as u64;
                         bytes_accounted += view_bytes;
-                        *waiting = false;
                     }
                 }
             } else {
@@ -402,7 +549,13 @@ pub fn serve(listener: TcpListener, cfg: ServeConfig) -> Result<ServeReport> {
                     _ => unreachable!("non-barrier kinds are exactly these three"),
                 };
                 codec::encode_view_into(&view, &mut ebuf);
-                conns[s].write_all(&ebuf)?;
+                if let Err(e) = conns[s].write_all(&ebuf) {
+                    crashes += 1;
+                    eprintln!("ERROR: dist serve: worker {s} unreachable for reply (no Goodbye received): {e}");
+                    done[s] = true;
+                    open -= 1;
+                    continue;
+                }
                 frames += 1;
                 bytes_on_wire += ebuf.len() as u64;
                 bytes_accounted += view.bytes();
@@ -418,6 +571,8 @@ pub fn serve(listener: TcpListener, cfg: ServeConfig) -> Result<ServeReport> {
         bytes_handshake,
         frames,
         stops,
+        goodbyes,
+        crashes,
     })
 }
 
@@ -446,6 +601,11 @@ pub struct WorkerReport {
 /// math as the in-process engines on the same seed. Convergence-based
 /// early stop is not propagated over the wire; a server-push `Stop`
 /// (desynced barrier schedule) ends the run cleanly at the current round.
+///
+/// The connection is made with [`connect_with_retry`] under the default
+/// [`RetryPolicy`], so workers may be launched before the server binds;
+/// every clean exit (budget spent or `Stop` honored) sends a Goodbye
+/// frame carrying the completed round count before the socket closes.
 pub fn run_worker(
     addr: &str,
     s: usize,
@@ -462,7 +622,7 @@ pub fn run_worker(
         n_s: shard.n() as u64,
         d: d as u32,
     };
-    let mut client = TcpClient::connect(addr, hello)?;
+    let mut client = connect_with_retry(addr, hello, RetryPolicy::default())?;
     let mut grad_evals = 0u64;
     let mut iterations = 0u64;
     let mut stopped_by_server = false;
@@ -477,6 +637,7 @@ pub fn run_worker(
             }
         }
     }
+    client.send_goodbye(machine.rounds() as u64)?;
     Ok(WorkerReport {
         rounds: machine.rounds(),
         grad_evals,
@@ -574,6 +735,22 @@ mod tests {
         assert_eq!(m2, WireMsg::Upload(small));
         assert_eq!(n2, 5);
         assert_eq!(buf.capacity(), cap, "reused buffer must not reallocate");
+    }
+
+    #[test]
+    fn backoff_delay_doubles_then_caps() {
+        let policy = RetryPolicy {
+            attempts: 8,
+            base_delay: Duration::from_millis(50),
+            max_delay: Duration::from_secs(2),
+        };
+        assert_eq!(backoff_delay(policy, 0), Duration::from_millis(50));
+        assert_eq!(backoff_delay(policy, 1), Duration::from_millis(100));
+        assert_eq!(backoff_delay(policy, 2), Duration::from_millis(200));
+        assert_eq!(backoff_delay(policy, 5), Duration::from_millis(1600));
+        assert_eq!(backoff_delay(policy, 6), Duration::from_secs(2));
+        assert_eq!(backoff_delay(policy, 40), Duration::from_secs(2));
+        assert_eq!(backoff_delay(policy, u32::MAX), Duration::from_secs(2));
     }
 
     #[test]

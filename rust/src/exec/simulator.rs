@@ -39,6 +39,24 @@
 //!                         free-running per-iteration server round-trips
 //!                         in between (the parameter-server pattern whose
 //!                         bandwidth appetite the paper criticizes).
+//!
+//! # Hostile-network scenarios
+//!
+//! [`run_with_scenario`] layers a [`ScenarioSpec`] over the event loop:
+//! per-worker latency/delay draws are added to upload arrival times
+//! (sampled from one dedicated [`Pcg64`] stream in serialized event
+//! order, so every thread width replays the same noise), worker deaths
+//! and rejoins become first-class [`EventKind::Death`] /
+//! [`EventKind::Rejoin`] queue entries (the server evicts or re-admits
+//! the worker's delta contribution, keeping `x` the exact mean over the
+//! live workers), and a bounded-staleness knob parks async uploads
+//! computed against a view older than τ server updates — the parked
+//! upload is discarded (a parked `Delta`'s `sent` bookkeeping is rolled
+//! back so the contribution is re-included next round; a parked D-SAGA
+//! table increment is genuinely lost, the documented cost of dropping),
+//! the server charges its service time, and the worker gets a fresh
+//! view. Everything the scenario machinery did is reported in
+//! [`SimReport::scenario`].
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -47,6 +65,7 @@ use std::sync::Arc;
 use crate::data::shard::ShardedDataset;
 use crate::dist::local::{LocalNode, RoundMachine, RoundOutput};
 use crate::dist::messages::{GlobalView, Upload};
+use crate::dist::scenario::{ScenarioReport, ScenarioSpec};
 use crate::dist::server::ServerState;
 use crate::dist::DistConfig;
 use crate::exec::cost_model::CostModel;
@@ -55,6 +74,7 @@ use crate::metrics::counters::Counters;
 use crate::metrics::recorder::{RunTrace, Sample, Series};
 use crate::model::glm::Problem;
 use crate::model::gradients;
+use crate::util::math;
 use crate::util::rng::Pcg64;
 
 /// Simulator knobs beyond the algorithm config.
@@ -101,6 +121,12 @@ enum EventKind {
     /// The server's reply reaches worker `s`, which absorbs it and
     /// computes its next round (charging virtual compute time).
     Reply { s: usize, view: GlobalView },
+    /// Scenario: worker `s` crashes at this instant (its in-flight upload
+    /// was already dropped); the server evicts its contribution.
+    Death { s: usize },
+    /// Scenario: worker `s` rejoins; the server re-admits it at a zero
+    /// contribution and hands it a fresh view.
+    Rejoin { s: usize },
 }
 
 struct Event {
@@ -148,6 +174,8 @@ pub struct SimReport {
     pub rounds_per_worker: Vec<u32>,
     /// Simulated events processed.
     pub events: u64,
+    /// What the hostile-network machinery did (`None` on a calm run).
+    pub scenario: Option<ScenarioReport>,
 }
 
 /// Run a distributed algorithm on the simulated cluster.
@@ -157,7 +185,23 @@ pub fn run(
     cfg: DistConfig,
     params: SimParams,
 ) -> SimReport {
-    Sim::new(problem, data, cfg, params).run()
+    run_with_scenario(problem, data, cfg, params, None)
+}
+
+/// Run with a hostile-network [`ScenarioSpec`] layered over the event
+/// loop (`None` = calm network, identical to [`run`]). Panics if the
+/// spec fails [`ScenarioSpec::validate`] for this algorithm/topology —
+/// callers with user input should validate first for a friendly error.
+pub fn run_with_scenario(
+    problem: Problem,
+    data: &ShardedDataset,
+    cfg: DistConfig,
+    params: SimParams,
+    scenario: Option<&ScenarioSpec>,
+) -> SimReport {
+    Sim::new(problem, data, cfg, params)
+        .with_scenario(scenario)
+        .run()
 }
 
 /// Execute a batch of compute halves, fanning out across up to `threads`
@@ -210,6 +254,63 @@ fn compute_halves<'data>(
     outs
 }
 
+/// Live scenario state: the spec, its dedicated RNG stream, per-worker
+/// churn schedule, staleness birth stamps, and — when deaths are
+/// configured — the running sum of each worker's *applied* deltas (the
+/// exact contribution the server must evict; an upload lost in flight
+/// advanced the worker's `sent` state but never reached the server, so
+/// the engine tracks applications, not sends).
+struct ScenarioRun {
+    spec: ScenarioSpec,
+    rng: Pcg64,
+    alive: Vec<bool>,
+    /// Pending death round per worker (cleared once the death fires so a
+    /// rejoined worker does not die again).
+    death_round: Vec<Option<u64>>,
+    /// Rejoin delay per worker, consumed at death time.
+    rejoin_after: Vec<Option<f64>>,
+    /// `server.updates` at the instant each worker's last view was sent
+    /// (staleness age = updates now − born then).
+    born: Vec<u64>,
+    track_contrib: bool,
+    contrib_x: Vec<Vec<f32>>,
+    contrib_gbar: Vec<Vec<f32>>,
+    stats: ScenarioReport,
+}
+
+impl ScenarioRun {
+    fn new(spec: &ScenarioSpec, seed: u64, p: usize, d: usize) -> ScenarioRun {
+        let mut death_round = vec![None; p];
+        for dsp in &spec.deaths {
+            death_round[dsp.worker] = Some(dsp.round);
+        }
+        let mut rejoin_after = vec![None; p];
+        for r in &spec.rejoins {
+            rejoin_after[r.worker] = Some(r.after_s);
+        }
+        let track_contrib = !spec.deaths.is_empty();
+        let zeros = || {
+            if track_contrib {
+                vec![vec![0.0f32; d]; p]
+            } else {
+                Vec::new()
+            }
+        };
+        ScenarioRun {
+            rng: Pcg64::new(seed ^ 0x5CE4_AD10).split(spec.seed_salt),
+            alive: vec![true; p],
+            death_round,
+            rejoin_after,
+            born: vec![0; p],
+            track_contrib,
+            contrib_x: zeros(),
+            contrib_gbar: zeros(),
+            stats: ScenarioReport::default(),
+            spec: spec.clone(),
+        }
+    }
+}
+
 struct Sim<'a> {
     problem: Problem,
     data: &'a ShardedDataset,
@@ -234,6 +335,7 @@ struct Sim<'a> {
     converged: bool,
     events: u64,
     now: f64,
+    scn: Option<ScenarioRun>,
 }
 
 impl<'a> Sim<'a> {
@@ -286,7 +388,22 @@ impl<'a> Sim<'a> {
             converged: false,
             events: 0,
             now: 0.0,
+            scn: None,
         }
+    }
+
+    fn with_scenario(mut self, spec: Option<&ScenarioSpec>) -> Self {
+        if let Some(spec) = spec {
+            spec.validate(self.cfg.algorithm, self.cfg.p)
+                .expect("scenario spec rejected for this run");
+            self.scn = Some(ScenarioRun::new(
+                spec,
+                self.cfg.seed,
+                self.cfg.p,
+                self.data.d(),
+            ));
+        }
+        self
     }
 
     fn push(&mut self, t: f64, kind: EventKind) {
@@ -311,6 +428,11 @@ impl<'a> Sim<'a> {
         self.counters.add_compute_batch();
         let outs = compute_halves(&mut self.machines, &mut items, self.params.threads);
         for (item, out) in items.iter().zip(outs) {
+            debug_assert!(
+                self.scn.as_ref().is_none_or(|scn| scn.alive[item.s]),
+                "dead worker {} computed a round",
+                item.s
+            );
             let Some(out) = out else {
                 continue; // round budget exhausted: worker goes quiet
             };
@@ -320,9 +442,39 @@ impl<'a> Sim<'a> {
             self.counters.add_iterations(out.iters);
             // Ready (freeze marker) charges zero evals => zero compute time
             let compute = self.params.cost.block_time(out.evals, self.speeds[item.s]);
+            // Scenario processing runs in this serial loop — item order IS
+            // the serialized event order, so sampling here keeps every
+            // thread width bit-identical.
+            if let Some(scn) = &mut self.scn {
+                // Death: the worker crashes completing this round. Its
+                // compute was spent, but the upload never hits the wire —
+                // no bytes charged, no Arrive scheduled, and the worker's
+                // `sent` state is now ahead of the server (which is why
+                // eviction uses the engine-tracked applied contributions).
+                if let Some(r) = scn.death_round[item.s] {
+                    if self.machines[item.s].rounds() as u64 >= r {
+                        self.push(item.t0 + compute, EventKind::Death { s: item.s });
+                        continue;
+                    }
+                }
+            }
+            let mut extra = 0.0;
+            if let Some(scn) = &mut self.scn {
+                // straggler latency on the worker->server leg
+                if let Some(dist) = scn.spec.latency_for(item.s) {
+                    extra += dist.sample(&mut scn.rng);
+                }
+                // random extra delay (delayed uploads naturally reorder
+                // behind faster peers in the event queue)
+                if scn.spec.delay_prob > 0.0 && scn.rng.next_f64() < scn.spec.delay_prob {
+                    extra += scn.spec.delay.expect("validated").sample(&mut scn.rng);
+                    scn.stats.delayed += 1;
+                }
+                scn.stats.extra_latency_s += extra;
+            }
             let bytes = out.upload.bytes();
             self.counters.add_frame_bytes(bytes);
-            let arrive = item.t0 + compute + self.cfg.network.transfer_time(bytes);
+            let arrive = item.t0 + compute + extra + self.cfg.network.transfer_time(bytes);
             self.push(
                 arrive,
                 EventKind::Arrive {
@@ -359,13 +511,117 @@ impl<'a> Sim<'a> {
 
     /// Server half of an arrival: barrier kinds collect in the server
     /// inbox, the rest apply immediately — both strictly serialized in
-    /// virtual-time order.
+    /// virtual-time order. With a bounded-staleness scenario, an async
+    /// upload computed against a view older than τ server updates is
+    /// parked instead of applied.
     fn arrive(&mut self, t: f64, s: usize, upload: Upload) {
         if upload.is_barrier() {
             self.barrier_collect(t, s, upload);
+        } else if self.stale_should_park(s) {
+            self.park_stale(t, s, upload);
         } else {
             self.async_apply(t, s, upload);
         }
+    }
+
+    /// Bounded-staleness decision for an async upload from worker `s`;
+    /// updates the age statistics as a side effect.
+    fn stale_should_park(&mut self, s: usize) -> bool {
+        let updates = self.server.updates;
+        let Some(scn) = &mut self.scn else {
+            return false;
+        };
+        let age = updates.saturating_sub(scn.born[s]);
+        match scn.spec.staleness_tau {
+            Some(tau) if age > tau => {
+                scn.stats.stale_parked += 1;
+                true
+            }
+            // age is tracked even unbounded, so a sweep can show what
+            // the bound would have cut
+            _ => {
+                scn.stats.max_applied_age = scn.stats.max_applied_age.max(age);
+                false
+            }
+        }
+    }
+
+    /// Park a too-stale async upload: the server charges its service time
+    /// (inspecting the frame is not free, and the spent budget guarantees
+    /// termination) but applies nothing; the worker gets a reply so it
+    /// keeps running against fresher state. A parked `Delta`'s `sent`
+    /// bookkeeping is rolled back so the next delta re-includes the
+    /// dropped movement; a parked EASGD push echoes the worker's own
+    /// iterate back (nothing exchanged); a parked PS-SVRG step is simply
+    /// a lost gradient step.
+    fn park_stale(&mut self, t: f64, s: usize, upload: Upload) {
+        let start = self.server_free_at.max(t);
+        let done = start + self.cfg.network.server_service_s;
+        self.server_free_at = done;
+        let view = match &upload {
+            Upload::Delta { .. } => {
+                self.machines[s].unsend_delta(&upload);
+                self.server.view()
+            }
+            Upload::ElasticPush { x } => GlobalView {
+                x: x.clone(),
+                gbar: Vec::new(),
+            },
+            _ => self.server.view(),
+        };
+        self.send_reply(done, s, view);
+    }
+
+    /// Scenario: worker `s` crashes. Its contribution (the sum of every
+    /// delta the server actually applied for it) is evicted so the
+    /// server's `x` snaps to the exact mean over the survivors, and a
+    /// rejoin is scheduled if configured.
+    fn worker_death(&mut self, t: f64, s: usize) {
+        let d = self.data.d();
+        let scn = self.scn.as_mut().expect("death event without a scenario");
+        scn.alive[s] = false;
+        scn.death_round[s] = None; // a rejoined worker must not die again
+        scn.stats.deaths += 1;
+        let cx = std::mem::replace(&mut scn.contrib_x[s], vec![0.0; d]);
+        let cg = std::mem::replace(&mut scn.contrib_gbar[s], vec![0.0; d]);
+        let rejoin = scn.rejoin_after[s].take();
+        self.server.evict_contribution(&cx, &cg);
+        if let Some(after) = rejoin {
+            self.push(t + after, EventKind::Rejoin { s });
+        }
+    }
+
+    /// Scenario: worker `s` rejoins. The server re-admits it at a zero
+    /// contribution (rescaling its mean), the worker forgets what it last
+    /// sent — so its next delta carries its full state — and a fresh view
+    /// gets it computing again.
+    fn worker_rejoin(&mut self, t: f64, s: usize) {
+        {
+            let scn = self.scn.as_mut().expect("rejoin event without a scenario");
+            scn.alive[s] = true;
+            scn.stats.rejoins += 1;
+        }
+        self.server.admit_zero_contribution();
+        self.machines[s].reset_contribution();
+        let start = self.server_free_at.max(t);
+        let done = start + self.cfg.network.server_service_s;
+        self.server_free_at = done;
+        let view = self.server.view();
+        self.send_reply(done, s, view);
+    }
+
+    /// Charge a reply's wire bytes, stamp the receiver's staleness birth
+    /// mark, and schedule its delivery. Every reply the simulator sends
+    /// goes through here.
+    fn send_reply(&mut self, done: f64, s: usize, view: GlobalView) {
+        let updates = self.server.updates;
+        if let Some(scn) = &mut self.scn {
+            scn.born[s] = updates;
+        }
+        let bytes = view.bytes();
+        self.counters.add_frame_bytes(bytes);
+        let reply_at = done + self.cfg.network.transfer_time(bytes);
+        self.push(reply_at, EventKind::Reply { s, view });
     }
 
     /// Server applies an async upload (FIFO lock model) and replies.
@@ -375,8 +631,16 @@ impl<'a> Sim<'a> {
         self.server_free_at = done;
         self.counters.add_server_round();
         let view = match &upload {
-            Upload::Delta { .. } => {
+            Upload::Delta { dx, dgbar } => {
                 self.server.apply_delta(&upload);
+                // churn bookkeeping: remember what the server now holds
+                // for this worker, so a death can evict exactly that
+                if let Some(scn) = &mut self.scn {
+                    if scn.track_contrib {
+                        math::add_assign(&mut scn.contrib_x[s], dx);
+                        math::add_assign(&mut scn.contrib_gbar[s], dgbar);
+                    }
+                }
                 self.server.view()
             }
             Upload::ElasticPush { .. } => GlobalView {
@@ -394,10 +658,7 @@ impl<'a> Sim<'a> {
             self.applies_since_record = 0;
             self.record(done);
         }
-        let bytes = view.bytes();
-        self.counters.add_frame_bytes(bytes);
-        let reply_at = done + self.cfg.network.transfer_time(bytes);
-        self.push(reply_at, EventKind::Reply { s, view });
+        self.send_reply(done, s, view);
     }
 
     /// Barrier collection: deposit into the server inbox; when all p have
@@ -422,10 +683,7 @@ impl<'a> Sim<'a> {
         // broadcast
         for s in 0..self.cfg.p {
             let view = self.server.view();
-            let bytes = view.bytes();
-            self.counters.add_frame_bytes(bytes);
-            let reply_at = done + self.cfg.network.transfer_time(bytes);
-            self.push(reply_at, EventKind::Reply { s, view });
+            self.send_reply(done, s, view);
         }
     }
 
@@ -477,6 +735,8 @@ impl<'a> Sim<'a> {
             self.now = ev.t;
             match ev.kind {
                 EventKind::Arrive { s, upload } => self.arrive(ev.t, s, upload),
+                EventKind::Death { s } => self.worker_death(ev.t, s),
+                EventKind::Rejoin { s } => self.worker_rejoin(ev.t, s),
                 EventKind::Reply { .. } => unreachable!("replies drained above"),
             }
         }
@@ -499,6 +759,7 @@ impl<'a> Sim<'a> {
             counters: self.counters.snapshot(),
             rounds_per_worker: self.machines.iter().map(|m| m.rounds() as u32).collect(),
             events: self.events,
+            scenario: self.scn.map(|scn| scn.stats),
         }
     }
 
@@ -666,6 +927,95 @@ mod tests {
         assert_eq!(serial.trace.elapsed_s.to_bits(), parallel.trace.elapsed_s.to_bits());
         // barrier rounds batch all p compute halves together
         assert!(serial.counters.compute_batches >= cfg.max_rounds as u64);
+    }
+
+    /// A scenario adding the same constant latency to every worker delays
+    /// the clock but cannot change the math: same arrival order, same
+    /// iterate, same event count — only virtual time stretches.
+    #[test]
+    fn uniform_constant_scenario_latency_shifts_only_the_clock() {
+        let data = toy_sharded(3, 64, 5);
+        let mut cfg = base_cfg(Algorithm::CentralVrAsync, 3);
+        cfg.tol = 0.0;
+        cfg.max_rounds = 6;
+        let calm = run(Problem::Ridge, &data, cfg, SimParams::analytic(5));
+        let spec = ScenarioSpec {
+            default_latency: Some(crate::dist::scenario::LatencyDist::Constant(0.01)),
+            ..Default::default()
+        };
+        let noisy = run_with_scenario(
+            Problem::Ridge,
+            &data,
+            cfg,
+            SimParams::analytic(5),
+            Some(&spec),
+        );
+        assert_eq!(calm.trace.x, noisy.trace.x, "constant latency changed the math");
+        assert_eq!(calm.events, noisy.events);
+        assert!(noisy.trace.elapsed_s > calm.trace.elapsed_s);
+        let stats = noisy.scenario.expect("scenario stats present");
+        assert!(stats.extra_latency_s > 0.0);
+        assert_eq!(stats.deaths, 0);
+        assert_eq!(stats.stale_parked, 0);
+    }
+
+    /// A worker death freezes its round count, evicts its contribution,
+    /// and the survivors finish their full budget.
+    #[test]
+    fn worker_death_freezes_rounds_and_run_continues() {
+        use crate::dist::scenario::DeathSpec;
+        let data = toy_sharded(3, 64, 5);
+        let mut cfg = base_cfg(Algorithm::CentralVrAsync, 3);
+        cfg.tol = 0.0;
+        cfg.max_rounds = 8;
+        let spec = ScenarioSpec {
+            deaths: vec![DeathSpec { worker: 1, round: 3 }],
+            ..Default::default()
+        };
+        let rep = run_with_scenario(
+            Problem::Ridge,
+            &data,
+            cfg,
+            SimParams::analytic(5),
+            Some(&spec),
+        );
+        let stats = rep.scenario.expect("scenario stats present");
+        assert_eq!(stats.deaths, 1);
+        assert_eq!(stats.rejoins, 0);
+        assert_eq!(rep.rounds_per_worker[1], 3, "dead worker's rounds freeze");
+        assert_eq!(rep.rounds_per_worker[0], 8, "survivors finish the budget");
+        assert_eq!(rep.rounds_per_worker[2], 8);
+    }
+
+    /// After a rejoin the worker is computing again: its round count
+    /// grows past the death round and the server re-admitted it.
+    #[test]
+    fn rejoin_resumes_the_dead_worker() {
+        use crate::dist::scenario::{DeathSpec, RejoinSpec};
+        let data = toy_sharded(3, 64, 5);
+        let mut cfg = base_cfg(Algorithm::CentralVrAsync, 3);
+        cfg.tol = 0.0;
+        cfg.max_rounds = 10;
+        let spec = ScenarioSpec {
+            deaths: vec![DeathSpec { worker: 1, round: 2 }],
+            rejoins: vec![RejoinSpec { worker: 1, after_s: 1e-3 }],
+            ..Default::default()
+        };
+        let rep = run_with_scenario(
+            Problem::Ridge,
+            &data,
+            cfg,
+            SimParams::analytic(5),
+            Some(&spec),
+        );
+        let stats = rep.scenario.expect("scenario stats present");
+        assert_eq!(stats.deaths, 1);
+        assert_eq!(stats.rejoins, 1);
+        assert!(
+            rep.rounds_per_worker[1] > 2,
+            "rejoined worker must compute again: {:?}",
+            rep.rounds_per_worker
+        );
     }
 
     #[test]

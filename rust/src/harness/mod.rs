@@ -8,6 +8,7 @@ pub mod fig1;
 pub mod fig2;
 pub mod fig3;
 pub mod report;
+pub mod scenario;
 pub mod table1;
 
 /// Scale knob shared by the harnesses: `full` approaches the paper's sizes

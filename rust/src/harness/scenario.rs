@@ -1,0 +1,280 @@
+//! Hostile-network sweep — Fig-2-style harness over the scenario engine.
+//!
+//! Runs the two async algorithms the staleness bound bites hardest
+//! (CVR-Async and PS-SVRG) over a latency-profile x staleness-bound grid
+//! on the simulated cluster, and writes convergence-vs-staleness curves
+//! to `results/BENCH_scenario_sweep.json`. Every cell is executed twice
+//! — serial driver and a 3-thread compute fan-out — and the endpoints
+//! are asserted bit-identical before anything is recorded, so the
+//! artifact doubles as a determinism check at sweep scale.
+//!
+//! Entry points: `centralvr figure scenario` (CLI) and the
+//! `scenario_sweep` section of `cargo bench --bench hot_paths` (CI).
+
+use anyhow::{ensure, Result};
+
+use crate::config::schema::Algorithm;
+use crate::data::shard::ShardedDataset;
+use crate::data::synth;
+use crate::dist::scenario::{LatencyDist, ScenarioSpec};
+use crate::exec::simulator::{self, SimParams, SimReport};
+use crate::harness::{fig2, report, Scale};
+use crate::model::glm::Problem;
+
+/// The algorithms with an async upload stream for staleness to park.
+pub const ALGOS: [Algorithm; 2] = [Algorithm::CentralVrAsync, Algorithm::PsSvrg];
+
+/// Staleness bounds swept, loosest to harshest. `None` = unbounded (the
+/// baseline every bounded curve is read against).
+pub const TAUS: [Option<u64>; 3] = [None, Some(16), Some(4)];
+
+/// One latency profile of the sweep grid.
+pub struct LatencyProfile {
+    pub name: &'static str,
+    pub spec: fn() -> ScenarioSpec,
+}
+
+fn calm() -> ScenarioSpec {
+    ScenarioSpec { name: "calm".into(), ..Default::default() }
+}
+
+/// Everyone jitters: uniform extra latency plus occasional delay draws
+/// that reorder messages behind faster peers.
+fn jitter() -> ScenarioSpec {
+    ScenarioSpec {
+        name: "jitter".into(),
+        default_latency: Some(LatencyDist::Uniform { lo: 1e-5, hi: 3e-4 }),
+        delay_prob: 0.2,
+        delay: Some(LatencyDist::Uniform { lo: 1e-4, hi: 1e-3 }),
+        ..Default::default()
+    }
+}
+
+/// One brutal straggler: worker 0 draws Pareto latency with a near-
+/// infinite-mean tail while its peers run clean — the regime where the
+/// staleness bound visibly changes what the server applies.
+fn straggler() -> ScenarioSpec {
+    ScenarioSpec {
+        name: "straggler".into(),
+        worker_latency: [(0usize, LatencyDist::Pareto { scale: 5e-4, alpha: 1.1 })]
+            .into_iter()
+            .collect(),
+        ..Default::default()
+    }
+}
+
+pub const PROFILES: [LatencyProfile; 3] = [
+    LatencyProfile { name: "calm", spec: calm },
+    LatencyProfile { name: "jitter", spec: jitter },
+    LatencyProfile { name: "straggler", spec: straggler },
+];
+
+/// Sweep geometry per scale: (samples/worker, dimension, workers).
+pub fn geometry(scale: Scale) -> (usize, usize, usize) {
+    match scale {
+        Scale::Full => (500, 50, 16),
+        Scale::Quick => (150, 20, 6),
+    }
+}
+
+/// One cell of the sweep grid, with its convergence curve.
+pub struct SweepCell {
+    pub algorithm: Algorithm,
+    pub profile: &'static str,
+    pub staleness_tau: Option<u64>,
+    pub rep: SimReport,
+}
+
+/// Run the full grid. Each cell runs serial AND with a 3-thread compute
+/// fan-out; the two must agree to the bit or the sweep fails — hostile
+/// scheduling must never leak into the math.
+pub fn sweep(scale: Scale) -> Result<Vec<SweepCell>> {
+    let (n_per, d, p) = geometry(scale);
+    let mut out = Vec::new();
+    for algo in ALGOS {
+        let data = ShardedDataset::from_shards(synth::toy_least_squares_per_worker(
+            p, n_per, d, 31,
+        ));
+        let mut cfg = fig2::dist_config(Problem::Ridge, algo, p, n_per, d);
+        cfg.tol = 0.0; // fixed budget: every cell sees the same work
+        cfg.max_rounds = match algo {
+            Algorithm::PsSvrg => 40 * p,
+            _ => 30,
+        };
+        for profile in &PROFILES {
+            for tau in TAUS {
+                let mut spec = (profile.spec)();
+                spec.staleness_tau = tau;
+                spec.validate(algo, p)?;
+                let scenario = spec.is_active().then_some(&spec);
+                let rep = simulator::run_with_scenario(
+                    Problem::Ridge,
+                    &data,
+                    cfg,
+                    SimParams::analytic(d),
+                    scenario,
+                );
+                let rep3 = simulator::run_with_scenario(
+                    Problem::Ridge,
+                    &data,
+                    cfg,
+                    SimParams::analytic(d).with_threads(3),
+                    scenario,
+                );
+                ensure!(
+                    rep.trace.x.iter().map(|v| v.to_bits()).eq(
+                        rep3.trace.x.iter().map(|v| v.to_bits())
+                    ) && rep.scenario == rep3.scenario,
+                    "{} {} tau={tau:?}: scenario run not bit-identical across thread widths",
+                    algo.name(),
+                    profile.name
+                );
+                out.push(SweepCell {
+                    algorithm: algo,
+                    profile: profile.name,
+                    staleness_tau: tau,
+                    rep,
+                });
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn json_opt_u64(v: Option<u64>) -> String {
+    v.map_or_else(|| "null".to_string(), |t| t.to_string())
+}
+
+fn json_opt_f64(v: Option<f64>) -> String {
+    v.map_or_else(|| "null".to_string(), |t| format!("{t:.6}"))
+}
+
+/// Render the sweep as the `BENCH_scenario_sweep.json` artifact.
+pub fn to_json(scale: Scale, cells: &[SweepCell]) -> String {
+    let (n_per, d, p) = geometry(scale);
+    let mut runs = Vec::new();
+    for c in cells {
+        let s = c.rep.scenario.unwrap_or_default();
+        let curve: Vec<String> = c
+            .rep
+            .trace
+            .series
+            .points
+            .iter()
+            .map(|pt| format!("[{:.6}, {:.6e}]", pt.time_s, pt.rel_grad_norm))
+            .collect();
+        runs.push(format!(
+            "    {{\"algorithm\": \"{}\", \"profile\": \"{}\", \"staleness_tau\": {}, \
+             \"converged\": {}, \"final_rel\": {:.6e}, \"t_virtual_s\": {:.6}, \
+             \"time_to_tol_s\": {}, \"stale_parked\": {}, \"max_applied_age\": {}, \
+             \"delayed\": {}, \"deaths\": {}, \"extra_latency_s\": {:.6}, \
+             \"curve\": [{}]}}",
+            c.algorithm.name(),
+            c.profile,
+            json_opt_u64(c.staleness_tau),
+            c.rep.trace.converged,
+            c.rep.trace.series.final_rel(),
+            c.rep.trace.elapsed_s,
+            json_opt_f64(c.rep.trace.time_to(1e-4)),
+            s.stale_parked,
+            s.max_applied_age,
+            s.delayed,
+            s.deaths,
+            s.extra_latency_s,
+            curve.join(", "),
+        ));
+    }
+    format!(
+        "{{\n  \"bench\": \"scenario_sweep\",\n  \"workload\": \"ridge n_per={n_per} \
+         d={d} p={p}\",\n  \"tolerance\": 1e-4,\n  \"runs\": [\n{}\n  ]\n}}\n",
+        runs.join(",\n")
+    )
+}
+
+/// Run the sweep, print the grid as markdown, write the JSON artifact.
+pub fn report(scale: Scale) -> Result<()> {
+    let cells = sweep(scale)?;
+    let mut rows = Vec::new();
+    for c in &cells {
+        let s = c.rep.scenario.unwrap_or_default();
+        rows.push(vec![
+            c.algorithm.name().to_string(),
+            c.profile.to_string(),
+            c.staleness_tau.map_or("∞".into(), |t| t.to_string()),
+            report::sci(c.rep.trace.series.final_rel()),
+            report::fmt_opt_f64(c.rep.trace.time_to(1e-4)),
+            format!("{}", s.stale_parked),
+            format!("{}", s.max_applied_age),
+        ]);
+    }
+    report::md_table(
+        "Hostile-network sweep — convergence vs staleness bound (virtual seconds to 1e-4)",
+        &["algorithm", "profile", "τ", "final rel", "t to 1e-4 (s)", "parked", "max age"],
+        &rows,
+    );
+    let dir = report::results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("BENCH_scenario_sweep.json");
+    std::fs::write(&path, to_json(scale, &cells))?;
+    println!("\nscenario sweep -> {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The harness's own profiles must pass validation for both swept
+    /// algorithms at both scales.
+    #[test]
+    fn profiles_validate_for_all_swept_algorithms() {
+        for scale in [Scale::Quick, Scale::Full] {
+            let (_, _, p) = geometry(scale);
+            for profile in &PROFILES {
+                for algo in ALGOS {
+                    for tau in TAUS {
+                        let mut spec = (profile.spec)();
+                        spec.staleness_tau = tau;
+                        spec.validate(algo, p).unwrap();
+                    }
+                }
+            }
+        }
+    }
+
+    /// A tiny two-cell slice of the sweep: the harsh staleness bound must
+    /// actually park uploads under the straggler profile, and the JSON
+    /// must carry every cell.
+    #[test]
+    fn straggler_cell_parks_stale_uploads() {
+        let (n_per, d, p) = (40usize, 8usize, 3usize);
+        let data = ShardedDataset::from_shards(synth::toy_least_squares_per_worker(
+            p, n_per, d, 31,
+        ));
+        let mut cfg = fig2::dist_config(Problem::Ridge, Algorithm::CentralVrAsync, p, n_per, d);
+        cfg.tol = 0.0;
+        cfg.max_rounds = 12;
+        let mut spec = straggler();
+        spec.staleness_tau = Some(2);
+        spec.validate(Algorithm::CentralVrAsync, p).unwrap();
+        let rep = simulator::run_with_scenario(
+            Problem::Ridge,
+            &data,
+            cfg,
+            SimParams::analytic(d),
+            Some(&spec),
+        );
+        let s = rep.scenario.unwrap();
+        assert!(s.stale_parked > 0, "straggler under tau=2 should park: {s:?}");
+        assert!(s.max_applied_age <= 2, "bound violated: {s:?}");
+        let cells = vec![SweepCell {
+            algorithm: Algorithm::CentralVrAsync,
+            profile: "straggler",
+            staleness_tau: Some(2),
+            rep,
+        }];
+        let json = to_json(Scale::Quick, &cells);
+        assert!(json.contains("\"staleness_tau\": 2"), "{json}");
+        assert!(json.contains("\"curve\": [["), "{json}");
+    }
+}

@@ -1,0 +1,208 @@
+//! Scenario-engine determinism: a hostile-network run — stragglers,
+//! delays, churn, bounded staleness — is a pure function of (spec, seed),
+//! bit-identical at any `--sim-threads` width. The scenario RNG is drawn
+//! in serialized event order, never on worker threads, so the compute
+//! fan-out cannot perturb a single sample.
+//!
+//! Also pins the staleness bound itself: with `staleness_tau = Some(t)`,
+//! no applied async upload may be older than `t` server updates.
+
+use centralvr::config::schema::Algorithm;
+use centralvr::data::shard::ShardedDataset;
+use centralvr::data::synth;
+use centralvr::dist::scenario::{DeathSpec, LatencyDist, RejoinSpec, ScenarioSpec};
+use centralvr::dist::DistConfig;
+use centralvr::exec::simulator::{self, SimParams, SimReport};
+use centralvr::model::glm::Problem;
+
+const P: usize = 4;
+const D: usize = 8;
+
+fn data() -> ShardedDataset {
+    ShardedDataset::from_shards(synth::toy_least_squares_per_worker(P, 40, D, 7))
+}
+
+fn cfg(algorithm: Algorithm) -> DistConfig {
+    DistConfig {
+        algorithm,
+        p: P,
+        eta: 0.01,
+        max_rounds: 10,
+        tol: 0.0,
+        seed: 29,
+        record_every: 2,
+        ..Default::default()
+    }
+}
+
+/// The full hostile kitchen sink for CVR-Async: heavy-tail straggler,
+/// jitter everywhere, delay/reorder, a death, a rejoin, and a staleness
+/// bound — every scenario code path drawing from the one RNG stream.
+fn hostile() -> ScenarioSpec {
+    ScenarioSpec {
+        name: "kitchen-sink".into(),
+        seed_salt: 3,
+        default_latency: Some(LatencyDist::Uniform { lo: 1e-5, hi: 4e-4 }),
+        worker_latency: [(2usize, LatencyDist::Pareto { scale: 2e-4, alpha: 1.2 })]
+            .into_iter()
+            .collect(),
+        delay_prob: 0.3,
+        delay: Some(LatencyDist::Uniform { lo: 1e-4, hi: 2e-3 }),
+        staleness_tau: Some(6),
+        deaths: vec![DeathSpec { worker: 1, round: 3 }],
+        rejoins: vec![RejoinSpec { worker: 1, after_s: 2e-3 }],
+    }
+}
+
+fn run_at(threads: usize, algorithm: Algorithm, spec: &ScenarioSpec) -> SimReport {
+    spec.validate(algorithm, P).unwrap();
+    let data = data();
+    simulator::run_with_scenario(
+        Problem::Ridge,
+        &data,
+        cfg(algorithm),
+        SimParams::analytic(D).with_threads(threads),
+        Some(spec),
+    )
+}
+
+/// Bitwise equality across every observable surface of a report.
+fn assert_identical(a: &SimReport, b: &SimReport, what: &str) {
+    assert_eq!(a.trace.grad_evals, b.trace.grad_evals, "{what}: grad_evals");
+    assert_eq!(a.trace.iterations, b.trace.iterations, "{what}: iterations");
+    assert_eq!(a.trace.converged, b.trace.converged, "{what}: converged");
+    assert_eq!(
+        a.trace.elapsed_s.to_bits(),
+        b.trace.elapsed_s.to_bits(),
+        "{what}: virtual clock"
+    );
+    assert_eq!(a.events, b.events, "{what}: event count");
+    assert_eq!(a.rounds_per_worker, b.rounds_per_worker, "{what}: rounds");
+    assert_eq!(a.counters, b.counters, "{what}: counters");
+    assert_eq!(a.scenario, b.scenario, "{what}: scenario report");
+    let xa: Vec<u32> = a.trace.x.iter().map(|v| v.to_bits()).collect();
+    let xb: Vec<u32> = b.trace.x.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(xa, xb, "{what}: final iterate bits");
+    assert_eq!(
+        a.trace.series.points.len(),
+        b.trace.series.points.len(),
+        "{what}: series length"
+    );
+    for (pa, pb) in a.trace.series.points.iter().zip(&b.trace.series.points) {
+        assert_eq!(
+            pa.rel_grad_norm.to_bits(),
+            pb.rel_grad_norm.to_bits(),
+            "{what}: series sample"
+        );
+        assert_eq!(pa.time_s.to_bits(), pb.time_s.to_bits(), "{what}: sample clock");
+    }
+}
+
+#[test]
+fn kitchen_sink_scenario_is_bit_identical_across_thread_widths() {
+    let spec = hostile();
+    let serial = run_at(1, Algorithm::CentralVrAsync, &spec);
+    let s = serial.scenario.unwrap();
+    // the scenario must actually exercise its machinery, or this test
+    // proves nothing
+    assert_eq!(s.deaths, 1, "{s:?}");
+    assert_eq!(s.rejoins, 1, "{s:?}");
+    assert!(s.delayed > 0, "{s:?}");
+    assert!(s.extra_latency_s > 0.0, "{s:?}");
+    for threads in [3usize, 8] {
+        let wide = run_at(threads, Algorithm::CentralVrAsync, &spec);
+        assert_identical(&serial, &wide, &format!("threads={threads}"));
+    }
+}
+
+#[test]
+fn staleness_scenario_is_bit_identical_for_ps_svrg() {
+    // PS-SVRG mixes barrier phases with an async GradStep stream; only
+    // the latter is subject to parking, and the mix must still replay
+    let spec = ScenarioSpec {
+        name: "ps-jitter".into(),
+        default_latency: Some(LatencyDist::Uniform { lo: 1e-5, hi: 5e-4 }),
+        staleness_tau: Some(5),
+        ..Default::default()
+    };
+    let serial = run_at(1, Algorithm::PsSvrg, &spec);
+    for threads in [3usize, 8] {
+        let wide = run_at(threads, Algorithm::PsSvrg, &spec);
+        assert_identical(&serial, &wide, &format!("ps-svrg threads={threads}"));
+    }
+}
+
+#[test]
+fn same_spec_same_seed_replays_and_salt_changes_the_draws() {
+    let spec = hostile();
+    let a = run_at(1, Algorithm::CentralVrAsync, &spec);
+    let b = run_at(1, Algorithm::CentralVrAsync, &spec);
+    assert_identical(&a, &b, "replay");
+    let salted = ScenarioSpec { seed_salt: 4, ..hostile() };
+    let c = run_at(1, Algorithm::CentralVrAsync, &salted);
+    // same faults, different noise realization
+    assert_eq!(a.scenario.unwrap().deaths, c.scenario.unwrap().deaths);
+    assert_ne!(
+        a.scenario.unwrap().extra_latency_s.to_bits(),
+        c.scenario.unwrap().extra_latency_s.to_bits(),
+        "seed_salt must select a different latency stream"
+    );
+}
+
+/// The bound itself: a brutal straggler under a tight staleness_tau gets
+/// its ancient uploads parked, and nothing older than tau is ever
+/// applied.
+#[test]
+fn staleness_bound_is_enforced() {
+    let tau = 2u64;
+    let spec = ScenarioSpec {
+        name: "bound".into(),
+        // worker 0 is orders of magnitude slower than its peers: by the
+        // time its uploads land, the server has moved far past tau
+        worker_latency: [(0usize, LatencyDist::Constant(0.5))].into_iter().collect(),
+        staleness_tau: Some(tau),
+        ..Default::default()
+    };
+    let rep = run_at(1, Algorithm::CentralVrAsync, &spec);
+    let s = rep.scenario.unwrap();
+    assert!(s.stale_parked > 0, "the straggler's uploads must be parked: {s:?}");
+    assert!(
+        s.max_applied_age <= tau,
+        "an upload older than tau={tau} was applied: {s:?}"
+    );
+
+    // same topology, no bound: the ancient uploads all apply
+    let unbounded = ScenarioSpec { staleness_tau: None, ..spec };
+    let rep = run_at(1, Algorithm::CentralVrAsync, &unbounded);
+    let s = rep.scenario.unwrap();
+    assert_eq!(s.stale_parked, 0, "{s:?}");
+    assert!(s.max_applied_age > tau, "the straggler should exceed tau: {s:?}");
+}
+
+/// A calm spec (empty knobs) must reproduce the plain engine exactly —
+/// the scenario plumbing itself costs nothing when inert.
+#[test]
+fn inert_scenario_matches_plain_run() {
+    let data = data();
+    let plain = simulator::run(
+        Problem::Ridge,
+        &data,
+        cfg(Algorithm::CentralVrAsync),
+        SimParams::analytic(D),
+    );
+    let spec = ScenarioSpec { name: "calm".into(), ..Default::default() };
+    let calm = simulator::run_with_scenario(
+        Problem::Ridge,
+        &data,
+        cfg(Algorithm::CentralVrAsync),
+        SimParams::analytic(D),
+        Some(&spec),
+    );
+    assert_eq!(plain.events, calm.events);
+    assert_eq!(plain.counters, calm.counters);
+    let xa: Vec<u32> = plain.trace.x.iter().map(|v| v.to_bits()).collect();
+    let xb: Vec<u32> = calm.trace.x.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(xa, xb, "inert scenario drifted from the plain engine");
+    assert_eq!(calm.scenario, Some(Default::default()));
+    assert_eq!(plain.scenario, None);
+}

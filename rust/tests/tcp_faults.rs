@@ -1,0 +1,215 @@
+//! Fault injection over real sockets: the physical subset of the
+//! hostile-network scenario engine. A worker OS process is killed
+//! mid-run (no Goodbye, the socket just vanishes) and the server must
+//! survive it — crash counted and logged, the surviving peers released
+//! from their dead barrier via Stop, every ledger still closed. Plus
+//! the reconnect path: workers launched before the server binds join
+//! via bounded-backoff retry.
+//!
+//! The kill test re-execs this test binary: the driver spawns
+//! `current_exe()` filtered to `helper_worker_process` with
+//! `TCP_FAULT_ROLE` set; without that env var the helper is a no-op, so
+//! a normal `cargo test` run sails through it.
+
+use std::net::TcpListener;
+use std::process::{Command, Stdio};
+use std::thread;
+use std::time::Duration;
+
+use centralvr::config::schema::Algorithm;
+use centralvr::data::shard::ShardedDataset;
+use centralvr::data::synth;
+use centralvr::dist::codec::Hello;
+use centralvr::dist::local::{LocalNode, RoundMachine};
+use centralvr::dist::transport::{self, RetryPolicy, ServeConfig, TcpClient};
+use centralvr::dist::DistConfig;
+use centralvr::model::glm::Problem;
+
+const P: usize = 3;
+const N_PER: usize = 32;
+const D: usize = 5;
+/// The killer completes this many rounds, then exits without a word.
+const KILL_AFTER_ROUNDS: usize = 3;
+
+fn toy() -> ShardedDataset {
+    ShardedDataset::from_shards(synth::toy_least_squares_per_worker(P, N_PER, D, 11))
+}
+
+fn cfg() -> DistConfig {
+    DistConfig {
+        algorithm: Algorithm::CentralVrSync,
+        p: P,
+        eta: 0.02,
+        max_rounds: 8,
+        tol: 0.0,
+        seed: 13,
+        record_every: P,
+        ..Default::default()
+    }
+}
+
+/// Re-exec target, not a test of its own: drives one worker process for
+/// the kill test. No-op unless the driver set `TCP_FAULT_ROLE`.
+#[test]
+fn helper_worker_process() {
+    let Ok(role) = std::env::var("TCP_FAULT_ROLE") else { return };
+    let addr = std::env::var("TCP_FAULT_ADDR").expect("driver sets TCP_FAULT_ADDR");
+    let (kind, s) = role.split_once(':').expect("TCP_FAULT_ROLE=kind:worker");
+    let s: usize = s.parse().expect("worker index");
+    let data = toy();
+    match kind {
+        // a well-behaved peer: full budget unless the server stops it
+        "clean" => {
+            let rep = transport::run_worker(
+                &addr,
+                s,
+                Problem::Ridge,
+                data.shard(s),
+                data.n_total(),
+                cfg(),
+            )
+            .expect("clean worker failed");
+            assert!(
+                rep.stopped_by_server,
+                "worker {s}: the kill should strand the barrier and draw a Stop"
+            );
+        }
+        // the canonical machine for a few rounds, then a process exit
+        // with no Goodbye — the socket dies as abruptly as a SIGKILL
+        "killer" => {
+            let c = cfg();
+            let shard = data.shard(s);
+            let mut machine =
+                RoundMachine::new(LocalNode::new(s, shard, Problem::Ridge, c, data.n_total()));
+            let hello = Hello {
+                s: s as u32,
+                p: c.p as u32,
+                n_s: shard.n() as u64,
+                d: D as u32,
+            };
+            let mut client = TcpClient::connect(&addr, hello).expect("killer connect");
+            while let Some(out) = machine.compute() {
+                match client.exchange(&out.upload).expect("killer exchange") {
+                    Some(view) => machine.absorb(view),
+                    None => break,
+                }
+                if machine.rounds() >= KILL_AFTER_ROUNDS {
+                    std::process::exit(0);
+                }
+            }
+            unreachable!("killer should die at round {KILL_AFTER_ROUNDS}, not finish");
+        }
+        other => panic!("unknown TCP_FAULT_ROLE kind {other:?}"),
+    }
+}
+
+fn spawn_worker(role: String, addr: &str) -> std::process::Child {
+    Command::new(std::env::current_exe().expect("current_exe"))
+        .args(["helper_worker_process", "--exact", "--nocapture"])
+        .env("TCP_FAULT_ROLE", role)
+        .env("TCP_FAULT_ADDR", addr)
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn worker process")
+}
+
+/// The acceptance scenario: kill one of three CVR-Sync worker processes
+/// mid-run. The server counts exactly one crash, Stops the two stranded
+/// survivors, collects their Goodbyes, and the byte books stay closed.
+#[test]
+fn kill_mid_run_winds_down_with_stop_goodbye_and_closed_books() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let scfg = ServeConfig {
+        p: P,
+        easgd_beta: 0.9,
+        // backstop only: EOF from the dead process arrives long before
+        read_timeout: Some(Duration::from_secs(60)),
+    };
+    let server = thread::spawn(move || transport::serve(listener, scfg).unwrap());
+    let children: Vec<_> = (0..P)
+        .map(|s| {
+            let kind = if s == P - 1 { "killer" } else { "clean" };
+            spawn_worker(format!("{kind}:{s}"), &addr)
+        })
+        .collect();
+    for (s, mut child) in children.into_iter().enumerate() {
+        let status = child.wait().expect("wait for worker process");
+        assert!(status.success(), "worker {s} process failed: {status}");
+    }
+    let rep = server.join().expect("server thread panicked");
+    assert_eq!(rep.crashes, 1, "exactly the killed worker is a crash");
+    assert_eq!(rep.goodbyes, (P - 1) as u64, "both survivors say Goodbye");
+    assert_eq!(rep.stops, (P - 1) as u64, "both survivors draw a Stop");
+    // the invariant that keeps the simulator's cost model honest must
+    // survive a crash mid-protocol
+    assert_eq!(rep.bytes_on_wire, rep.bytes_accounted, "books drifted across the crash");
+    assert!(rep.updates >= KILL_AFTER_ROUNDS as u64, "pre-kill rounds were applied");
+    assert!(rep.x.iter().all(|v| v.is_finite()));
+}
+
+/// Workers launched before the server binds must join via
+/// [`connect_with_retry`]'s bounded backoff and run to a clean finish.
+#[test]
+fn workers_reconnect_when_the_server_binds_late() {
+    // reserve a port, then free it: the first connect attempts are
+    // refused until the server thread binds it for real
+    let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = probe.local_addr().unwrap().to_string();
+    drop(probe);
+    let data = toy();
+    let c = cfg();
+    let (rep, wreps) = thread::scope(|scope| {
+        let server = {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                thread::sleep(Duration::from_millis(250));
+                let listener = TcpListener::bind(&addr).expect("rebind reserved port");
+                let scfg = ServeConfig { p: P, easgd_beta: 0.9, read_timeout: None };
+                transport::serve(listener, scfg).unwrap()
+            })
+        };
+        let workers: Vec<_> = (0..P)
+            .map(|s| {
+                let addr = addr.clone();
+                let data = &data;
+                scope.spawn(move || {
+                    transport::run_worker(
+                        &addr,
+                        s,
+                        Problem::Ridge,
+                        data.shard(s),
+                        data.n_total(),
+                        c,
+                    )
+                    .unwrap()
+                })
+            })
+            .collect();
+        let wreps: Vec<_> = workers.into_iter().map(|h| h.join().unwrap()).collect();
+        (server.join().unwrap(), wreps)
+    });
+    assert_eq!(rep.goodbyes, P as u64);
+    assert_eq!(rep.crashes, 0);
+    assert_eq!(rep.stops, 0);
+    assert!(wreps.iter().all(|w| w.rounds == c.max_rounds));
+    assert_eq!(rep.bytes_on_wire, rep.bytes_accounted);
+}
+
+/// The retry loop gives up with a useful error once its attempts are
+/// spent against a port nobody ever binds.
+#[test]
+fn connect_with_retry_gives_up_after_its_attempts() {
+    let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = probe.local_addr().unwrap().to_string();
+    drop(probe);
+    let policy = RetryPolicy {
+        attempts: 3,
+        base_delay: Duration::from_millis(5),
+        max_delay: Duration::from_millis(10),
+    };
+    let hello = Hello { s: 0, p: 1, n_s: 1, d: 1 };
+    let err = transport::connect_with_retry(&addr, hello, policy).unwrap_err();
+    assert!(err.to_string().contains("3 connect attempts"), "{err}");
+}

@@ -48,7 +48,7 @@ fn cfg(algorithm: Algorithm) -> DistConfig {
 fn tcp_run(data: &ShardedDataset, cfg: DistConfig) -> (ServeReport, Vec<WorkerReport>) {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
-    let scfg = ServeConfig { p: P, easgd_beta: cfg.easgd_beta };
+    let scfg = ServeConfig { p: P, easgd_beta: cfg.easgd_beta, read_timeout: None };
     thread::scope(|scope| {
         let server = scope.spawn(move || transport::serve(listener, scfg).unwrap());
         let workers: Vec<_> = (0..P)
@@ -203,10 +203,14 @@ fn cvr_sync_loopback_matches_in_process_reference() {
     assert!(dg <= 1e-5, "gbar drifted: {dg}");
     // the wire carried exactly what bytes() priced
     assert_eq!(rep.bytes_on_wire, rep.bytes_accounted);
-    // client-side ledgers close against the server's
+    // client-side ledgers close against the server's (Goodbye frames are
+    // session-control traffic, priced with the handshakes)
     let client_total: u64 = wreps.iter().map(|w| w.bytes_sent + w.bytes_received).sum();
     assert_eq!(client_total, rep.bytes_on_wire + rep.bytes_handshake);
     assert!(wreps.iter().all(|w| w.rounds == c.max_rounds));
+    // every worker announced its exit: a clean run has zero crashes
+    assert_eq!(rep.goodbyes, P as u64);
+    assert_eq!(rep.crashes, 0);
 }
 
 /// The simulator with homogeneous workers services barrier rounds in
@@ -286,7 +290,7 @@ fn serve_rejects_mismatched_worker_count() {
     use centralvr::dist::codec::Hello;
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
-    let scfg = ServeConfig { p: 2, easgd_beta: 0.9 };
+    let scfg = ServeConfig { p: 2, easgd_beta: 0.9, read_timeout: None };
     let server = thread::spawn(move || transport::serve(listener, scfg));
     let hello = Hello { s: 0, p: 4, n_s: 10, d: 3 };
     let _client = transport::TcpClient::connect(&addr, hello).unwrap();
@@ -315,7 +319,7 @@ fn ps_svrg_uneven_shards_shuts_down_via_server_stop() {
     c.max_rounds = 13;
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
-    let scfg = ServeConfig { p, easgd_beta: c.easgd_beta };
+    let scfg = ServeConfig { p, easgd_beta: c.easgd_beta, read_timeout: None };
     let (rep, wreps) = thread::scope(|scope| {
         let server = scope.spawn(move || transport::serve(listener, scfg).unwrap());
         let workers: Vec<_> = (0..p)
@@ -339,6 +343,10 @@ fn ps_svrg_uneven_shards_shuts_down_via_server_stop() {
         (server.join().unwrap(), wreps)
     });
     assert_eq!(rep.stops, 1, "exactly the parked worker gets a Stop");
+    // both exits said Goodbye — the Goodbye frame is what makes this
+    // wind-down provably clean rather than crash-shaped
+    assert_eq!(rep.goodbyes, 2);
+    assert_eq!(rep.crashes, 0);
     assert!(wreps[0].stopped_by_server, "worker 0 was parked at the freeze");
     assert!(!wreps[1].stopped_by_server, "worker 1 ran out its own budget");
     assert_eq!(wreps[0].rounds, c.max_rounds);
