@@ -1,8 +1,9 @@
 //! Bench: micro/hot-path measurements feeding EXPERIMENTS.md §Perf —
 //! per-gradient native cost across dimensions, fused vr_step vs a naive
-//! 3-pass update, whole native epochs, HLO-engine epochs (dispatch
-//! overhead of the AOT path), simulator event throughput, server apply
-//! latency, parallel-simulator wall-clock scaling (writes
+//! 3-pass update, whole native epochs, lazy vs eager vs dense sparse
+//! epochs (writes `results/BENCH_sparse_steps.json`), HLO-engine epochs
+//! (dispatch overhead of the AOT path), simulator event throughput,
+//! server apply latency, parallel-simulator wall-clock scaling (writes
 //! `results/BENCH_parallel_sim.json`), and the hostile-network scenario
 //! sweep (writes `results/BENCH_scenario_sweep.json`).
 //!
@@ -169,10 +170,128 @@ fn main() {
             s_sp.median * 1e9 / n as f64,
             "ns/grad",
         );
-        // parity of the final-run iterates (both start from x = 0, same perm)
+        // parity of the final-run iterates (both start from x = 0, same
+        // perm). The CSR epoch now runs lazy decay (f64 closed-form
+        // catch-up) while the dense epoch chains 50k f32 fmas per
+        // coordinate; the rounding gap random-walks with sqrt(steps), so
+        // at this scale the bound is 1e-4, not the 1e-5 of the small
+        // sparse_parity suite.
         let diff = math::max_abs_diff(&x_sp, &x_dn) as f64;
         b.metric("csr_vs_dense_epoch_max_abs_diff", diff, "max|dx|");
-        assert!(diff < 1e-5, "CSR epoch drifted from densified run: {diff}");
+        assert!(diff < 1e-4, "CSR epoch drifted from densified run: {diff}");
+    }
+
+    // --- lazy vs eager vs dense sparse CentralVR epochs (PR-7 tentpole) ---
+    // The lazy path (engine: per-coordinate just-in-time decay via
+    // util::lazy) against the eager reference (the pre-lazy engine loop:
+    // dense scale/gbar pass per sample via vr_step_row) and the dense
+    // twin, all at the acceptance workload n=50k d=5k 1%. gbar is nonzero
+    // so lazy catch-up pays its full closed form. Writes the baseline
+    // artifact results/BENCH_sparse_steps.json.
+    if enabled("sparse_steps") {
+        let (n, d) = (50_000usize, 5_000usize);
+        let sp = synth::sparse_classification(n, d, 0.01, 11);
+        let perm: Vec<u32> = (0..n as u32).collect();
+        let (eta, lam) = (1e-3f32, 1e-4f32);
+        let mut r = Pcg64::new(3);
+        let gbar: Vec<f32> = (0..d).map(|_| 0.01 * r.normal() as f32).collect();
+        let mut eng = NativeEngine::new();
+        let mut alpha = vec![0.0f32; n];
+        let mut gtilde = vec![0.0f32; d];
+
+        let mut x_lz = vec![0.0f32; d];
+        let s_lazy = b.case("sparse_steps_lazy_csr", 1, 5, || {
+            x_lz.fill(0.0);
+            alpha.fill(0.0);
+            eng.centralvr_epoch(
+                Problem::Logistic,
+                &sp,
+                &perm,
+                &mut x_lz,
+                &mut alpha,
+                &gbar,
+                &mut gtilde,
+                eta,
+                lam,
+            );
+            black_box(x_lz[0])
+        });
+
+        let mut x_eg = vec![0.0f32; d];
+        let s_eager = b.case("sparse_steps_eager_csr", 1, 3, || {
+            x_eg.fill(0.0);
+            alpha.fill(0.0);
+            gtilde.fill(0.0);
+            let inv_n = 1.0 / n as f32;
+            for &iu in &perm {
+                let i = iu as usize;
+                let a = sp.row_view(i);
+                let c = Problem::Logistic.dloss(math::dot_row(a, &x_eg), sp.label(i));
+                math::vr_step_row(&mut x_eg, a, &gbar, c - alpha[i], eta, lam);
+                alpha[i] = c;
+                math::axpy_row(c * inv_n, a, &mut gtilde);
+            }
+            black_box(x_eg[0])
+        });
+
+        let dn = sp.to_dense(); // ~1 GB twin, dropped at section end
+        let mut x_dn = vec![0.0f32; d];
+        let s_dense = b.case("sparse_steps_dense", 1, 3, || {
+            x_dn.fill(0.0);
+            alpha.fill(0.0);
+            eng.centralvr_epoch(
+                Problem::Logistic,
+                &dn,
+                &perm,
+                &mut x_dn,
+                &mut alpha,
+                &gbar,
+                &mut gtilde,
+                eta,
+                lam,
+            );
+            black_box(x_dn[0])
+        });
+        drop(dn);
+
+        let lazy_vs_eager = s_eager.median / s_lazy.median;
+        let lazy_vs_dense = s_dense.median / s_lazy.median;
+        b.metric("speedup_lazy_vs_eager", lazy_vs_eager, "x");
+        b.metric("speedup_lazy_vs_dense", lazy_vs_dense, "x");
+        b.metric(
+            "sparse_steps_lazy_ns_per_grad",
+            s_lazy.median * 1e9 / n as f64,
+            "ns/grad",
+        );
+        // lazy vs eager endpoint parity — same 1e-4 rationale as `csr`
+        // (f64 closed-form catch-up vs a 50k-deep f32 fma chain)
+        let diff = math::max_abs_diff(&x_lz, &x_eg) as f64;
+        b.metric("sparse_steps_lazy_vs_eager_max_abs_diff", diff, "max|dx|");
+        assert!(diff < 1e-4, "lazy epoch drifted from eager reference: {diff}");
+
+        let json = format!(
+            "{{\n  \"bench\": \"sparse_steps\",\n  \"workload\": \
+             \"centralvr n={n} d={d} density=0.01 eta=1e-3 lam=1e-4\",\n  \
+             \"runs\": [\n    \
+             {{\"case\": \"lazy_csr\", \"t_epoch_s\": {:.6}}},\n    \
+             {{\"case\": \"eager_csr\", \"t_epoch_s\": {:.6}}},\n    \
+             {{\"case\": \"dense\", \"t_epoch_s\": {:.6}}}\n  ],\n  \
+             \"metrics\": {{\n    \
+             \"speedup_lazy_vs_eager\": {lazy_vs_eager:.3},\n    \
+             \"speedup_lazy_vs_dense\": {lazy_vs_dense:.3},\n    \
+             \"lazy_vs_eager_max_abs_diff\": {diff:.3e}\n  }}\n}}\n",
+            s_lazy.median, s_eager.median, s_dense.median
+        );
+        let out_dir = concat!(env!("CARGO_MANIFEST_DIR"), "/../results");
+        let path = format!("{out_dir}/BENCH_sparse_steps.json");
+        if let Err(e) = std::fs::create_dir_all(out_dir)
+            .and_then(|()| std::fs::write(&path, &json))
+        {
+            println!("hot_paths/sparse_steps: could not write {path}: {e}");
+        } else {
+            println!("hot_paths/sparse_steps: wrote {path}");
+        }
+        print!("{json}");
     }
 
     // --- HLO engine epoch (AOT path dispatch cost) ---

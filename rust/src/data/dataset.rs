@@ -13,8 +13,10 @@
 //!   `i` owning `indices[indptr[i]..indptr[i+1]]`. This wins for rcv1-style
 //!   text workloads where nnz per row is a small fraction of `d`: the
 //!   per-sample `dot` and the data-part gradient updates touch only the
-//!   stored entries, so the hot path scales with nnz instead of `d`
-//!   (see `util::math::{dot_sparse, vr_step_sparse}`).
+//!   stored entries (`util::math::dot_sparse`), and the dense decay /
+//!   `gbar` terms of the variance-reduced step are deferred per
+//!   coordinate by `util::lazy::LazyIterate`, so the *full* per-sample
+//!   cost — not just the data part — scales with nnz instead of `d`.
 //!
 //! Consumers that need per-sample math take a [`RowView`] from
 //! [`Dataset::row_view`] and dispatch through the `*_row` kernels in

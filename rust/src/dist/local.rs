@@ -42,6 +42,35 @@ use crate::model::gradients;
 use crate::util::math;
 use crate::util::rng::Pcg64;
 
+/// Recyclable `d`-length buffer pool: per-round uploads are built in
+/// pooled `Vec`s and the pool is refilled by [`RoundMachine::absorb`]
+/// recycling each replaced [`GlobalView`]'s buffers, so in steady state a
+/// round allocates nothing — each round takes ~2 buffers for its upload
+/// and puts ~2 back when the reply lands (the deferred PR 5 upload-vector
+/// arena).
+#[derive(Default)]
+struct Arena {
+    pool: Vec<Vec<f32>>,
+}
+
+impl Arena {
+    /// A zeroed `d`-length buffer, recycled if one is pooled.
+    fn take(&mut self, d: usize) -> Vec<f32> {
+        let mut v = self.pool.pop().unwrap_or_default();
+        v.clear();
+        v.resize(d, 0.0);
+        v
+    }
+
+    /// Return a spent buffer (empty vecs carry no allocation; the pool is
+    /// capped so a pathological driver can't hoard memory here).
+    fn put(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 && self.pool.len() < 8 {
+            self.pool.push(v);
+        }
+    }
+}
+
 /// Per-worker algorithm state.
 pub struct LocalNode<'a> {
     /// Worker index in [0, p).
@@ -74,6 +103,8 @@ pub struct LocalNode<'a> {
     pub last_round_evals: u64,
     /// Parameter updates performed by the most recent round.
     pub last_round_iters: u64,
+    /// Recyclable upload/scratch buffers (see [`Arena`]).
+    arena: Arena,
 }
 
 impl<'a> LocalNode<'a> {
@@ -105,7 +136,14 @@ impl<'a> LocalNode<'a> {
             rounds_done: 0,
             last_round_evals: 0,
             last_round_iters: 0,
+            arena: Arena::default(),
         }
+    }
+
+    /// Recycle a replaced [`GlobalView`]'s buffers into the arena.
+    fn recycle_view(&mut self, view: GlobalView) {
+        self.arena.put(view.x);
+        self.arena.put(view.gbar);
     }
 
     /// The shard this worker owns.
@@ -214,10 +252,11 @@ impl<'a> LocalNode<'a> {
     /// average.
     pub fn cvr_sync_round(&mut self, view: &GlobalView) -> Upload {
         self.centralvr_local_epoch(view);
-        Upload::State {
-            x: self.x.clone(),
-            gbar: self.gtilde.clone(),
-        }
+        let mut x = self.arena.take(self.x.len());
+        x.copy_from_slice(&self.x);
+        let mut gbar = self.arena.take(self.gtilde.len());
+        gbar.copy_from_slice(&self.gtilde);
+        Upload::State { x, gbar }
     }
 
     // ----- CentralVR-Async (Algorithm 3) -----------------------------------
@@ -230,15 +269,21 @@ impl<'a> LocalNode<'a> {
     pub fn cvr_async_round(&mut self, view: &GlobalView) -> Upload {
         self.centralvr_local_epoch(view);
         let w = self.weight();
-        let dx: Vec<f32> = self.x.iter().zip(&self.sent_x).map(|(a, b)| a - b).collect();
-        let contrib: Vec<f32> = self.gtilde.iter().map(|g| g * w).collect();
-        let dgbar: Vec<f32> = contrib
-            .iter()
-            .zip(&self.sent_gbar)
-            .map(|(a, b)| a - b)
-            .collect();
+        let d = self.x.len();
+        let mut dx = self.arena.take(d);
+        for ((o, xv), sv) in dx.iter_mut().zip(&self.x).zip(&self.sent_x) {
+            *o = xv - sv;
+        }
+        // the pre-weighted contribution g*w is folded into the delta and
+        // the bookkeeping directly (no intermediate `contrib` vector)
+        let mut dgbar = self.arena.take(d);
+        for ((o, gv), sv) in dgbar.iter_mut().zip(&self.gtilde).zip(&self.sent_gbar) {
+            *o = gv * w - sv;
+        }
         self.sent_x.copy_from_slice(&self.x);
-        self.sent_gbar.copy_from_slice(&contrib);
+        for (sv, gv) in self.sent_gbar.iter_mut().zip(&self.gtilde) {
+            *sv = gv * w;
+        }
         Upload::Delta { dx, dgbar }
     }
 
@@ -263,13 +308,16 @@ impl<'a> LocalNode<'a> {
         let n = self.shard.n() as u64;
         self.finish_round(n, n);
         let w = self.weight();
-        let contrib: Vec<f32> = self.gtilde.iter().map(|g| g * w).collect();
         self.sent_x.copy_from_slice(&self.x);
-        self.sent_gbar.copy_from_slice(&contrib);
-        Upload::Delta {
-            dx: self.x.clone(),
-            dgbar: contrib,
+        for (sv, gv) in self.sent_gbar.iter_mut().zip(&self.gtilde) {
+            *sv = gv * w;
         }
+        let d = self.x.len();
+        let mut dx = self.arena.take(d);
+        dx.copy_from_slice(&self.x);
+        let mut dgbar = self.arena.take(d);
+        dgbar.copy_from_slice(&self.sent_gbar);
+        Upload::Delta { dx, dgbar }
     }
 
     /// tau SAGA iterations from the server reply, then upload changes.
@@ -296,8 +344,15 @@ impl<'a> LocalNode<'a> {
             n_inv,
         );
         self.finish_round(tau as u64, tau as u64);
-        let dx: Vec<f32> = self.x.iter().zip(&self.sent_x).map(|(a, b)| a - b).collect();
-        let dgbar: Vec<f32> = self.gbar.iter().zip(&view.gbar).map(|(a, b)| a - b).collect();
+        let d = self.x.len();
+        let mut dx = self.arena.take(d);
+        for ((o, xv), sv) in dx.iter_mut().zip(&self.x).zip(&self.sent_x) {
+            *o = xv - sv;
+        }
+        let mut dgbar = self.arena.take(d);
+        for ((o, gv), vv) in dgbar.iter_mut().zip(&self.gbar).zip(&view.gbar) {
+            *o = gv - vv;
+        }
         self.sent_x.copy_from_slice(&self.x);
         Upload::Delta { dx, dgbar }
     }
@@ -312,10 +367,9 @@ impl<'a> LocalNode<'a> {
         gradients::grad_sum(self.problem, self.shard, &self.xbar, &mut self.gtilde);
         let n = self.shard.n() as u64;
         self.finish_round(n, 0);
-        Upload::GradPartial {
-            gsum: self.gtilde.clone(),
-            n,
-        }
+        let mut gsum = self.arena.take(self.gtilde.len());
+        gsum.copy_from_slice(&self.gtilde);
+        Upload::GradPartial { gsum, n }
     }
 
     /// Inner phase: m VR iterations from the anchor (m = tau, default 2n
@@ -338,7 +392,9 @@ impl<'a> LocalNode<'a> {
         );
         // two dloss evaluations per inner iteration (x and the anchor)
         self.finish_round(2 * m as u64, m as u64);
-        Upload::XOnly { x: self.x.clone() }
+        let mut xb = self.arena.take(self.x.len());
+        xb.copy_from_slice(&self.x);
+        Upload::XOnly { x: xb }
     }
 
     // ----- EASGD (baseline) -------------------------------------------------
@@ -347,7 +403,8 @@ impl<'a> LocalNode<'a> {
     /// server returned for this worker's last push.
     pub fn easgd_adopt(&mut self, x: Vec<f32>) {
         assert_eq!(x.len(), self.x.len());
-        self.x = x;
+        let old = std::mem::replace(&mut self.x, x);
+        self.arena.put(old);
     }
 
     /// tau plain-SGD iterations on the local iterate, then push it for the
@@ -365,7 +422,9 @@ impl<'a> LocalNode<'a> {
             self.cfg.lambda,
         );
         self.finish_round(tau as u64, tau as u64);
-        Upload::ElasticPush { x: self.x.clone() }
+        let mut xb = self.arena.take(self.x.len());
+        xb.copy_from_slice(&self.x);
+        Upload::ElasticPush { x: xb }
     }
 
     // ----- Parameter-server SVRG (baseline) ---------------------------------
@@ -387,7 +446,7 @@ impl<'a> LocalNode<'a> {
         let idx = self.rng.indices_with_replacement(self.shard.n(), b);
         let eta = self.eta_now();
         let d = self.shard.d();
-        let mut v = vec![0.0f32; d];
+        let mut v = self.arena.take(d); // zeroed by the arena
         let inv_b = 1.0 / b as f32;
         for &iu in &idx {
             let i = iu as usize;
@@ -397,9 +456,11 @@ impl<'a> LocalNode<'a> {
         }
         math::add_assign(&mut v, &view.gbar);
         math::axpy(2.0 * self.cfg.lambda, &view.x, &mut v);
-        let dx: Vec<f32> = v.iter().map(|g| -eta * g).collect();
+        for g in v.iter_mut() {
+            *g = -eta * *g;
+        }
         self.finish_round(2 * b as u64, 1);
-        Upload::GradStep { dx }
+        Upload::GradStep { dx: v }
     }
 }
 
@@ -514,6 +575,13 @@ impl<'a> RoundMachine<'a> {
     /// absorbed view and return the upload to send. Touches only worker
     /// state — never the server — so compute halves of distinct workers
     /// are mutually independent. Returns `None` once the budget is spent.
+    ///
+    /// Lazy-decay flush invariant: every sparse epoch the engine runs in
+    /// here ([`crate::util::lazy`]) flushes its deferred decay *before*
+    /// returning, so the uploads built below from `x` / `gtilde` always
+    /// read fully materialized values — no driver (threads, simulator,
+    /// TCP) ever observes a stale coordinate, which is why the parity
+    /// suites hold unchanged across all three.
     pub fn compute(&mut self) -> Option<RoundOutput> {
         if self.finished() {
             return None;
@@ -577,12 +645,18 @@ impl<'a> RoundMachine<'a> {
     /// Absorb half: ingest the server's reply to the last upload. EASGD
     /// adopts the elastically updated iterate immediately (its rounds
     /// never read a stored view); everyone else stores the view for the
-    /// next compute half.
+    /// next compute half. Either way the *replaced* buffers are recycled
+    /// into the node's arena, which is what keeps steady-state rounds
+    /// allocation-free (each compute takes ~2 pooled buffers for its
+    /// upload; each absorb puts ~2 back).
     pub fn absorb(&mut self, view: GlobalView) {
         if self.node.cfg.algorithm == Algorithm::Easgd {
-            self.node.easgd_adopt(view.x);
+            let GlobalView { x, gbar } = view;
+            self.node.easgd_adopt(x);
+            self.node.arena.put(gbar);
         } else {
-            self.view = view;
+            let old = std::mem::replace(&mut self.view, view);
+            self.node.recycle_view(old);
         }
     }
 }

@@ -11,9 +11,10 @@
 //! update order and f32 accumulation so the implementations agree to
 //! floating-point noise.
 
-use crate::data::dataset::Dataset;
+use crate::data::dataset::{Dataset, RowView};
 use crate::model::glm::Problem;
 use crate::model::gradients;
+use crate::util::lazy::LazyIterate;
 use crate::util::math;
 
 /// Epoch-granular compute primitives (one call = one shard-local epoch or
@@ -123,12 +124,33 @@ pub trait EpochEngine {
 /// run natively through the same algorithm code with no densification in
 /// the hot path (the AOT HLO engine, whose artifact shapes are dense,
 /// instead densifies once per shard at literal-upload time).
+///
+/// On CSR shards every per-sample step is true O(nnz): the dense
+/// `scale*x - eta*gbar` decay pass is deferred through a reusable
+/// [`LazyIterate`] (per-coordinate just-in-time catch-up; see
+/// `util::lazy`), and each epoch method flushes the lazy state before
+/// returning — callers always observe a fully materialized `x`, so the
+/// `EpochEngine` contract is unchanged and round drivers
+/// ([`crate::dist::local::RoundMachine`]) can build uploads from `x` /
+/// `gtilde` without knowing laziness exists.
 #[derive(Default)]
-pub struct NativeEngine;
+pub struct NativeEngine {
+    /// Lazy-decay scratch, re-armed per sparse epoch (no reallocation).
+    lazy: LazyIterate,
+}
 
 impl NativeEngine {
     pub fn new() -> Self {
-        NativeEngine
+        NativeEngine::default()
+    }
+}
+
+/// The CSR row of a sparse shard (sparse epoch loops only).
+#[inline]
+fn sparse_row(shard: &Dataset, i: usize) -> (&[u32], &[f32]) {
+    match shard.row_view(i) {
+        RowView::Sparse { indices, values } => (indices, values),
+        RowView::Dense(_) => unreachable!("sparse epoch over dense storage"),
     }
 }
 
@@ -147,6 +169,21 @@ impl EpochEngine for NativeEngine {
     ) {
         math::zero(gtilde_out);
         let inv_n = 1.0 / shard.n() as f32;
+        if shard.is_sparse() {
+            // O(nnz) hot path: defer the dense decay via lazy catch-up
+            self.lazy.begin(x.len(), eta, lam);
+            for &iu in perm {
+                let i = iu as usize;
+                let (indices, values) = sparse_row(shard, i);
+                self.lazy.catch_up(x, gbar, indices);
+                let c = p.dloss(math::dot_sparse(indices, values, x), shard.label(i));
+                self.lazy.step_support(x, gbar, indices, values, c - alpha[i]);
+                alpha[i] = c;
+                math::axpy_sparse(c * inv_n, indices, values, gtilde_out);
+            }
+            self.lazy.flush(x, gbar);
+            return;
+        }
         for &iu in perm {
             let i = iu as usize;
             let a = shard.row_view(i);
@@ -170,6 +207,22 @@ impl EpochEngine for NativeEngine {
     ) {
         math::zero(gtilde_out);
         let inv_n = 1.0 / shard.n() as f32;
+        if shard.is_sparse() {
+            // plain SGD has no gbar offset: catch-up is pure geometric
+            // decay (a no-op at lam = 0, where scale == 1 exactly)
+            self.lazy.begin(x.len(), eta, lam);
+            for &iu in perm {
+                let i = iu as usize;
+                let (indices, values) = sparse_row(shard, i);
+                self.lazy.catch_up(x, &[], indices);
+                let c = p.dloss(math::dot_sparse(indices, values, x), shard.label(i));
+                self.lazy.step_support(x, &[], indices, values, c);
+                alpha[i] = c;
+                math::axpy_sparse(c * inv_n, indices, values, gtilde_out);
+            }
+            self.lazy.flush(x, &[]);
+            return;
+        }
         for &iu in perm {
             let i = iu as usize;
             let a = shard.row_view(i);
@@ -189,6 +242,18 @@ impl EpochEngine for NativeEngine {
         eta: f32,
         lam: f32,
     ) {
+        if shard.is_sparse() {
+            self.lazy.begin(x.len(), eta, lam);
+            for &iu in idx {
+                let i = iu as usize;
+                let (indices, values) = sparse_row(shard, i);
+                self.lazy.catch_up(x, &[], indices);
+                let c = p.dloss(math::dot_sparse(indices, values, x), shard.label(i));
+                self.lazy.step_support(x, &[], indices, values, c);
+            }
+            self.lazy.flush(x, &[]);
+            return;
+        }
         for &iu in idx {
             let i = iu as usize;
             let a = shard.row_view(i);
@@ -208,6 +273,21 @@ impl EpochEngine for NativeEngine {
         eta: f32,
         lam: f32,
     ) {
+        if shard.is_sparse() {
+            // x is lazy; the anchor xbar is frozen, so its dot needs no
+            // catch-up
+            self.lazy.begin(x.len(), eta, lam);
+            for &iu in idx {
+                let i = iu as usize;
+                let (indices, values) = sparse_row(shard, i);
+                self.lazy.catch_up(x, gbar, indices);
+                let c = p.dloss(math::dot_sparse(indices, values, x), shard.label(i));
+                let cbar = p.dloss(math::dot_sparse(indices, values, xbar), shard.label(i));
+                self.lazy.step_support(x, gbar, indices, values, c - cbar);
+            }
+            self.lazy.flush(x, gbar);
+            return;
+        }
         for &iu in idx {
             let i = iu as usize;
             let a = shard.row_view(i);
@@ -229,6 +309,27 @@ impl EpochEngine for NativeEngine {
         lam: f32,
         n_inv: f32,
     ) {
+        if shard.is_sparse() {
+            // gbar mutates, but only on coordinates the step also touches
+            // in x: over any interval where coordinate j goes untouched,
+            // gbar[j] is constant, which is exactly the invariant the
+            // lazy closed form needs. Catch-up therefore reads the
+            // *current* gbar; step_support uses it pre-update (matching
+            // the eager order: vr step, then the table-average axpy).
+            self.lazy.begin(x.len(), eta, lam);
+            for &iu in idx {
+                let i = iu as usize;
+                let (indices, values) = sparse_row(shard, i);
+                self.lazy.catch_up(x, gbar, indices);
+                let c = p.dloss(math::dot_sparse(indices, values, x), shard.label(i));
+                let delta = c - alpha[i];
+                self.lazy.step_support(x, gbar, indices, values, delta);
+                math::axpy_sparse(n_inv * delta, indices, values, gbar);
+                alpha[i] = c;
+            }
+            self.lazy.flush(x, gbar);
+            return;
+        }
         for &iu in idx {
             let i = iu as usize;
             let a = shard.row_view(i);

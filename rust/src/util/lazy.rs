@@ -1,0 +1,357 @@
+//! Lazy just-in-time decay for sparse per-sample steps (ISSUE 7).
+//!
+//! Every VR/SGD per-sample update has the shape
+//!
+//! ```text
+//! x_j <- scale * x_j - eta * gbar_j          (all d coordinates)
+//! x_j <- x_j - eta * coef * a_j              (the sample's support only)
+//! ```
+//!
+//! with `scale = 1 - 2*eta*lam` and `gbar` frozen for the duration of the
+//! epoch (CentralVR's epoch-frozen average, SVRG's anchor gradient, plain
+//! SGD's `gbar = 0`; SAGA mutates `gbar` but only on coordinates it also
+//! touches in `x`, which keeps `gbar_j` constant over any interval where
+//! coordinate `j` goes untouched — see `saga_epoch`). The first line is a
+//! dense O(d) pass per sample; on rcv1-like data (~0.1% density) it
+//! dominates the whole epoch by ~d/nnz.
+//!
+//! [`LazyIterate`] defers that dense pass: a per-coordinate last-touched
+//! counter records how many global steps each coordinate is behind, and on
+//! access the owed `k` steps collapse to the closed form
+//!
+//! ```text
+//! x_j <- scale^k * x_j - eta * gbar_j * (1 - scale^k) / (1 - scale)
+//! ```
+//!
+//! evaluated in f64 (`scale^k` via `powi`, so large `k` degrades smoothly
+//! to the `-eta*gbar_j/(1-scale)` fixed point instead of blowing up or
+//! denormalizing), with exact fast paths for `scale == 1.0` (pure
+//! `x_j -= k*eta*gbar_j`, a bitwise no-op when `gbar_j == 0`) and
+//! `gbar_j == 0` (pure geometric decay `x_j *= scale^k`).
+//!
+//! The contract an epoch loop follows per sample:
+//!
+//! 1. [`LazyIterate::catch_up`] the sample's support, so the dot product
+//!    reads current values;
+//! 2. compute the gradient scalar from the (now current) support;
+//! 3. [`LazyIterate::step_support`] — one *exact eager* step on the
+//!    support (bitwise the same fused `mul_add` the eager kernels
+//!    `vr_step_sparse`/`sgd_step_sparse` perform on those coordinates)
+//!    while the global clock advances, leaving every other coordinate
+//!    owing one more deferred decay;
+//! 4. at the epoch boundary, [`LazyIterate::flush`] materializes the
+//!    dense iterate before anyone reads `x` wholesale (uploads, parity
+//!    checks, `gbar <- gtilde` swaps).
+//!
+//! Catch-up arithmetic is where lazy and eager diverge: eager applies `k`
+//! sequential f32 fused multiply-adds, lazy one f64 closed form. The
+//! difference is bounded by the f32 chain's own rounding accumulation
+//! (~sqrt(k) * 2^-24 relative, random-walk), which is why lazy-vs-eager
+//! epoch parity is a 1e-5 bound (`rust/tests/sparse_parity.rs`) and not
+//! bitwise equality.
+
+/// Per-coordinate lazy-decay state for one epoch over a `d`-length
+/// iterate. Owns only the timestamp table, so one instance can be reused
+/// across epochs ([`LazyIterate::begin`] re-arms it without reallocating).
+#[derive(Debug, Default)]
+pub struct LazyIterate {
+    /// Global step counter for the current epoch.
+    t: u32,
+    /// last[j] = value of `t` when coordinate j was last materialized.
+    last: Vec<u32>,
+    /// Per-step decay factor `1 - 2*eta*lam`, computed in f32 to match
+    /// the eager kernels bit-for-bit on the support fast path.
+    scale: f32,
+    eta: f32,
+}
+
+/// Apply `k` owed steps of `x <- scale*x - eta*g` in closed form.
+#[inline]
+fn catch_coord(x: &mut f32, g: f32, k: u32, scale: f32, eta: f32) {
+    if scale == 1.0 {
+        // no decay: k identical increments collapse to one f64 product
+        // (bitwise no-op when g == 0, i.e. plain SGD at lam = 0)
+        if g != 0.0 {
+            *x = (*x as f64 - eta as f64 * g as f64 * k as f64) as f32;
+        }
+        return;
+    }
+    let s = scale as f64;
+    let sk = s.powi(k as i32);
+    if g == 0.0 {
+        *x = (*x as f64 * sk) as f32;
+    } else {
+        // geometric series sum_{u<k} s^u = (1 - s^k) / (1 - s); for huge
+        // k, sk underflows smoothly to 0 and this becomes the fixed
+        // point -eta*g/(1-s) — finite, no denormal blowup.
+        let geom = (1.0 - sk) / (1.0 - s);
+        *x = (*x as f64 * sk - eta as f64 * g as f64 * geom) as f32;
+    }
+}
+
+impl LazyIterate {
+    pub fn new() -> Self {
+        LazyIterate::default()
+    }
+
+    /// Arm the state for one epoch over a `d`-length iterate with the
+    /// given step size and regularizer. Reuses the timestamp allocation.
+    pub fn begin(&mut self, d: usize, eta: f32, lam: f32) {
+        self.t = 0;
+        self.last.clear();
+        self.last.resize(d, 0);
+        self.scale = 1.0 - 2.0 * eta * lam;
+        self.eta = eta;
+    }
+
+    /// The per-step decay factor currently armed (tests / diagnostics).
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    /// Global steps taken since [`LazyIterate::begin`].
+    pub fn steps(&self) -> u32 {
+        self.t
+    }
+
+    /// Materialize the given coordinates at the current clock. `gbar` is
+    /// the epoch-frozen offset vector; pass `&[]` when there is none
+    /// (plain SGD). Call before reading any of these coordinates.
+    pub fn catch_up(&mut self, x: &mut [f32], gbar: &[f32], indices: &[u32]) {
+        for &ju in indices {
+            let j = ju as usize;
+            let k = self.t - self.last[j];
+            if k > 0 {
+                let g = if gbar.is_empty() { 0.0 } else { gbar[j] };
+                catch_coord(&mut x[j], g, k, self.scale, self.eta);
+                self.last[j] = self.t;
+            }
+        }
+    }
+
+    /// One exact eager step on the support — the identical fused
+    /// `mul_add` sequence `vr_step_sparse` performs on the support — and
+    /// advance the global clock, leaving all other coordinates owing one
+    /// more deferred decay. The support must already be caught up
+    /// ([`LazyIterate::catch_up`]). `coef` is the data-term coefficient
+    /// (`c - alpha_i` for VR, `c` for SGD).
+    pub fn step_support(
+        &mut self,
+        x: &mut [f32],
+        gbar: &[f32],
+        indices: &[u32],
+        values: &[f32],
+        coef: f32,
+    ) {
+        debug_assert_eq!(indices.len(), values.len());
+        let ca = -self.eta * coef;
+        self.t += 1;
+        for (&ju, &v) in indices.iter().zip(values) {
+            let j = ju as usize;
+            debug_assert_eq!(self.last[j] + 1, self.t, "support not caught up");
+            let g = if gbar.is_empty() { 0.0 } else { gbar[j] };
+            let xj = &mut x[j];
+            *xj = v.mul_add(ca, xj.mul_add(self.scale, -self.eta * g));
+            self.last[j] = self.t;
+        }
+    }
+
+    /// Materialize every coordinate at the current clock. Must run before
+    /// anyone reads `x` wholesale (epoch/round boundaries: uploads,
+    /// `gtilde`/`gbar` swaps, parity checks). Idempotent: a second flush
+    /// with no intervening steps is a bitwise no-op.
+    pub fn flush(&mut self, x: &mut [f32], gbar: &[f32]) {
+        for (j, xj) in x.iter_mut().enumerate() {
+            let k = self.t - self.last[j];
+            if k > 0 {
+                let g = if gbar.is_empty() { 0.0 } else { gbar[j] };
+                catch_coord(xj, g, k, self.scale, self.eta);
+                self.last[j] = self.t;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::math;
+    use crate::util::rng::Pcg64;
+
+    /// Eager reference: the dense decay pass every coordinate takes, then
+    /// the support correction — exactly `vr_step_sparse`.
+    fn eager_step(
+        x: &mut [f32],
+        gbar: &[f32],
+        indices: &[u32],
+        values: &[f32],
+        coef: f32,
+        eta: f32,
+        lam: f32,
+    ) {
+        math::vr_step_sparse(x, indices, values, gbar, coef, eta, lam);
+    }
+
+    fn randvec(r: &mut Pcg64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| r.normal() as f32).collect()
+    }
+
+    #[test]
+    fn catch_up_with_zero_owed_steps_is_a_bitwise_noop() {
+        let d = 16;
+        let mut r = Pcg64::new(1);
+        let x0 = randvec(&mut r, d);
+        let gbar = randvec(&mut r, d);
+        let mut x = x0.clone();
+        let mut lz = LazyIterate::new();
+        lz.begin(d, 0.05, 1e-3);
+        // k = 0 for every coordinate right after begin
+        let all: Vec<u32> = (0..d as u32).collect();
+        lz.catch_up(&mut x, &gbar, &all);
+        assert_eq!(x, x0, "k=0 catch-up must not touch x");
+        lz.flush(&mut x, &gbar);
+        assert_eq!(x, x0, "k=0 flush must not touch x");
+    }
+
+    #[test]
+    fn scale_one_catch_up_is_linear_in_k_and_noop_without_gbar() {
+        let d = 8;
+        let mut r = Pcg64::new(2);
+        let x0 = randvec(&mut r, d);
+        let gbar = randvec(&mut r, d);
+        let eta = 0.01f32;
+        // lam = 0 => scale == 1.0 exactly
+        let mut lz = LazyIterate::new();
+        lz.begin(d, eta, 0.0);
+        assert_eq!(lz.scale(), 1.0);
+        let mut x = x0.clone();
+        // advance the clock 5 steps touching nothing (empty support)
+        for _ in 0..5 {
+            lz.step_support(&mut x, &gbar, &[], &[], 0.0);
+        }
+        lz.flush(&mut x, &gbar);
+        for j in 0..d {
+            let expect = (x0[j] as f64 - eta as f64 * gbar[j] as f64 * 5.0) as f32;
+            assert_eq!(x[j], expect, "j={j}");
+        }
+        // without an offset vector the scale==1 path is a bitwise no-op
+        let mut lz = LazyIterate::new();
+        lz.begin(d, eta, 0.0);
+        let mut x = x0.clone();
+        for _ in 0..5 {
+            lz.step_support(&mut x, &[], &[], &[], 0.0);
+        }
+        lz.flush(&mut x, &[]);
+        assert_eq!(x, x0);
+    }
+
+    #[test]
+    fn large_k_catch_up_stays_finite_and_hits_the_fixed_point() {
+        // scale well below 1: scale^k underflows to 0 long before
+        // k = 1e6, and the closed form must land on -eta*g/(1-scale)
+        let (eta, lam) = (0.1f32, 0.5f32);
+        let scale = 1.0 - 2.0 * eta * lam; // 0.9
+        let mut lz = LazyIterate::new();
+        lz.begin(1, eta, lam);
+        assert!((lz.scale() - scale).abs() < 1e-7);
+        let gbar = [0.7f32];
+        let mut x = [123.0f32];
+        for _ in 0..1_000_000 {
+            lz.step_support(&mut x, &gbar, &[], &[], 0.0);
+        }
+        lz.flush(&mut x, &gbar);
+        assert!(x[0].is_finite());
+        let fixed = -(eta as f64) * 0.7 / (1.0 - scale as f64);
+        assert!(
+            (x[0] as f64 - fixed).abs() < 1e-6,
+            "expected fixed point {fixed}, got {}",
+            x[0]
+        );
+        // pure-decay variant (gbar = 0): must reach exactly 0-ish, not NaN
+        let mut lz = LazyIterate::new();
+        lz.begin(1, eta, lam);
+        let mut x = [123.0f32];
+        for _ in 0..1_000_000 {
+            lz.step_support(&mut x, &[], &[], &[], 0.0);
+        }
+        lz.flush(&mut x, &[]);
+        assert_eq!(x[0], 0.0, "scale^1e6 * x must underflow cleanly to 0");
+    }
+
+    #[test]
+    fn lazy_trajectory_matches_eager_within_rounding() {
+        // random supports, lam > 0, nonzero gbar: the full composition of
+        // catch_up/step_support/flush must track the eager per-step
+        // kernel within the f32 chain's own rounding accumulation
+        let (d, steps, nnz) = (60usize, 400usize, 6usize);
+        let (eta, lam) = (0.02f32, 1e-3f32);
+        let mut r = Pcg64::new(7);
+        let x0 = randvec(&mut r, d);
+        let gbar: Vec<f32> = randvec(&mut r, d).iter().map(|v| 0.1 * v).collect();
+        // pre-draw the step schedule: support indices, values, coefs
+        let mut schedule = Vec::new();
+        for _ in 0..steps {
+            let mut cols: Vec<u32> = (0..d as u32).collect();
+            r.shuffle(&mut cols);
+            let mut indices: Vec<u32> = cols[..nnz].to_vec();
+            indices.sort_unstable();
+            let values: Vec<f32> = (0..nnz).map(|_| r.normal() as f32).collect();
+            let coef = 0.3 * r.normal() as f32;
+            schedule.push((indices, values, coef));
+        }
+        let mut x_eager = x0.clone();
+        for (indices, values, coef) in &schedule {
+            eager_step(&mut x_eager, &gbar, indices, values, *coef, eta, lam);
+        }
+        let mut x_lazy = x0.clone();
+        let mut lz = LazyIterate::new();
+        lz.begin(d, eta, lam);
+        for (indices, values, coef) in &schedule {
+            lz.catch_up(&mut x_lazy, &gbar, indices);
+            lz.step_support(&mut x_lazy, &gbar, indices, values, *coef);
+        }
+        lz.flush(&mut x_lazy, &gbar);
+        assert_eq!(lz.steps(), steps as u32);
+        let diff = math::max_abs_diff(&x_lazy, &x_eager);
+        assert!(diff < 1e-5, "lazy drifted {diff} from eager over {steps} steps");
+    }
+
+    #[test]
+    fn flush_is_idempotent() {
+        let d = 20;
+        let mut r = Pcg64::new(9);
+        let mut x = randvec(&mut r, d);
+        let gbar = randvec(&mut r, d);
+        let mut lz = LazyIterate::new();
+        lz.begin(d, 0.03, 1e-2);
+        let idx = [2u32, 5, 11];
+        let vals = [0.5f32, -1.0, 0.25];
+        for _ in 0..10 {
+            lz.catch_up(&mut x, &gbar, &idx);
+            lz.step_support(&mut x, &gbar, &idx, &vals, 0.4);
+        }
+        lz.flush(&mut x, &gbar);
+        let snap = x.clone();
+        lz.flush(&mut x, &gbar);
+        assert_eq!(x, snap, "second flush must be a bitwise no-op");
+    }
+
+    #[test]
+    fn begin_rearms_a_reused_instance() {
+        let mut lz = LazyIterate::new();
+        lz.begin(4, 0.1, 0.5);
+        let mut x = [1.0f32; 4];
+        for _ in 0..3 {
+            lz.step_support(&mut x, &[], &[], &[], 0.0);
+        }
+        lz.flush(&mut x, &[]);
+        assert!(x[0] < 1.0);
+        // re-arm at a different size: stale timestamps must not leak
+        lz.begin(2, 0.1, 0.0);
+        assert_eq!(lz.steps(), 0);
+        let x0 = [3.0f32, -4.0];
+        let mut x = x0;
+        lz.flush(&mut x, &[]);
+        assert_eq!(x, x0);
+    }
+}

@@ -120,12 +120,16 @@ pub fn axpy_sparse(alpha: f32, indices: &[u32], values: &[f32], y: &mut [f32]) {
     }
 }
 
-/// CSR-row CentralVR step: same update as [`vr_step`] with `a` given as
-/// index/value pairs. The `gbar` and l2 terms are dense, so every
-/// coordinate takes the decay pass `x_j <- scale * x_j - eta * gbar_j`;
-/// only the row's support pays the data-part correction. Per-sample cost:
-/// one 2-stream pass over `d` plus O(nnz), vs the dense kernel's 3-stream
-/// pass plus a full-`d` dot.
+/// CSR-row CentralVR step — the *eager* kernel: the `gbar` and l2 terms
+/// are dense, so every coordinate takes the decay pass
+/// `x_j <- scale * x_j - eta * gbar_j` and the per-sample cost is one
+/// 2-stream pass over `d` plus O(nnz). Epoch loops do NOT use this
+/// anymore: `NativeEngine` defers the dense pass through
+/// `util::lazy::LazyIterate` (per-coordinate just-in-time catch-up) for
+/// true O(nnz) per sample. This kernel remains the storage-dispatch
+/// single-step primitive and the bitwise parity reference the lazy path
+/// is tested against (its support update is the identical `mul_add`
+/// sequence `LazyIterate::step_support` performs).
 #[inline]
 pub fn vr_step_sparse(
     x: &mut [f32],
@@ -148,9 +152,15 @@ pub fn vr_step_sparse(
     }
 }
 
-/// CSR-row plain-SGD step: same update as [`sgd_step`]. With `lam == 0`
-/// the decay factor is exactly 1 and untouched coordinates stay bitwise
-/// unchanged, so the step is pure O(nnz).
+/// CSR-row plain-SGD step — the *eager* kernel: same update as
+/// [`sgd_step`]. With `lam == 0` the decay factor is exactly 1 and
+/// untouched coordinates stay bitwise unchanged, so the step is pure
+/// O(nnz); with `lam > 0` it pays a dense `x *= scale` pass. Epoch
+/// loops avoid that pass: `NativeEngine`'s sgd arms route sparse
+/// storage through `util::lazy::LazyIterate` (with an empty `gbar`),
+/// which defers the decay per coordinate and keeps every step O(nnz)
+/// regardless of `lam`. Retained as the single-step dispatch primitive
+/// and the parity reference for the lazy path.
 #[inline]
 pub fn sgd_step_sparse(
     x: &mut [f32],

@@ -5,6 +5,7 @@
 
 pub mod csvio;
 pub mod json;
+pub mod lazy;
 pub mod logger;
 pub mod math;
 pub mod propcheck;

@@ -9,9 +9,11 @@
 
 use centralvr::algos::{self, SequentialSolver, SolverConfig};
 use centralvr::config::schema::Algorithm;
+use centralvr::data::dataset::Dataset;
 use centralvr::data::shard::ShardedDataset;
 use centralvr::data::synth;
 use centralvr::dist::DistConfig;
+use centralvr::exec::engine::{EpochEngine, NativeEngine};
 use centralvr::exec::simulator::{self, SimParams};
 use centralvr::exec::threads;
 use centralvr::model::glm::Problem;
@@ -136,4 +138,154 @@ fn cvr_sync_csr_matches_densified_shards() {
     let thr_sp = threads::run(Problem::Logistic, &data_sp, c);
     let diff = math::rel_l2_diff(&thr_sp.x, &sim_sp.trace.x);
     assert!(diff < 1e-6, "thread engine disagrees with simulator on CSR: {diff}");
+}
+
+// ---------------------------------------------------------------------------
+// Lazy-vs-eager epoch parity (PR 7): `NativeEngine`'s sparse arms defer the
+// dense decay/gbar pass through `util::lazy::LazyIterate`. These tests pin
+// each lazy epoch against an inline eager reference loop — the pre-lazy
+// engine loop, rebuilt from the retained `math::*_row` kernels — on the SAME
+// CSR data, so the only divergence source is the catch-up arithmetic (one
+// f64 closed-form geometric series vs a chain of f32 fmas); support-
+// coordinate updates are the identical fma sequence. Bounded to 1e-5 per
+// epoch at this scale, for both lam == 0 (pure-gbar catch-up) and lam > 0
+// (decay + gbar catch-up).
+// ---------------------------------------------------------------------------
+
+const LAMBDAS: [f32; 2] = [0.0, 1e-3];
+const EPOCHS: usize = 4;
+
+/// Random-ish index sequence with repeats (SVRG/SAGA sample uniformly, so
+/// the reference must hold for non-permutation sequences too).
+fn sampling_idx(n: usize) -> Vec<u32> {
+    (0..n).map(|i| ((i * 7 + 3) % n) as u32).collect()
+}
+
+/// The pre-lazy CentralVR epoch: eager `vr_step_row` per sample.
+#[allow(clippy::too_many_arguments)]
+fn eager_centralvr_epoch(
+    p: Problem,
+    ds: &Dataset,
+    perm: &[u32],
+    x: &mut [f32],
+    alpha: &mut [f32],
+    gbar: &[f32],
+    gtilde: &mut [f32],
+    eta: f32,
+    lam: f32,
+) {
+    math::zero(gtilde);
+    let inv_n = 1.0 / ds.n() as f32;
+    for &iu in perm {
+        let i = iu as usize;
+        let a = ds.row_view(i);
+        let c = p.dloss(math::dot_row(a, x), ds.label(i));
+        math::vr_step_row(x, a, gbar, c - alpha[i], eta, lam);
+        alpha[i] = c;
+        math::axpy_row(c * inv_n, a, gtilde);
+    }
+}
+
+#[test]
+fn lazy_centralvr_epoch_matches_eager_reference() {
+    let sp = synth::sparse_classification(300, 60, 0.05, 77);
+    assert!(sp.is_sparse());
+    let (n, d) = (sp.n(), sp.d());
+    let perm: Vec<u32> = (0..n).map(|i| ((i * 7) % n) as u32).collect(); // 7 ⊥ 300
+    let p = Problem::Logistic;
+    let eta = 0.05f32;
+    for lam in LAMBDAS {
+        let mut eng = NativeEngine::new();
+        let (mut x_l, mut x_e) = (vec![0.0f32; d], vec![0.0f32; d]);
+        let (mut al_l, mut al_e) = (vec![0.0f32; n], vec![0.0f32; n]);
+        let (mut gb_l, mut gb_e) = (vec![0.0f32; d], vec![0.0f32; d]);
+        let (mut gt_l, mut gt_e) = (vec![0.0f32; d], vec![0.0f32; d]);
+        for epoch in 0..EPOCHS {
+            eng.centralvr_epoch(p, &sp, &perm, &mut x_l, &mut al_l, &gb_l, &mut gt_l, eta, lam);
+            eager_centralvr_epoch(p, &sp, &perm, &mut x_e, &mut al_e, &gb_e, &mut gt_e, eta, lam);
+            let diff = math::max_abs_diff(&x_l, &x_e);
+            assert!(diff < 1e-5, "lam={lam} epoch={epoch}: lazy drifted {diff}");
+            let diff = math::max_abs_diff(&gt_l, &gt_e);
+            assert!(diff < 1e-5, "lam={lam} epoch={epoch}: gtilde drifted {diff}");
+            // sequential CentralVR adopts gtilde as the next epoch's gbar —
+            // mimic that so catch-up runs against a nonzero gbar
+            gb_l.copy_from_slice(&gt_l);
+            gb_e.copy_from_slice(&gt_e);
+        }
+    }
+}
+
+#[test]
+fn lazy_svrg_inner_matches_eager_reference() {
+    let sp = synth::sparse_least_squares(300, 60, 0.05, 78);
+    let (n, d) = (sp.n(), sp.d());
+    let idx = sampling_idx(n);
+    let p = Problem::Ridge;
+    let eta = 0.02f32;
+    for lam in LAMBDAS {
+        let mut eng = NativeEngine::new();
+        let (mut x_l, mut x_e) = (vec![0.1f32; d], vec![0.1f32; d]);
+        for outer in 0..EPOCHS {
+            // fresh anchor + data-part full gradient at it, shared exactly
+            let xbar = x_l.clone();
+            let mut gbar = vec![0.0f32; d];
+            for i in 0..n {
+                let a = sp.row_view(i);
+                let c = p.dloss(math::dot_row(a, &xbar), sp.label(i));
+                math::axpy_row(c / n as f32, a, &mut gbar);
+            }
+            eng.svrg_inner(p, &sp, &idx, &mut x_l, &xbar, &gbar, eta, lam);
+            for &iu in &idx {
+                let i = iu as usize;
+                let a = sp.row_view(i);
+                let c = p.dloss(math::dot_row(a, &x_e), sp.label(i));
+                let cbar = p.dloss(math::dot_row(a, &xbar), sp.label(i));
+                math::vr_step_row(&mut x_e, a, &gbar, c - cbar, eta, lam);
+            }
+            let diff = math::max_abs_diff(&x_l, &x_e);
+            assert!(diff < 1e-5, "lam={lam} outer={outer}: lazy drifted {diff}");
+            x_e.copy_from_slice(&x_l); // re-sync anchors between outer iters
+        }
+    }
+}
+
+#[test]
+fn lazy_saga_epoch_matches_eager_reference() {
+    let sp = synth::sparse_classification(300, 60, 0.05, 79);
+    let (n, d) = (sp.n(), sp.d());
+    let idx = sampling_idx(n);
+    let p = Problem::Logistic;
+    let eta = 0.02f32;
+    let n_inv = 1.0 / n as f32;
+    for lam in LAMBDAS {
+        let mut eng = NativeEngine::new();
+        // identical warm tables on both sides: alpha at x0, gbar their average
+        let x0 = vec![0.1f32; d];
+        let mut alpha0 = vec![0.0f32; n];
+        let mut gbar0 = vec![0.0f32; d];
+        for i in 0..n {
+            let a = sp.row_view(i);
+            alpha0[i] = p.dloss(math::dot_row(a, &x0), sp.label(i));
+            math::axpy_row(alpha0[i] * n_inv, a, &mut gbar0);
+        }
+        let (mut x_l, mut x_e) = (x0.clone(), x0);
+        let (mut al_l, mut al_e) = (alpha0.clone(), alpha0);
+        let (mut gb_l, mut gb_e) = (gbar0.clone(), gbar0);
+        for epoch in 0..EPOCHS {
+            eng.saga_epoch(p, &sp, &idx, &mut x_l, &mut al_l, &mut gb_l, eta, lam, n_inv);
+            for &iu in &idx {
+                let i = iu as usize;
+                let a = sp.row_view(i);
+                let c = p.dloss(math::dot_row(a, &x_e), sp.label(i));
+                let delta = c - al_e[i];
+                math::vr_step_row(&mut x_e, a, &gb_e, delta, eta, lam);
+                math::axpy_row(n_inv * delta, a, &mut gb_e);
+                al_e[i] = c;
+            }
+            let dx = math::max_abs_diff(&x_l, &x_e);
+            let dg = math::max_abs_diff(&gb_l, &gb_e);
+            assert!(dx < 1e-5, "lam={lam} epoch={epoch}: lazy x drifted {dx}");
+            assert!(dg < 1e-5, "lam={lam} epoch={epoch}: lazy gbar drifted {dg}");
+        }
+    }
 }

@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""Warn-only bench regression diff (CI: sparse_steps section).
+
+Usage: bench_diff.py <current.json> <baseline.json>
+
+Compares a fresh BENCH_sparse_steps.json against the committed baseline
+(rust/benches/baselines/BENCH_sparse_steps.json):
+
+  * per-case wall-time ratio current/baseline above TIME_RATIO_WARN warns
+  * metrics["speedup_lazy_vs_eager"] below SPEEDUP_FLOOR warns (the PR-7
+    acceptance target: lazy CSR epoch >= 5x eager-sparse at d=5k / 1%)
+
+This step is deliberately advisory: shared CI runners make wall-clock
+noisy, so the script ALWAYS exits 0 and regressions surface as log
+warnings, not red builds. If the baseline is unseeded (empty "runs" —
+the initial commit ships a placeholder because bench numbers must come
+from a real runner, not be invented), it prints seeding instructions
+instead of diffing.
+"""
+
+import json
+import sys
+
+TIME_RATIO_WARN = 1.25
+SPEEDUP_FLOOR = 5.0
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(f"usage: {sys.argv[0]} <current.json> <baseline.json>")
+        return 0  # advisory step: never fail the build
+
+    try:
+        with open(sys.argv[1]) as f:
+            cur = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench_diff: WARN could not read current results: {e}")
+        return 0
+    try:
+        with open(sys.argv[2]) as f:
+            base = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench_diff: WARN could not read baseline: {e}")
+        return 0
+
+    # absolute floor check runs even without a seeded baseline
+    speedup = cur.get("metrics", {}).get("speedup_lazy_vs_eager")
+    if speedup is not None:
+        if speedup < SPEEDUP_FLOOR:
+            print(
+                f"bench_diff: WARN speedup_lazy_vs_eager = {speedup:.2f}x "
+                f"is below the {SPEEDUP_FLOOR:.0f}x acceptance floor"
+            )
+        else:
+            print(f"bench_diff: speedup_lazy_vs_eager = {speedup:.2f}x (floor {SPEEDUP_FLOOR:.0f}x) OK")
+
+    if not base.get("runs"):
+        print(
+            "bench_diff: baseline is unseeded (placeholder with no runs).\n"
+            "To seed it from a real runner, copy the bench output over the placeholder:\n"
+            "    cargo bench --bench hot_paths -- sparse_steps\n"
+            "    cp results/BENCH_sparse_steps.json rust/benches/baselines/BENCH_sparse_steps.json\n"
+            "and commit the result."
+        )
+        return 0
+
+    base_by_case = {r["case"]: r for r in base.get("runs", [])}
+    for run in cur.get("runs", []):
+        case = run.get("case")
+        ref = base_by_case.get(case)
+        if ref is None:
+            print(f"bench_diff: note: case {case!r} has no baseline entry")
+            continue
+        t_cur, t_base = run.get("t_epoch_s"), ref.get("t_epoch_s")
+        if not t_base or t_cur is None:
+            continue
+        ratio = t_cur / t_base
+        tag = "WARN" if ratio > TIME_RATIO_WARN else "ok"
+        if ratio > TIME_RATIO_WARN:
+            print(
+                f"bench_diff: WARN {case}: {t_cur:.4f}s vs baseline "
+                f"{t_base:.4f}s ({ratio:.2f}x, threshold {TIME_RATIO_WARN}x)"
+            )
+        else:
+            print(f"bench_diff: {tag} {case}: {t_cur:.4f}s vs {t_base:.4f}s ({ratio:.2f}x)")
+
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
