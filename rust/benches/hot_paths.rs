@@ -4,8 +4,10 @@
 //! epochs (writes `results/BENCH_sparse_steps.json`), HLO-engine epochs
 //! (dispatch overhead of the AOT path), simulator event throughput,
 //! server apply latency, parallel-simulator wall-clock scaling (writes
-//! `results/BENCH_parallel_sim.json`), and the hostile-network scenario
-//! sweep (writes `results/BENCH_scenario_sweep.json`).
+//! `results/BENCH_parallel_sim.json`), exact quantized-payload frame
+//! sizes per wire format (writes `results/BENCH_wire_bytes.json`), and
+//! the hostile-network scenario sweep (writes
+//! `results/BENCH_scenario_sweep.json`).
 //!
 //! Sections can be selected by substring:
 //! `cargo bench --bench hot_paths -- parallel_sim` runs only the
@@ -461,6 +463,91 @@ fn main() {
             println!("hot_paths/parallel_sim: could not write {path}: {e}");
         } else {
             println!("hot_paths/parallel_sim: wrote {path}");
+        }
+        print!("{json}");
+    }
+
+    // --- quantized wire payload sizes ---
+    // Exact frame bytes per wire format at the Fig-2 text-scale d=5k,
+    // verified against the codec (bytes() == encoded length), written to
+    // results/BENCH_wire_bytes.json. Everything in the "exact" block is
+    // a deterministic integer: tools/bench_diff.py hard-fails CI if any
+    // of them drift from the committed baseline.
+    if enabled("wire_bytes") {
+        use centralvr::dist::codec::{self, WireFormat};
+        use centralvr::dist::messages::GlobalView;
+        let d = 5000usize;
+        let nnz = 50usize; // 1% sparse delta
+        let mut r = Pcg64::new(8);
+        let dense: Vec<f32> = (0..d).map(|_| r.normal() as f32).collect();
+        let mut sparse = vec![0.0f32; d];
+        for k in 0..nnz {
+            // magnitudes in [0.5, 1.5]: no entry quantizes to zero, so
+            // nnz (and the frame size) is layout-stable at every format
+            sparse[k * (d / nnz)] = 0.5 + r.next_f32();
+        }
+        let frames: Vec<(&str, Upload)> = vec![
+            ("delta_dense", Upload::Delta { dx: dense.clone(), dgbar: dense.clone() }),
+            ("delta_sparse", Upload::Delta { dx: sparse.clone(), dgbar: sparse.clone() }),
+            ("state_dense", Upload::State { x: dense.clone(), gbar: dense.clone() }),
+            ("grad_partial_dense", Upload::GradPartial { gsum: dense.clone(), n: 1 }),
+        ];
+        let mut exact: Vec<(String, u64)> = Vec::new();
+        for (name, up) in &frames {
+            for wire in WireFormat::ALL {
+                let mut grid = up.clone();
+                match &mut grid {
+                    Upload::Delta { dx, dgbar } => {
+                        codec::quantize_in_place(dx, wire);
+                        codec::quantize_in_place(dgbar, wire);
+                    }
+                    Upload::State { x, gbar } => {
+                        codec::quantize_in_place(x, wire);
+                        codec::quantize_in_place(gbar, wire);
+                    }
+                    Upload::GradPartial { gsum, .. } => codec::quantize_in_place(gsum, wire),
+                    _ => {}
+                }
+                let bytes = grid.bytes(wire);
+                let encoded = codec::encode_upload(&grid, wire).len() as u64;
+                assert_eq!(bytes, encoded, "{name}/{wire}: bytes() != encoded length");
+                exact.push((format!("{name}_{wire}"), bytes));
+            }
+        }
+        let view = GlobalView { x: dense.clone(), gbar: dense.clone() };
+        exact.push(("view_f32".into(), view.bytes()));
+        exact.push(("ready".into(), Upload::Ready.bytes(WireFormat::F32)));
+        fn lookup(ex: &[(String, u64)], k: &str) -> u64 {
+            ex.iter().find(|(n, _)| n == k).unwrap().1
+        }
+        // one CVR-Sync round per worker: State up, View down
+        for wire in WireFormat::ALL {
+            let round = lookup(&exact, &format!("state_dense_{wire}"))
+                + lookup(&exact, "view_f32");
+            exact.push((format!("cvr_sync_round_per_worker_{wire}"), round));
+        }
+        let ratio = lookup(&exact, "delta_dense_f32") as f64
+            / lookup(&exact, "delta_dense_int8") as f64;
+        b.metric("wire_bytes_delta_f32_over_int8", ratio, "x");
+        assert!(ratio >= 3.5, "int8 payload shrink regressed: {ratio:.2}x");
+        let entries: Vec<String> = exact
+            .iter()
+            .map(|(k, v)| format!("    \"{k}\": {v}"))
+            .collect();
+        let json = format!(
+            "{{\n  \"bench\": \"wire_bytes\",\n  \"workload\": \
+             \"payload frames at d={d}, sparse nnz={nnz}\",\n  \"exact\": {{\n{}\n  }},\n  \
+             \"metrics\": {{\n    \"delta_dense_f32_over_int8\": {ratio:.3}\n  }}\n}}\n",
+            entries.join(",\n")
+        );
+        let out_dir = concat!(env!("CARGO_MANIFEST_DIR"), "/../results");
+        let path = format!("{out_dir}/BENCH_wire_bytes.json");
+        if let Err(e) = std::fs::create_dir_all(out_dir)
+            .and_then(|()| std::fs::write(&path, &json))
+        {
+            println!("hot_paths/wire_bytes: could not write {path}: {e}");
+        } else {
+            println!("hot_paths/wire_bytes: wrote {path}");
         }
         print!("{json}");
     }

@@ -43,6 +43,10 @@ common options:
   --worker-id S        dist worker: shard index in [0, p)
   --easgd-beta B       dist serve: elastic coefficient (default 0.9)
   --out FILE           dist serve: write the final iterate, one f32/line
+  --wire W             payload encoding f32|f16|int8 (default f32); serve
+                       and workers must agree
+  --no-error-feedback  drop quantization error instead of carrying the
+                       per-worker error-feedback residual (ablation)
 ";
 
 /// Parsed command line.
@@ -55,7 +59,7 @@ pub struct Args {
 }
 
 /// Flags that take no value.
-const SWITCHES: &[&str] = &["threads", "quick", "verbose", "help"];
+const SWITCHES: &[&str] = &["threads", "quick", "verbose", "help", "no-error-feedback"];
 
 impl Args {
     pub fn parse(argv: Vec<String>) -> Result<Args> {

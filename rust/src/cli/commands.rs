@@ -82,6 +82,13 @@ pub fn build_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.get_usize("seed")? {
         cfg.seed = v as u64;
     }
+    if let Some(w) = args.get("wire") {
+        cfg.wire = crate::dist::codec::WireFormat::parse(w)
+            .with_context(|| format!("bad --wire {w:?} (f32 | f16 | int8)"))?;
+    }
+    if args.has("no-error-feedback") {
+        cfg.error_feedback = false;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -108,6 +115,8 @@ fn dist_config(cfg: &ExperimentConfig) -> DistConfig {
         ps_batch: 10,
         network: cfg.network,
         record_every: cfg.p.max(1),
+        wire: cfg.wire,
+        error_feedback: cfg.error_feedback,
     }
 }
 
@@ -242,13 +251,18 @@ fn dist(args: &Args) -> Result<()> {
             let read_timeout = args
                 .get_f64("read-timeout")?
                 .map(std::time::Duration::from_secs_f64);
+            let wire = match args.get("wire") {
+                None => crate::dist::codec::WireFormat::F32,
+                Some(w) => crate::dist::codec::WireFormat::parse(w)
+                    .with_context(|| format!("bad --wire {w:?} (f32 | f16 | int8)"))?,
+            };
             let listener = std::net::TcpListener::bind(addr)
                 .with_context(|| format!("bind {addr}"))?;
             println!(
-                "dist serve: listening on {} for p={p} workers",
+                "dist serve: listening on {} for p={p} workers (wire={wire})",
                 listener.local_addr()?
             );
-            let rep = transport::serve(listener, ServeConfig { p, easgd_beta, read_timeout })?;
+            let rep = transport::serve(listener, ServeConfig { p, easgd_beta, read_timeout, wire })?;
             println!(
                 "dist serve: updates={} frames={} bytes={} (accounted={}) handshake={}B \
                  stops={} goodbyes={} crashes={}",
@@ -456,6 +470,25 @@ mod tests {
         assert!(dist(&parse(&["dist", "worker", "--algorithm", "cvr-sync"])).is_err());
         // serve without --p fails before binding
         assert!(dist(&parse(&["dist", "serve"])).is_err());
+    }
+
+    #[test]
+    fn wire_flag_layers_into_config() {
+        use crate::dist::codec::WireFormat;
+        let cfg = build_config(&parse(&["train", "--wire", "int8", "--no-error-feedback"])).unwrap();
+        assert_eq!(cfg.wire, WireFormat::I8);
+        assert!(!cfg.error_feedback);
+        let cfg = build_config(&parse(&["train"])).unwrap();
+        assert_eq!(cfg.wire, WireFormat::F32);
+        assert!(cfg.error_feedback);
+        assert!(build_config(&parse(&["train", "--wire", "f64"])).is_err());
+        // dist_config carries both knobs through to the engines
+        let mut ex = ExperimentConfig::default();
+        ex.wire = WireFormat::F16;
+        ex.error_feedback = false;
+        let d = dist_config(&ex);
+        assert_eq!(d.wire, WireFormat::F16);
+        assert!(!d.error_feedback);
     }
 
     #[test]

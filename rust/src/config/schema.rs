@@ -192,6 +192,12 @@ pub struct ExperimentConfig {
     /// EASGD elastic coefficient (paper's alpha-like moving rate).
     pub easgd_beta: f32,
     pub network: NetworkModel,
+    /// Payload encoding for the bulk distributed uploads
+    /// (`--wire {f32,f16,int8}`, TOML `wire = "int8"`).
+    pub wire: crate::dist::codec::WireFormat,
+    /// Error-feedback residuals when `wire` is lossy; disabled by the
+    /// `--no-error-feedback` ablation (TOML `error_feedback = false`).
+    pub error_feedback: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -211,6 +217,8 @@ impl Default for ExperimentConfig {
             decay: 1.0,
             easgd_beta: 0.9,
             network: NetworkModel::default(),
+            wire: crate::dist::codec::WireFormat::F32,
+            error_feedback: true,
         }
     }
 }
@@ -279,6 +287,13 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_float("network.hetero_spread") {
             cfg.network.hetero_spread = v;
+        }
+        if let Some(v) = doc.get_str("wire") {
+            cfg.wire = crate::dist::codec::WireFormat::parse(v)
+                .with_context(|| format!("unknown wire format {v:?} (f32 | f16 | int8)"))?;
+        }
+        if let Some(v) = doc.get_bool("error_feedback") {
+            cfg.error_feedback = v;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -365,6 +380,25 @@ mod tests {
         assert_eq!(cfg.problem, Problem::Ridge); // inferred from dataset
         assert!((cfg.network.latency_s - 200e-6).abs() < 1e-12);
         assert_eq!(cfg.network.hetero_spread, 2.0);
+    }
+
+    #[test]
+    fn wire_keys_parse_from_toml() {
+        use crate::dist::codec::WireFormat;
+        let cfg = ExperimentConfig::from_toml_str(
+            r#"
+            wire = "int8"
+            error_feedback = false
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.wire, WireFormat::I8);
+        assert!(!cfg.error_feedback);
+        // defaults: exact wire, EF on
+        let cfg = ExperimentConfig::from_toml_str("eta = 0.1").unwrap();
+        assert_eq!(cfg.wire, WireFormat::F32);
+        assert!(cfg.error_feedback);
+        assert!(ExperimentConfig::from_toml_str(r#"wire = "f64""#).is_err());
     }
 
     #[test]

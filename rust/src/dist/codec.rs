@@ -24,17 +24,38 @@
 //! Payload vectors are self-describing:
 //!
 //! ```text
-//! dense:  | mode=0: u8 | d: u32 | d x f32                        |
-//! sparse: | mode=1: u8 | d: u32 | nnz: u32 | nnz x (idx:u32,f32) |
+//! dense f32:   | mode=0: u8 | d: u32 | d x f32                              |
+//! sparse f32:  | mode=1: u8 | d: u32 | nnz: u32 | nnz x (idx:u32, f32)      |
+//! dense f16:   | mode=2: u8 | d: u32 | d x f16                              |
+//! sparse f16:  | mode=3: u8 | d: u32 | nnz: u32 | nnz x (idx:u32, f16)      |
+//! dense int8:  | mode=4: u8 | d: u32 | scale: f32 | d x i8                  |
+//! sparse int8: | mode=5: u8 | d: u32 | scale: f32 | nnz: u32 | nnz x        |
+//!              |                                    (idx:u32, i8)           |
 //! ```
 //!
 //! Sparse entries are strictly-increasing `(index, value)` pairs of the
 //! nonzero coordinates. The encoder picks sparse automatically when it is
-//! strictly smaller than dense (`4 + 8*nnz < 4*d`), and only for the
-//! payloads that are genuinely sparse on text-scale workloads:
-//! `Upload::Delta` and `Upload::GradPartial`. Every other vector (full
-//! iterates, barrier states, views) is always dense. Decoders accept
-//! either mode anywhere.
+//! strictly smaller than dense at the session's [`WireFormat`] (f32:
+//! `4 + 8*nnz < 4*d`; f16: `4 + 6*nnz < 2*d`; int8: `4 + 5*nnz < d`),
+//! and only for the payloads that are genuinely sparse on text-scale
+//! workloads: `Upload::Delta` and `Upload::GradPartial`.
+//!
+//! The quantized tier applies to the bulk algorithm payloads — `Delta`,
+//! `State`, and `GradPartial` vectors. `XOnly`/`ElasticPush`/`GradStep`
+//! uploads and `GlobalView` replies are always f32: they carry full
+//! iterates whose quantization error would feed straight back into the
+//! algorithm state with no error-feedback residual to absorb it.
+//! Decoders accept any mode anywhere (the vectors describe themselves).
+//!
+//! f16 values are IEEE 754 binary16, converted with round-to-nearest-even
+//! (hand-rolled: no external crate). int8 vectors carry a per-frame
+//! power-of-two scale `s = pow2_at_least(max|v| / 127)` and code each
+//! value as `round(v / s)` in [-127, 127]. Values already on the target
+//! grid (what [`quantize_in_place`] produces, which is what the
+//! error-feedback path in `dist::local` ships) round-trip bit-exactly:
+//! the re-derived scale is a power of two dividing every grid value, so
+//! encode/decode is lossless and the TCP transport stays bit-compatible
+//! with the in-process drivers at every wire format.
 //!
 //! Decoding arbitrary byte soup must return a [`CodecError`], never
 //! panic — see `rust/tests/codec_roundtrip.rs` for the property suite.
@@ -54,10 +75,11 @@ pub const MAX_WIRE_DIM: u32 = MAX_FRAME_BODY / 4;
 
 /// Largest frame body any message of a `max_dim`-dimensional session can
 /// legitimately occupy: tag + one u64 scalar + two vectors at their
-/// worst-case encoding (`9 + 8*d`, the sparse layout at full density).
-/// Lets a transport reject a hostile length prefix before allocating the
-/// body buffer (see `transport::read_frame_bounded`). `max_dim = 0`
-/// still admits handshake frames.
+/// worst-case encoding (`9 + 8*d`, the sparse f32 layout at full
+/// density; every quantized layout the encoder would actually pick is
+/// smaller). Lets a transport reject a hostile length prefix before
+/// allocating the body buffer (see `transport::read_frame_bounded`).
+/// `max_dim = 0` still admits handshake frames.
 pub fn max_body_for_dim(max_dim: u32) -> u32 {
     let vec = 9u64 + 8 * max_dim as u64;
     (1 + 8 + 2 * vec).min(MAX_FRAME_BODY as u64) as u32
@@ -77,6 +99,72 @@ const TAG_GOODBYE: u8 = 10;
 
 const MODE_DENSE: u8 = 0;
 const MODE_SPARSE: u8 = 1;
+const MODE_DENSE_F16: u8 = 2;
+const MODE_SPARSE_F16: u8 = 3;
+const MODE_DENSE_I8: u8 = 4;
+const MODE_SPARSE_I8: u8 = 5;
+
+/// Payload encoding for the quantized-tier vectors (`Delta`, `State`,
+/// `GradPartial`). Selected per session (`--wire {f32,f16,int8}`) and
+/// agreed in the `Hello` handshake; views and the remaining upload kinds
+/// are always f32 regardless.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WireFormat {
+    /// Full-precision f32 payloads (the PR 4 layout, byte-identical).
+    #[default]
+    F32,
+    /// IEEE binary16 payloads: half the vector bytes.
+    F16,
+    /// Per-frame power-of-two scale + int8 codes: ~quarter the bytes.
+    I8,
+}
+
+impl WireFormat {
+    pub const ALL: [WireFormat; 3] = [WireFormat::F32, WireFormat::F16, WireFormat::I8];
+
+    /// CLI / TOML spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            WireFormat::F32 => "f32",
+            WireFormat::F16 => "f16",
+            WireFormat::I8 => "int8",
+        }
+    }
+
+    /// Parse the CLI / TOML spelling (`i8` accepted as an alias).
+    pub fn parse(s: &str) -> Option<WireFormat> {
+        match s {
+            "f32" => Some(WireFormat::F32),
+            "f16" => Some(WireFormat::F16),
+            "int8" | "i8" => Some(WireFormat::I8),
+            _ => None,
+        }
+    }
+
+    /// On-wire code (the `wire` byte of the `Hello` handshake).
+    pub fn code(self) -> u8 {
+        match self {
+            WireFormat::F32 => 0,
+            WireFormat::F16 => 1,
+            WireFormat::I8 => 2,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<WireFormat, CodecError> {
+        match c {
+            0 => Ok(WireFormat::F32),
+            1 => Ok(WireFormat::F16),
+            2 => Ok(WireFormat::I8),
+            other => Err(CodecError::UnknownWireFormat(other)),
+        }
+    }
+}
+
+impl std::fmt::Display for WireFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
 
 /// Worker handshake: sent once per connection, before any upload, so the
 /// server can map the socket to a worker slot, validate the topology, and
@@ -94,6 +182,9 @@ pub struct Hello {
     pub n_s: u64,
     /// Feature dimension (all workers must agree).
     pub d: u32,
+    /// Payload encoding this worker will upload with; must equal the
+    /// server's configured format so the byte accounting agrees.
+    pub wire: WireFormat,
 }
 
 /// Every message the transport can carry.
@@ -126,6 +217,8 @@ pub enum CodecError {
     LengthMismatch { declared: u32, actual: usize },
     UnknownTag(u8),
     UnknownVecMode(u8),
+    /// Hello declared a wire-format code the codec does not know.
+    UnknownWireFormat(u8),
     /// Declared dimension too large to safely allocate.
     DimTooLarge { d: u32 },
     /// Sparse nnz overruns the declared dimension.
@@ -150,6 +243,7 @@ impl std::fmt::Display for CodecError {
             }
             CodecError::UnknownTag(t) => write!(f, "unknown message tag {t}"),
             CodecError::UnknownVecMode(m) => write!(f, "unknown vector mode {m}"),
+            CodecError::UnknownWireFormat(c) => write!(f, "unknown wire-format code {c}"),
             CodecError::DimTooLarge { d } => write!(f, "vector dimension {d} exceeds cap"),
             CodecError::NnzOverrun { nnz, d } => {
                 write!(f, "sparse nnz {nnz} overruns declared dimension {d}")
@@ -167,60 +261,212 @@ impl std::fmt::Display for CodecError {
 impl std::error::Error for CodecError {}
 
 // ---------------------------------------------------------------------------
+// f16 conversion and grid quantization
+// ---------------------------------------------------------------------------
+
+/// Convert an f32 to IEEE binary16 bits, round-to-nearest-even. Values an
+/// f16 can hold exactly convert losslessly (which is what makes the
+/// quantize-then-encode pipeline bit-exact on the wire).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp32 = (bits >> 23) & 0xFF;
+    let mant = bits & 0x007F_FFFF;
+    if exp32 == 0xFF {
+        // inf / NaN (a NaN keeps a payload bit so it stays NaN)
+        return sign | 0x7C00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp32 as i32 - 127;
+    if e >= 16 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if e >= -14 {
+        // normal half: 23 -> 10 mantissa bits, round-to-nearest-even
+        let mut m = (mant >> 13) as u16;
+        let rem = mant & 0x1FFF;
+        if rem > 0x1000 || (rem == 0x1000 && m & 1 == 1) {
+            m += 1;
+        }
+        let mut he = (e + 15) as u16;
+        if m == 0x400 {
+            // mantissa carry bumps the exponent
+            m = 0;
+            he += 1;
+            if he >= 31 {
+                return sign | 0x7C00;
+            }
+        }
+        return sign | (he << 10) | m;
+    }
+    if e >= -25 {
+        // subnormal half: shift the implicit-1 mantissa into place, RNE
+        // on the dropped bits (a carry to 0x400 lands on the smallest
+        // normal, which is exactly the right value)
+        let full = mant | 0x0080_0000;
+        let shift = (-e - 1) as u32; // 14..=24
+        let mut m = (full >> shift) as u16;
+        let rem = full & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        if rem > half || (rem == half && m & 1 == 1) {
+            m += 1;
+        }
+        return sign | m;
+    }
+    sign // underflow to signed zero
+}
+
+/// Convert IEEE binary16 bits to the f32 with the same value (exact:
+/// every f16 value is representable in f32).
+pub fn f16_bits_to_f32(bits: u16) -> f32 {
+    let sign = (bits as u32 & 0x8000) << 16;
+    let exp = (bits >> 10) & 0x1F;
+    let mant = (bits & 0x3FF) as u32;
+    match (exp, mant) {
+        (0, 0) => f32::from_bits(sign),
+        (0, m) => {
+            // subnormal: m * 2^-24, exact in f32
+            let mag = m as f32 * f32::from_bits(0x3380_0000);
+            if sign != 0 {
+                -mag
+            } else {
+                mag
+            }
+        }
+        (31, 0) => f32::from_bits(sign | 0x7F80_0000),
+        (31, _) => f32::from_bits(sign | 0x7FC0_0000 | (mant << 13)),
+        _ => f32::from_bits(sign | ((exp as u32 + 112) << 23) | (mant << 13)),
+    }
+}
+
+/// Round an f32 to the nearest f16-representable value (as an f32).
+pub fn f16_round(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Smallest power of two >= `x`, clamped below at `f32::MIN_POSITIVE`
+/// (zero, subnormal, and NaN inputs all map there; a power of two comes
+/// back unchanged; just-past-finite inputs saturate to infinity).
+pub fn pow2_at_least(x: f32) -> f32 {
+    if !(x > f32::MIN_POSITIVE) {
+        return f32::MIN_POSITIVE;
+    }
+    let bits = x.to_bits();
+    if bits & 0x007F_FFFF == 0 {
+        return x;
+    }
+    f32::from_bits(((bits >> 23) + 1) << 23)
+}
+
+/// The int8 grid scale for a frame whose largest magnitude is `max_abs`:
+/// the smallest power of two `s` with `max_abs / 127 <= s`. A power of
+/// two divides every grid multiple exactly, which is what makes the
+/// encoder's re-derived scale lossless on already-quantized input.
+pub fn i8_grid_scale(max_abs: f32) -> f32 {
+    pow2_at_least(max_abs / 127.0)
+}
+
+/// Round `x` onto the int8 grid `{k * scale : |k| <= 127}`. Exact zeros
+/// stay +0.0 so the sparse layout's "nonzero value <=> nonzero code"
+/// invariant holds after quantization.
+pub fn i8_round(x: f32, scale: f32) -> f32 {
+    let q = (x / scale).round().clamp(-127.0, 127.0) * scale;
+    if q == 0.0 {
+        0.0
+    } else {
+        q
+    }
+}
+
+/// Round every element of `v` onto the representable grid of `wire`
+/// (no-op for f32). This is the quantization the algorithm layer applies
+/// *before* encoding, so all three drivers — threads, simulator, TCP —
+/// run identical math and the codec's job reduces to a lossless
+/// re-encoding of grid values.
+pub fn quantize_in_place(v: &mut [f32], wire: WireFormat) {
+    match wire {
+        WireFormat::F32 => {}
+        WireFormat::F16 => {
+            for x in v.iter_mut() {
+                *x = f16_round(*x);
+            }
+        }
+        WireFormat::I8 => {
+            let max = v.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let s = i8_grid_scale(max);
+            for x in v.iter_mut() {
+                *x = i8_round(*x, s);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // encoding
 // ---------------------------------------------------------------------------
 
-/// Which encoding the encoder picks for one vector. Shared by the size
+/// Which layout the encoder picks for one vector. Shared by the size
 /// accountants and the writer so `bytes()` can never drift from the wire.
 enum VecEnc {
     Dense,
     Sparse { nnz: usize },
 }
 
-fn plan_vec(v: &[f32], allow_sparse: bool) -> VecEnc {
+fn plan_vec(v: &[f32], allow_sparse: bool, wire: WireFormat) -> VecEnc {
     if allow_sparse {
         let nnz = v.iter().filter(|&&x| x != 0.0).count();
-        // sparse body (after mode+d): 4 + 8*nnz vs dense 4*d; ties go dense
-        if 4 + 8 * nnz < 4 * v.len() {
+        // sparse body (after mode+d) vs dense at this format's value
+        // width; ties go dense
+        let sparse_wins = match wire {
+            WireFormat::F32 => 4 + 8 * nnz < 4 * v.len(),
+            WireFormat::F16 => 4 + 6 * nnz < 2 * v.len(),
+            WireFormat::I8 => 4 + 5 * nnz < v.len(),
+        };
+        if sparse_wins {
             return VecEnc::Sparse { nnz };
         }
     }
     VecEnc::Dense
 }
 
-fn vec_len(v: &[f32], allow_sparse: bool) -> usize {
-    match plan_vec(v, allow_sparse) {
-        VecEnc::Dense => 1 + 4 + 4 * v.len(),
-        VecEnc::Sparse { nnz } => 1 + 4 + 4 + 8 * nnz,
+fn vec_len(v: &[f32], allow_sparse: bool, wire: WireFormat) -> usize {
+    match (plan_vec(v, allow_sparse, wire), wire) {
+        (VecEnc::Dense, WireFormat::F32) => 1 + 4 + 4 * v.len(),
+        (VecEnc::Sparse { nnz }, WireFormat::F32) => 1 + 4 + 4 + 8 * nnz,
+        (VecEnc::Dense, WireFormat::F16) => 1 + 4 + 2 * v.len(),
+        (VecEnc::Sparse { nnz }, WireFormat::F16) => 1 + 4 + 4 + 6 * nnz,
+        (VecEnc::Dense, WireFormat::I8) => 1 + 4 + 4 + v.len(),
+        (VecEnc::Sparse { nnz }, WireFormat::I8) => 1 + 4 + 4 + 4 + 5 * nnz,
     }
 }
 
-fn upload_body_len(up: &Upload) -> usize {
+fn upload_body_len(up: &Upload, wire: WireFormat) -> usize {
     1 + match up {
         Upload::Ready => 0,
-        Upload::Delta { dx, dgbar } => vec_len(dx, true) + vec_len(dgbar, true),
-        Upload::State { x, gbar } => vec_len(x, false) + vec_len(gbar, false),
-        Upload::GradPartial { gsum, .. } => 8 + vec_len(gsum, true),
-        Upload::XOnly { x } | Upload::ElasticPush { x } => vec_len(x, false),
-        Upload::GradStep { dx } => vec_len(dx, false),
+        Upload::Delta { dx, dgbar } => vec_len(dx, true, wire) + vec_len(dgbar, true, wire),
+        Upload::State { x, gbar } => vec_len(x, false, wire) + vec_len(gbar, false, wire),
+        Upload::GradPartial { gsum, .. } => 8 + vec_len(gsum, true, wire),
+        // full-iterate payloads stay f32 at every wire format
+        Upload::XOnly { x } | Upload::ElasticPush { x } => vec_len(x, false, WireFormat::F32),
+        Upload::GradStep { dx } => vec_len(dx, false, WireFormat::F32),
     }
 }
 
-/// Encoded frame size (prefix + body) of an upload — the value behind
-/// `Upload::bytes()`.
-pub fn upload_frame_len(up: &Upload) -> u64 {
-    4 + upload_body_len(up) as u64
+/// Encoded frame size (prefix + body) of an upload at the session wire
+/// format — the value behind `Upload::bytes()`.
+pub fn upload_frame_len(up: &Upload, wire: WireFormat) -> u64 {
+    4 + upload_body_len(up, wire) as u64
 }
 
 /// Encoded frame size (prefix + body) of a view — the value behind
-/// `GlobalView::bytes()`.
+/// `GlobalView::bytes()`. Views are always f32.
 pub fn view_frame_len(v: &GlobalView) -> u64 {
-    4 + (1 + vec_len(&v.x, false) + vec_len(&v.gbar, false)) as u64
+    let f32w = WireFormat::F32;
+    4 + (1 + vec_len(&v.x, false, f32w) + vec_len(&v.gbar, false, f32w)) as u64
 }
 
 /// Encoded frame size of a [`Hello`] handshake.
 pub fn hello_frame_len() -> u64 {
-    4 + (1 + 4 + 4 + 8 + 4)
+    4 + (1 + 4 + 4 + 8 + 4 + 1)
 }
 
 /// Encoded frame size of a server-push `Stop` (prefix + tag).
@@ -245,17 +491,31 @@ fn put_f32(buf: &mut Vec<u8>, v: f32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-fn write_vec(buf: &mut Vec<u8>, v: &[f32], allow_sparse: bool) {
+fn put_f16(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+}
+
+fn write_vec(buf: &mut Vec<u8>, v: &[f32], allow_sparse: bool, wire: WireFormat) {
     assert!(v.len() <= u32::MAX as usize, "vector too long for the wire");
-    match plan_vec(v, allow_sparse) {
-        VecEnc::Dense => {
+    let plan = plan_vec(v, allow_sparse, wire);
+    // int8 frames re-derive the grid scale from the values; lossless when
+    // the values were quantized onto an int8 grid first (see module doc)
+    let scale = match wire {
+        WireFormat::I8 => {
+            let max = v.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            i8_grid_scale(max)
+        }
+        _ => 0.0,
+    };
+    match (plan, wire) {
+        (VecEnc::Dense, WireFormat::F32) => {
             buf.push(MODE_DENSE);
             put_u32(buf, v.len() as u32);
             for &x in v {
                 put_f32(buf, x);
             }
         }
-        VecEnc::Sparse { nnz } => {
+        (VecEnc::Sparse { nnz }, WireFormat::F32) => {
             buf.push(MODE_SPARSE);
             put_u32(buf, v.len() as u32);
             put_u32(buf, nnz as u32);
@@ -263,6 +523,45 @@ fn write_vec(buf: &mut Vec<u8>, v: &[f32], allow_sparse: bool) {
                 if x != 0.0 {
                     put_u32(buf, i as u32);
                     put_f32(buf, x);
+                }
+            }
+        }
+        (VecEnc::Dense, WireFormat::F16) => {
+            buf.push(MODE_DENSE_F16);
+            put_u32(buf, v.len() as u32);
+            for &x in v {
+                put_f16(buf, x);
+            }
+        }
+        (VecEnc::Sparse { nnz }, WireFormat::F16) => {
+            buf.push(MODE_SPARSE_F16);
+            put_u32(buf, v.len() as u32);
+            put_u32(buf, nnz as u32);
+            for (i, &x) in v.iter().enumerate() {
+                if x != 0.0 {
+                    put_u32(buf, i as u32);
+                    put_f16(buf, x);
+                }
+            }
+        }
+        (VecEnc::Dense, WireFormat::I8) => {
+            buf.push(MODE_DENSE_I8);
+            put_u32(buf, v.len() as u32);
+            put_f32(buf, scale);
+            for &x in v {
+                // saturating float->int cast: NaN -> 0, out-of-range clamps
+                buf.push((x / scale).round().clamp(-127.0, 127.0) as i8 as u8);
+            }
+        }
+        (VecEnc::Sparse { nnz }, WireFormat::I8) => {
+            buf.push(MODE_SPARSE_I8);
+            put_u32(buf, v.len() as u32);
+            put_f32(buf, scale);
+            put_u32(buf, nnz as u32);
+            for (i, &x) in v.iter().enumerate() {
+                if x != 0.0 {
+                    put_u32(buf, i as u32);
+                    buf.push((x / scale).round().clamp(-127.0, 127.0) as i8 as u8);
                 }
             }
         }
@@ -283,59 +582,62 @@ fn with_prefix_into(buf: &mut Vec<u8>, fill: impl FnOnce(&mut Vec<u8>)) {
 }
 
 /// Encode one upload into a reusable buffer (complete frame, prefix
-/// included; previous contents are discarded).
-pub fn encode_upload_into(up: &Upload, buf: &mut Vec<u8>) {
+/// included; previous contents are discarded). `wire` selects the payload
+/// encoding for the quantized-tier vectors (Delta/State/GradPartial);
+/// everything else is f32 regardless.
+pub fn encode_upload_into(up: &Upload, wire: WireFormat, buf: &mut Vec<u8>) {
+    let f32w = WireFormat::F32;
     with_prefix_into(buf, |buf| match up {
         Upload::Ready => buf.push(TAG_READY),
         Upload::Delta { dx, dgbar } => {
             buf.push(TAG_DELTA);
-            write_vec(buf, dx, true);
-            write_vec(buf, dgbar, true);
+            write_vec(buf, dx, true, wire);
+            write_vec(buf, dgbar, true, wire);
         }
         Upload::State { x, gbar } => {
             buf.push(TAG_STATE);
-            write_vec(buf, x, false);
-            write_vec(buf, gbar, false);
+            write_vec(buf, x, false, wire);
+            write_vec(buf, gbar, false, wire);
         }
         Upload::GradPartial { gsum, n } => {
             buf.push(TAG_GRAD_PARTIAL);
             put_u64(buf, *n);
-            write_vec(buf, gsum, true);
+            write_vec(buf, gsum, true, wire);
         }
         Upload::XOnly { x } => {
             buf.push(TAG_X_ONLY);
-            write_vec(buf, x, false);
+            write_vec(buf, x, false, f32w);
         }
         Upload::ElasticPush { x } => {
             buf.push(TAG_ELASTIC_PUSH);
-            write_vec(buf, x, false);
+            write_vec(buf, x, false, f32w);
         }
         Upload::GradStep { dx } => {
             buf.push(TAG_GRAD_STEP);
-            write_vec(buf, dx, false);
+            write_vec(buf, dx, false, f32w);
         }
     });
     debug_assert_eq!(
         buf.len() as u64,
-        upload_frame_len(up),
+        upload_frame_len(up, wire),
         "bytes() drifted from the encoder"
     );
 }
 
 /// Encode one upload as a complete frame (length prefix included).
-pub fn encode_upload(up: &Upload) -> Vec<u8> {
+pub fn encode_upload(up: &Upload, wire: WireFormat) -> Vec<u8> {
     let mut buf = Vec::new();
-    encode_upload_into(up, &mut buf);
+    encode_upload_into(up, wire, &mut buf);
     buf
 }
 
 /// Encode one view into a reusable buffer (complete frame, prefix
-/// included; previous contents are discarded).
+/// included; previous contents are discarded). Views are always f32.
 pub fn encode_view_into(v: &GlobalView, buf: &mut Vec<u8>) {
     with_prefix_into(buf, |buf| {
         buf.push(TAG_VIEW);
-        write_vec(buf, &v.x, false);
-        write_vec(buf, &v.gbar, false);
+        write_vec(buf, &v.x, false, WireFormat::F32);
+        write_vec(buf, &v.gbar, false, WireFormat::F32);
     });
     debug_assert_eq!(
         buf.len() as u64,
@@ -360,6 +662,7 @@ pub fn encode_hello_into(h: &Hello, buf: &mut Vec<u8>) {
         put_u32(buf, h.p);
         put_u64(buf, h.n_s);
         put_u32(buf, h.d);
+        buf.push(h.wire.code());
     });
     debug_assert_eq!(buf.len() as u64, hello_frame_len());
 }
@@ -432,6 +735,10 @@ impl<'a> Cursor<'a> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
+    fn f32(&mut self) -> Result<f32, CodecError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
     fn finish(&self) -> Result<(), CodecError> {
         let extra = self.buf.len() - self.pos;
         if extra != 0 {
@@ -439,6 +746,34 @@ impl<'a> Cursor<'a> {
         }
         Ok(())
     }
+}
+
+/// Validate and copy a sparse run of `(idx, value)` entries into a dense
+/// zeroed vector. `entry` is the byte width of one pair; `value` decodes
+/// the non-index bytes of a pair.
+fn fill_sparse(
+    cur: &mut Cursor,
+    d: u32,
+    entry: usize,
+    value: impl Fn(&[u8]) -> f32,
+) -> Result<Vec<f32>, CodecError> {
+    let nnz = cur.u32()?;
+    if nnz > d {
+        return Err(CodecError::NnzOverrun { nnz, d });
+    }
+    let raw = cur.take(entry * nnz as usize)?;
+    let mut v = vec![0.0f32; d as usize];
+    let mut prev: Option<u32> = None;
+    for pair in raw.chunks_exact(entry) {
+        let idx = u32::from_le_bytes(pair[..4].try_into().unwrap());
+        let increasing = prev.is_none_or(|p| idx > p);
+        if idx >= d || !increasing {
+            return Err(CodecError::IndexInvalid { idx, d });
+        }
+        prev = Some(idx);
+        v[idx as usize] = value(&pair[4..]);
+    }
+    Ok(v)
 }
 
 fn read_vec(cur: &mut Cursor, max_dim: u32) -> Result<Vec<f32>, CodecError> {
@@ -458,25 +793,27 @@ fn read_vec(cur: &mut Cursor, max_dim: u32) -> Result<Vec<f32>, CodecError> {
                 .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
                 .collect())
         }
-        MODE_SPARSE => {
-            let nnz = cur.u32()?;
-            if nnz > d {
-                return Err(CodecError::NnzOverrun { nnz, d });
-            }
-            let raw = cur.take(8 * nnz as usize)?;
-            let mut v = vec![0.0f32; d as usize];
-            let mut prev: Option<u32> = None;
-            for pair in raw.chunks_exact(8) {
-                let idx = u32::from_le_bytes(pair[..4].try_into().unwrap());
-                let val = f32::from_le_bytes(pair[4..].try_into().unwrap());
-                let increasing = prev.is_none_or(|p| idx > p);
-                if idx >= d || !increasing {
-                    return Err(CodecError::IndexInvalid { idx, d });
-                }
-                prev = Some(idx);
-                v[idx as usize] = val;
-            }
-            Ok(v)
+        MODE_SPARSE => fill_sparse(cur, d, 8, |b| {
+            f32::from_le_bytes(b.try_into().unwrap())
+        }),
+        MODE_DENSE_F16 => {
+            let raw = cur.take(2 * d as usize)?;
+            Ok(raw
+                .chunks_exact(2)
+                .map(|c| f16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap())))
+                .collect())
+        }
+        MODE_SPARSE_F16 => fill_sparse(cur, d, 6, |b| {
+            f16_bits_to_f32(u16::from_le_bytes(b.try_into().unwrap()))
+        }),
+        MODE_DENSE_I8 => {
+            let scale = cur.f32()?;
+            let raw = cur.take(d as usize)?;
+            Ok(raw.iter().map(|&b| b as i8 as f32 * scale).collect())
+        }
+        MODE_SPARSE_I8 => {
+            let scale = cur.f32()?;
+            fill_sparse(cur, d, 5, |b| b[0] as i8 as f32 * scale)
         }
         other => Err(CodecError::UnknownVecMode(other)),
     }
@@ -526,7 +863,8 @@ pub fn decode_body_bounded(body: &[u8], max_dim: u32) -> Result<WireMsg, CodecEr
             let p = cur.u32()?;
             let n_s = cur.u64()?;
             let d = cur.u32()?;
-            WireMsg::Hello(Hello { s, p, n_s, d })
+            let wire = WireFormat::from_code(cur.u8()?)?;
+            WireMsg::Hello(Hello { s, p, n_s, d, wire })
         }
         TAG_STOP => WireMsg::Stop,
         TAG_GOODBYE => WireMsg::Goodbye { rounds: cur.u64()? },
@@ -563,23 +901,47 @@ pub fn decode_bounded(frame: &[u8], max_dim: u32) -> Result<WireMsg, CodecError>
 mod tests {
     use super::*;
 
+    const F32W: WireFormat = WireFormat::F32;
+
     #[test]
     fn ready_is_five_bytes() {
-        let frame = encode_upload(&Upload::Ready);
+        let frame = encode_upload(&Upload::Ready, F32W);
         assert_eq!(frame, vec![1, 0, 0, 0, TAG_READY]);
-        assert_eq!(upload_frame_len(&Upload::Ready), 5);
+        assert_eq!(upload_frame_len(&Upload::Ready, F32W), 5);
         assert_eq!(decode(&frame), Ok(WireMsg::Upload(Upload::Ready)));
+        // Ready has no payload: byte-identical at every wire format
+        for wire in WireFormat::ALL {
+            assert_eq!(encode_upload(&Upload::Ready, wire), frame);
+        }
     }
 
     #[test]
     fn dense_sparse_threshold() {
-        // d=4: sparse wins only when 4 + 8*nnz < 16, i.e. nnz <= 1
+        // d=4: f32 sparse wins only when 4 + 8*nnz < 16, i.e. nnz <= 1
         let sparse1 = vec![0.0, 2.5, 0.0, 0.0];
-        assert_eq!(vec_len(&sparse1, true), 1 + 4 + 4 + 8);
+        assert_eq!(vec_len(&sparse1, true, F32W), 1 + 4 + 4 + 8);
         let tie = vec![0.0, 2.5, 0.0, 3.5]; // nnz=2: 20 vs dense 16 -> dense
-        assert_eq!(vec_len(&tie, true), 1 + 4 + 16);
+        assert_eq!(vec_len(&tie, true, F32W), 1 + 4 + 16);
         // sparse never chosen when disallowed
-        assert_eq!(vec_len(&sparse1, false), 1 + 4 + 16);
+        assert_eq!(vec_len(&sparse1, false, F32W), 1 + 4 + 16);
+    }
+
+    #[test]
+    fn quantized_thresholds_use_their_own_value_width() {
+        // d=16, nnz=3: f16 sparse 4+18=22 < dense 32; int8 sparse
+        // 4+15=19 >= 16 -> dense
+        let mut v = vec![0.0f32; 16];
+        v[1] = 1.0;
+        v[5] = -2.0;
+        v[9] = 0.5;
+        assert_eq!(vec_len(&v, true, WireFormat::F16), 1 + 4 + 4 + 6 * 3);
+        assert_eq!(vec_len(&v, true, WireFormat::I8), 1 + 4 + 4 + 16);
+        // d=32 flips int8 to sparse: 4+15 < 32
+        let mut w = vec![0.0f32; 32];
+        w[1] = 1.0;
+        w[5] = -2.0;
+        w[9] = 0.5;
+        assert_eq!(vec_len(&w, true, WireFormat::I8), 1 + 4 + 4 + 4 + 5 * 3);
     }
 
     #[test]
@@ -609,13 +971,13 @@ mod tests {
     fn encode_into_reuses_the_buffer_and_matches_the_allocating_path() {
         let mut buf = Vec::new();
         let big = Upload::State { x: vec![1.0; 64], gbar: vec![-1.0; 64] };
-        encode_upload_into(&big, &mut buf);
-        assert_eq!(buf, encode_upload(&big));
+        encode_upload_into(&big, F32W, &mut buf);
+        assert_eq!(buf, encode_upload(&big, F32W));
         let cap = buf.capacity();
         // a smaller frame reuses the grown allocation
         let small = Upload::XOnly { x: vec![2.0; 8] };
-        encode_upload_into(&small, &mut buf);
-        assert_eq!(buf, encode_upload(&small));
+        encode_upload_into(&small, F32W, &mut buf);
+        assert_eq!(buf, encode_upload(&small, F32W));
         assert_eq!(buf.capacity(), cap, "reused buffer must not reallocate");
         let v = GlobalView { x: vec![0.5; 8], gbar: vec![0.25; 8] };
         encode_view_into(&v, &mut buf);
@@ -624,10 +986,32 @@ mod tests {
 
     #[test]
     fn hello_roundtrip_and_len() {
-        let h = Hello { s: 3, p: 4, n_s: 12345, d: 77 };
-        let frame = encode_hello(&h);
-        assert_eq!(frame.len() as u64, hello_frame_len());
-        assert_eq!(decode(&frame), Ok(WireMsg::Hello(h)));
+        for wire in WireFormat::ALL {
+            let h = Hello { s: 3, p: 4, n_s: 12345, d: 77, wire };
+            let frame = encode_hello(&h);
+            assert_eq!(frame.len() as u64, hello_frame_len());
+            assert_eq!(decode(&frame), Ok(WireMsg::Hello(h)));
+        }
+    }
+
+    #[test]
+    fn hello_with_unknown_wire_code_is_rejected() {
+        let h = Hello { s: 0, p: 1, n_s: 1, d: 1, wire: WireFormat::F32 };
+        let mut frame = encode_hello(&h);
+        let last = frame.len() - 1;
+        frame[last] = 9;
+        assert_eq!(decode(&frame), Err(CodecError::UnknownWireFormat(9)));
+    }
+
+    #[test]
+    fn wire_format_names_parse_back() {
+        for wire in WireFormat::ALL {
+            assert_eq!(WireFormat::parse(wire.name()), Some(wire));
+            assert_eq!(WireFormat::from_code(wire.code()), Ok(wire));
+        }
+        assert_eq!(WireFormat::parse("i8"), Some(WireFormat::I8));
+        assert_eq!(WireFormat::parse("fp16"), None);
+        assert!(WireFormat::from_code(3).is_err());
     }
 
     /// A transport that knows the session dimension can reject a foreign
@@ -635,7 +1019,7 @@ mod tests {
     #[test]
     fn bounded_decode_rejects_foreign_dimension() {
         let up = Upload::XOnly { x: vec![1.0; 8] };
-        let frame = encode_upload(&up);
+        let frame = encode_upload(&up, F32W);
         assert!(decode_bounded(&frame, 8).is_ok());
         assert_eq!(
             decode_bounded(&frame, 7),
@@ -649,9 +1033,107 @@ mod tests {
         dx[3] = 1.5;
         dx[60] = -2.25;
         let up = Upload::Delta { dx, dgbar: vec![0.0; 64] };
-        let frame = encode_upload(&up);
-        assert_eq!(frame.len() as u64, upload_frame_len(&up));
+        let frame = encode_upload(&up, F32W);
+        assert_eq!(frame.len() as u64, upload_frame_len(&up, F32W));
         assert_eq!(decode(&frame), Ok(WireMsg::Upload(up)));
+    }
+
+    /// Grid-aligned values survive every quantized encoding bit-exactly —
+    /// the invariant TCP-vs-in-process parity rests on.
+    #[test]
+    fn quantized_roundtrip_is_exact_on_grid_values() {
+        let raw: Vec<f32> = vec![0.0, 1.5, -0.011, 3.25e-3, -700.0, 0.125, 0.0, 42.42];
+        for wire in [WireFormat::F16, WireFormat::I8] {
+            let mut dx = raw.clone();
+            quantize_in_place(&mut dx, wire);
+            let mut dgbar = raw.iter().map(|x| -x * 0.5).collect::<Vec<_>>();
+            quantize_in_place(&mut dgbar, wire);
+            let up = Upload::Delta { dx, dgbar };
+            let frame = encode_upload(&up, wire);
+            assert_eq!(frame.len() as u64, upload_frame_len(&up, wire));
+            assert_eq!(decode(&frame), Ok(WireMsg::Upload(up)), "{wire}");
+        }
+    }
+
+    /// Quantization onto a grid is idempotent: re-quantizing changes
+    /// nothing, so EF residuals measured against shipped values are exact.
+    #[test]
+    fn quantize_in_place_is_idempotent() {
+        let raw: Vec<f32> = vec![0.3, -1e-6, 2.0e4, -0.07, 0.0, 9.99];
+        for wire in WireFormat::ALL {
+            let mut once = raw.clone();
+            quantize_in_place(&mut once, wire);
+            let mut twice = once.clone();
+            quantize_in_place(&mut twice, wire);
+            let a: Vec<u32> = once.iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u32> = twice.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a, b, "{wire}");
+        }
+    }
+
+    #[test]
+    fn f16_conversion_handles_the_edge_cases() {
+        // exact round trips for values f16 represents
+        for v in [0.0f32, -0.0, 1.0, -2.5, 65504.0, 6.1035156e-5, 5.9604645e-8] {
+            assert_eq!(f16_round(v).to_bits(), v.to_bits(), "{v}");
+        }
+        // signed zero is preserved
+        assert_eq!(f16_round(-0.0).to_bits(), (-0.0f32).to_bits());
+        // overflow saturates to infinity
+        assert_eq!(f16_round(1e30), f32::INFINITY);
+        assert_eq!(f16_round(-1e30), f32::NEG_INFINITY);
+        assert_eq!(f16_round(f32::INFINITY), f32::INFINITY);
+        // underflow flushes to (signed) zero
+        assert_eq!(f16_round(1e-10), 0.0);
+        assert_eq!(f16_round(-1e-10).to_bits(), (-0.0f32).to_bits());
+        // NaN stays NaN
+        assert!(f16_round(f32::NAN).is_nan());
+        // round-to-nearest-even at the 10-bit boundary
+        assert_eq!(f16_round(1.0 + 1.0 / 2048.0), 1.0); // tie -> even (down)
+        assert_eq!(f16_round(1.0 + 3.0 / 2048.0), 1.0 + 2.0 / 1024.0);
+    }
+
+    #[test]
+    fn pow2_at_least_brackets_its_input() {
+        assert_eq!(pow2_at_least(0.0), f32::MIN_POSITIVE);
+        assert_eq!(pow2_at_least(-3.0), f32::MIN_POSITIVE);
+        assert_eq!(pow2_at_least(0.25), 0.25);
+        assert_eq!(pow2_at_least(0.3), 0.5);
+        assert_eq!(pow2_at_least(1.0), 1.0);
+        assert_eq!(pow2_at_least(1.0001), 2.0);
+        assert_eq!(pow2_at_least(100.0), 128.0);
+        let big = pow2_at_least(f32::MAX);
+        assert!(big.is_infinite());
+    }
+
+    /// Hostile/malformed quantized vector payloads are rejected, never a
+    /// panic: truncated bodies, nnz overrun, bad indices, unknown modes.
+    #[test]
+    fn malformed_quantized_frames_error_cleanly() {
+        let mut dx = vec![0.0f32; 64];
+        dx[5] = 2.0;
+        dx[17] = -1.0;
+        let up = Upload::Delta { dx: dx.clone(), dgbar: dx };
+        for wire in [WireFormat::F16, WireFormat::I8] {
+            let frame = encode_upload(&up, wire);
+            // every truncation point decodes to an error, not a panic
+            for cut in 0..frame.len() {
+                let mut t = frame[..cut].to_vec();
+                if t.len() >= 4 {
+                    let body = (t.len() - 4) as u32;
+                    t[..4].copy_from_slice(&body.to_le_bytes());
+                }
+                assert!(decode(&t).is_err(), "{wire} cut={cut}");
+            }
+        }
+        // unknown vector mode (6 is one past the last quantized mode)
+        let mut bad = vec![0u8; 0];
+        bad.push(TAG_GRAD_STEP);
+        bad.push(6); // mode
+        bad.extend_from_slice(&1u32.to_le_bytes());
+        let mut frame = ((bad.len()) as u32).to_le_bytes().to_vec();
+        frame.extend_from_slice(&bad);
+        assert_eq!(decode(&frame), Err(CodecError::UnknownVecMode(6)));
     }
 
     #[test]
@@ -664,7 +1146,7 @@ mod tests {
 
     #[test]
     fn prefix_cap_enforced() {
-        let mut frame = encode_upload(&Upload::Ready);
+        let mut frame = encode_upload(&Upload::Ready, F32W);
         frame[..4].copy_from_slice(&(MAX_FRAME_BODY + 1).to_le_bytes());
         assert_eq!(
             decode(&frame),

@@ -34,6 +34,7 @@
 
 use crate::config::schema::Algorithm;
 use crate::data::dataset::Dataset;
+use crate::dist::codec::{self, WireFormat};
 use crate::dist::messages::{GlobalView, Upload};
 use crate::dist::DistConfig;
 use crate::exec::engine::{EpochEngine, NativeEngine};
@@ -105,6 +106,15 @@ pub struct LocalNode<'a> {
     pub last_round_iters: u64,
     /// Recyclable upload/scratch buffers (see [`Arena`]).
     arena: Arena,
+    /// Error-feedback residuals for the lossy wire formats: the rounding
+    /// error of each shipped payload, re-added before the next round's
+    /// quantization so the error telescopes instead of accumulating.
+    /// Two slots because a round ships at most two quantized vectors
+    /// (State x/gbar, Delta's D-SAGA dgbar increment, GradPartial gsum);
+    /// cumulative Delta bookkeeping (`sent_* += shipped`) needs no slot
+    /// — the next `target - sent` re-includes the error by construction.
+    /// Empty until a lossy round first touches a slot; f32 never does.
+    ef: [Vec<f32>; 2],
 }
 
 impl<'a> LocalNode<'a> {
@@ -137,6 +147,7 @@ impl<'a> LocalNode<'a> {
             last_round_evals: 0,
             last_round_iters: 0,
             arena: Arena::default(),
+            ef: [Vec::new(), Vec::new()],
         }
     }
 
@@ -174,6 +185,11 @@ impl<'a> LocalNode<'a> {
     pub fn reset_contribution(&mut self) {
         math::zero(&mut self.sent_x);
         math::zero(&mut self.sent_gbar);
+        // the parked rounding error described a contribution the server
+        // just forgot wholesale; replaying it after a full resend would
+        // double-count
+        self.ef[0].clear();
+        self.ef[1].clear();
     }
 
     /// Undo the `sent` bookkeeping of a delta upload the server refused
@@ -186,6 +202,22 @@ impl<'a> LocalNode<'a> {
         };
         math::axpy(-1.0, dx, &mut self.sent_x);
         math::axpy(-1.0, dgbar, &mut self.sent_gbar);
+        // D-SAGA's dgbar is a table increment, not cumulative bookkeeping:
+        // rolling back `sent_gbar` cannot resend it, so on a lossy wire
+        // with error feedback the parked increment rides the residual
+        // into the next round's dgbar (the f32 path keeps the historical
+        // semantics where a parked increment is genuinely dropped).
+        if self.cfg.algorithm == Algorithm::DistSaga
+            && self.cfg.wire != WireFormat::F32
+            && self.cfg.error_feedback
+        {
+            let r = &mut self.ef[1];
+            if r.len() != dgbar.len() {
+                r.clear();
+                r.resize(dgbar.len(), 0.0);
+            }
+            math::add_assign(r, dgbar);
+        }
     }
 
     /// Shard weight in the global objective: n_s / n.
@@ -206,6 +238,82 @@ impl<'a> LocalNode<'a> {
         self.last_round_evals = evals;
         self.last_round_iters = iters;
         self.rounds_done += 1;
+    }
+
+    // ----- lossy-wire quantization with error feedback ----------------------
+
+    /// Quantize a standalone payload vector onto the wire grid, routing
+    /// the rounding error through residual slot `slot`: the parked error
+    /// is added in *before* rounding and the fresh error parked back, so
+    /// over rounds the errors telescope (EF-SGD; VR survey arXiv
+    /// 2010.00892). No-op at f32. With `--no-error-feedback` the error is
+    /// dropped on the floor — the ablation the convergence tests pin.
+    fn quantize_with_residual(&mut self, v: &mut [f32], slot: usize) {
+        if self.cfg.wire == WireFormat::F32 {
+            return;
+        }
+        if !self.cfg.error_feedback {
+            codec::quantize_in_place(v, self.cfg.wire);
+            return;
+        }
+        let r = &mut self.ef[slot];
+        if r.len() != v.len() {
+            r.clear();
+            r.resize(v.len(), 0.0);
+        }
+        for (x, ri) in v.iter_mut().zip(r.iter()) {
+            *x += ri;
+        }
+        // the int8 scale must come from the residual-adjusted values
+        match self.cfg.wire {
+            WireFormat::F32 => unreachable!(),
+            WireFormat::F16 => {
+                for (x, ri) in v.iter_mut().zip(r.iter_mut()) {
+                    let q = codec::f16_round(*x);
+                    *ri = *x - q;
+                    *x = q;
+                }
+            }
+            WireFormat::I8 => {
+                let max = v.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                let s = codec::i8_grid_scale(max);
+                for (x, ri) in v.iter_mut().zip(r.iter_mut()) {
+                    let q = codec::i8_round(*x, s);
+                    *ri = *x - q;
+                    *x = q;
+                }
+            }
+        }
+    }
+
+    /// Quantize a *cumulative* `dx` delta (lossy wires only — the f32
+    /// call sites keep their literal historical bookkeeping for
+    /// bit-identity) and advance `sent_x` accordingly: with error
+    /// feedback, `sent_x += shipped`, so the next round's
+    /// `x - sent_x` re-includes this round's rounding error by
+    /// construction — the cumulative form of the EF residual. Without
+    /// it, `sent_x` jumps to the true iterate and the error is dropped.
+    fn quantize_dx_and_advance(&mut self, dx: &mut [f32]) {
+        codec::quantize_in_place(dx, self.cfg.wire);
+        if self.cfg.error_feedback {
+            math::add_assign(&mut self.sent_x, dx);
+        } else {
+            self.sent_x.copy_from_slice(&self.x);
+        }
+    }
+
+    /// The `sent_gbar` counterpart of [`Self::quantize_dx_and_advance`]
+    /// for the CVR-Async contribution delta (`target = w * gtilde`).
+    fn quantize_dgbar_and_advance(&mut self, dgbar: &mut [f32]) {
+        codec::quantize_in_place(dgbar, self.cfg.wire);
+        if self.cfg.error_feedback {
+            math::add_assign(&mut self.sent_gbar, dgbar);
+        } else {
+            let w = self.weight();
+            for (sv, gv) in self.sent_gbar.iter_mut().zip(&self.gtilde) {
+                *sv = gv * w;
+            }
+        }
     }
 
     /// One local CentralVR epoch from the given starting point; the first
@@ -254,8 +362,10 @@ impl<'a> LocalNode<'a> {
         self.centralvr_local_epoch(view);
         let mut x = self.arena.take(self.x.len());
         x.copy_from_slice(&self.x);
+        self.quantize_with_residual(&mut x, 0);
         let mut gbar = self.arena.take(self.gtilde.len());
         gbar.copy_from_slice(&self.gtilde);
+        self.quantize_with_residual(&mut gbar, 1);
         Upload::State { x, gbar }
     }
 
@@ -280,9 +390,14 @@ impl<'a> LocalNode<'a> {
         for ((o, gv), sv) in dgbar.iter_mut().zip(&self.gtilde).zip(&self.sent_gbar) {
             *o = gv * w - sv;
         }
-        self.sent_x.copy_from_slice(&self.x);
-        for (sv, gv) in self.sent_gbar.iter_mut().zip(&self.gtilde) {
-            *sv = gv * w;
+        if self.cfg.wire == WireFormat::F32 {
+            self.sent_x.copy_from_slice(&self.x);
+            for (sv, gv) in self.sent_gbar.iter_mut().zip(&self.gtilde) {
+                *sv = gv * w;
+            }
+        } else {
+            self.quantize_dx_and_advance(&mut dx);
+            self.quantize_dgbar_and_advance(&mut dgbar);
         }
         Upload::Delta { dx, dgbar }
     }
@@ -317,6 +432,16 @@ impl<'a> LocalNode<'a> {
         dx.copy_from_slice(&self.x);
         let mut dgbar = self.arena.take(d);
         dgbar.copy_from_slice(&self.sent_gbar);
+        if self.cfg.wire != WireFormat::F32 {
+            // the init upload is a Delta like any other: it must ship
+            // grid values or the TCP codec's re-encoding would be lossy.
+            // dx is cumulative against sent_x = 0; dgbar is the first
+            // table increment, so its error rides residual slot 1 like
+            // every later dsaga_round dgbar.
+            math::zero(&mut self.sent_x);
+            self.quantize_dx_and_advance(&mut dx);
+            self.quantize_with_residual(&mut dgbar, 1);
+        }
         Upload::Delta { dx, dgbar }
     }
 
@@ -353,7 +478,14 @@ impl<'a> LocalNode<'a> {
         for ((o, gv), vv) in dgbar.iter_mut().zip(&self.gbar).zip(&view.gbar) {
             *o = gv - vv;
         }
-        self.sent_x.copy_from_slice(&self.x);
+        if self.cfg.wire == WireFormat::F32 {
+            self.sent_x.copy_from_slice(&self.x);
+        } else {
+            self.quantize_dx_and_advance(&mut dx);
+            // dgbar is a table increment (disjoint across workers), not
+            // cumulative bookkeeping: its rounding error rides slot 1
+            self.quantize_with_residual(&mut dgbar, 1);
+        }
         Upload::Delta { dx, dgbar }
     }
 
@@ -369,6 +501,7 @@ impl<'a> LocalNode<'a> {
         self.finish_round(n, 0);
         let mut gsum = self.arena.take(self.gtilde.len());
         gsum.copy_from_slice(&self.gtilde);
+        self.quantize_with_residual(&mut gsum, 0);
         Upload::GradPartial { gsum, n }
     }
 
@@ -1042,6 +1175,113 @@ mod tests {
             };
             m.absorb(view.clone());
         }
+    }
+
+    /// Every quantized upload must carry grid values: re-quantizing what
+    /// shipped is a bitwise no-op. This is the invariant that makes the
+    /// codec's encode/decode lossless and keeps TCP runs bit-compatible
+    /// with the in-process drivers at lossy wire formats.
+    #[test]
+    fn lossy_wire_uploads_are_grid_aligned() {
+        let assert_grid = |v: &[f32], wire: WireFormat, what: &str| {
+            let mut q = v.to_vec();
+            codec::quantize_in_place(&mut q, wire);
+            let a: Vec<u32> = v.iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u32> = q.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a, b, "{what} not on the {wire} grid");
+        };
+        for wire in [WireFormat::F16, WireFormat::I8] {
+            for ef in [true, false] {
+                for algorithm in [
+                    Algorithm::CentralVrSync,
+                    Algorithm::CentralVrAsync,
+                    Algorithm::DistSaga,
+                    Algorithm::DistSvrg,
+                ] {
+                    let data = toy(2, 24, 5, 11);
+                    let mut c = cfg(algorithm, 2);
+                    c.wire = wire;
+                    c.error_feedback = ef;
+                    c.max_rounds = 3;
+                    let mut m = machine(&data, c);
+                    while let Some(out) = m.compute() {
+                        match &out.upload {
+                            Upload::Delta { dx, dgbar } => {
+                                assert_grid(dx, wire, "dx");
+                                assert_grid(dgbar, wire, "dgbar");
+                            }
+                            Upload::State { x, gbar } => {
+                                assert_grid(x, wire, "x");
+                                assert_grid(gbar, wire, "gbar");
+                            }
+                            Upload::GradPartial { gsum, .. } => {
+                                assert_grid(gsum, wire, "gsum");
+                            }
+                            _ => {}
+                        }
+                        m.absorb(GlobalView {
+                            x: vec![0.01; 5],
+                            gbar: vec![0.0; 5],
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    /// The residual actually feeds back: at int8 the first round ships
+    /// identically with or without EF (residual starts at zero), but a
+    /// later round must differ — EF re-injects round 1's rounding error.
+    #[test]
+    fn error_feedback_changes_later_rounds_only() {
+        let run = |ef: bool| {
+            let data = toy(2, 24, 5, 13);
+            let mut c = cfg(Algorithm::CentralVrSync, 2);
+            c.wire = WireFormat::I8;
+            c.error_feedback = ef;
+            let mut node = LocalNode::new(0, data.shard(0), Problem::Ridge, c, data.n_total());
+            let view = GlobalView { x: vec![0.0; 5], gbar: vec![0.0; 5] };
+            (0..4).map(|_| node.cvr_sync_round(&view)).collect::<Vec<_>>()
+        };
+        let with_ef = run(true);
+        let without = run(false);
+        assert_eq!(with_ef[0], without[0], "round 1 has no residual yet");
+        assert_ne!(
+            with_ef[1..],
+            without[1..],
+            "later rounds must feel the residual"
+        );
+    }
+
+    /// The cumulative-delta form of error feedback: at int8+EF the
+    /// server x (the sum of everything this worker shipped) stays within
+    /// the *last frame's* rounding error of the true iterate — errors
+    /// telescope instead of accumulating across rounds. The bound is
+    /// computed from the shipped frames themselves: the residual after
+    /// round k is `dx_target - q(dx)`, at most half that frame's grid
+    /// step, and each next round re-includes it.
+    #[test]
+    fn async_ef_keeps_server_near_worker_iterate_at_int8() {
+        let data = toy(1, 32, 4, 17);
+        let mut c = cfg(Algorithm::CentralVrAsync, 1);
+        c.wire = WireFormat::I8;
+        let mut node = LocalNode::new(0, data.shard(0), Problem::Ridge, c, data.n_total());
+        let mut server = ServerState::new(4, 1, c.easgd_beta);
+        let mut last_frame_step = 0.0f32;
+        for _ in 0..5 {
+            let up = node.cvr_async_round(&server.view());
+            let Upload::Delta { dx, .. } = &up else { panic!() };
+            // shipped values are grid multiples of the frame scale, so
+            // the frame's grid step is recoverable from the payload
+            let max = dx.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            last_frame_step = codec::i8_grid_scale(max);
+            server.apply_delta(&up);
+        }
+        let diff = math::max_abs_diff(&server.x, node.x());
+        assert!(
+            diff <= last_frame_step,
+            "EF drift {diff} exceeds one grid step {last_frame_step}"
+        );
     }
 
     #[test]

@@ -45,13 +45,14 @@ pub enum Upload {
 }
 
 impl Upload {
-    /// Serialized size in bytes: the exact encoded frame length (length
-    /// prefix included) from [`crate::dist::codec`], so the sparse wire
-    /// encoding for `Delta`/`GradPartial` is priced automatically. Used
-    /// for the simulator's transfer-time charges and the
-    /// communication-cost counters.
-    pub fn bytes(&self) -> u64 {
-        crate::dist::codec::upload_frame_len(self)
+    /// Serialized size in bytes at the given wire format: the exact
+    /// encoded frame length (length prefix included) from
+    /// [`crate::dist::codec`], so the sparse wire encoding for
+    /// `Delta`/`GradPartial` *and* the f16/int8 quantized layouts are
+    /// priced automatically. Used for the simulator's transfer-time
+    /// charges and the communication-cost counters.
+    pub fn bytes(&self, wire: crate::dist::codec::WireFormat) -> u64 {
+        crate::dist::codec::upload_frame_len(self, wire)
     }
 
     /// Barrier kinds are collected (server inbox / barrier buffer) until
@@ -104,6 +105,9 @@ mod tests {
     use super::*;
 
     use crate::dist::codec;
+    use crate::dist::codec::WireFormat;
+
+    const F32W: WireFormat = WireFormat::F32;
 
     /// Frame anatomy: 4-byte length prefix + 1 tag byte; each dense
     /// vector costs a 5-byte header (mode + d) plus 4 bytes per f32.
@@ -111,26 +115,65 @@ mod tests {
     fn upload_bytes_accounting() {
         let d = 7usize;
         let dense_vec = (5 + 4 * d) as u64;
-        assert_eq!(Upload::Ready.bytes(), 5);
+        assert_eq!(Upload::Ready.bytes(F32W), 5);
         let delta = Upload::Delta {
             dx: vec![1.0; d],
             dgbar: vec![1.0; d],
         };
-        assert_eq!(delta.bytes(), 5 + 2 * dense_vec);
+        assert_eq!(delta.bytes(F32W), 5 + 2 * dense_vec);
         let state = Upload::State {
             x: vec![0.0; d],
             gbar: vec![0.0; d],
         };
         // State never ships sparse, even when the payload is all zeros
-        assert_eq!(state.bytes(), 5 + 2 * dense_vec);
+        assert_eq!(state.bytes(F32W), 5 + 2 * dense_vec);
         let partial = Upload::GradPartial {
             gsum: vec![1.0; d],
             n: 128,
         };
-        assert_eq!(partial.bytes(), 5 + 8 + dense_vec);
-        assert_eq!(Upload::XOnly { x: vec![0.0; d] }.bytes(), 5 + dense_vec);
-        assert_eq!(Upload::ElasticPush { x: vec![0.0; d] }.bytes(), 5 + dense_vec);
-        assert_eq!(Upload::GradStep { dx: vec![0.0; d] }.bytes(), 5 + dense_vec);
+        assert_eq!(partial.bytes(F32W), 5 + 8 + dense_vec);
+        assert_eq!(Upload::XOnly { x: vec![0.0; d] }.bytes(F32W), 5 + dense_vec);
+        assert_eq!(
+            Upload::ElasticPush { x: vec![0.0; d] }.bytes(F32W),
+            5 + dense_vec
+        );
+        assert_eq!(
+            Upload::GradStep { dx: vec![0.0; d] }.bytes(F32W),
+            5 + dense_vec
+        );
+    }
+
+    /// Quantized formats shrink the dense vector payloads: f16 costs
+    /// 2 bytes/value, int8 costs a 4-byte scale plus 1 byte/value — and
+    /// only for the quantized-tier kinds (Delta/State/GradPartial);
+    /// full-iterate kinds stay f32 at every wire format.
+    #[test]
+    fn quantized_bytes_accounting() {
+        let d = 7usize;
+        let f32_vec = (5 + 4 * d) as u64;
+        let f16_vec = (5 + 2 * d) as u64;
+        let i8_vec = (5 + 4 + d) as u64;
+        let delta = Upload::Delta { dx: vec![1.0; d], dgbar: vec![1.0; d] };
+        assert_eq!(delta.bytes(WireFormat::F16), 5 + 2 * f16_vec);
+        assert_eq!(delta.bytes(WireFormat::I8), 5 + 2 * i8_vec);
+        let state = Upload::State { x: vec![1.0; d], gbar: vec![1.0; d] };
+        assert_eq!(state.bytes(WireFormat::F16), 5 + 2 * f16_vec);
+        assert_eq!(state.bytes(WireFormat::I8), 5 + 2 * i8_vec);
+        let partial = Upload::GradPartial { gsum: vec![1.0; d], n: 128 };
+        assert_eq!(partial.bytes(WireFormat::F16), 5 + 8 + f16_vec);
+        assert_eq!(partial.bytes(WireFormat::I8), 5 + 8 + i8_vec);
+        for wire in WireFormat::ALL {
+            assert_eq!(Upload::Ready.bytes(wire), 5);
+            assert_eq!(Upload::XOnly { x: vec![0.0; d] }.bytes(wire), 5 + f32_vec);
+            assert_eq!(
+                Upload::ElasticPush { x: vec![0.0; d] }.bytes(wire),
+                5 + f32_vec
+            );
+            assert_eq!(
+                Upload::GradStep { dx: vec![0.0; d] }.bytes(wire),
+                5 + f32_vec
+            );
+        }
     }
 
     /// Delta payloads switch to the sparse pair encoding when that is
@@ -142,10 +185,13 @@ mod tests {
         dx[17] = 1.0;
         dx[80] = -1.0;
         let up = Upload::Delta { dx, dgbar: vec![0.0; d] };
-        assert_eq!(up.bytes(), 5 + (9 + 2 * 8) + 9);
+        assert_eq!(up.bytes(F32W), 5 + (9 + 2 * 8) + 9);
+        // quantized sparse pairs: f16 6 bytes/nnz, int8 scale + 5 bytes/nnz
+        assert_eq!(up.bytes(WireFormat::F16), 5 + (9 + 2 * 6) + 9);
+        assert_eq!(up.bytes(WireFormat::I8), 5 + (13 + 2 * 5) + 13);
         // nearly-dense payloads fall back to the dense encoding
         let up = Upload::Delta { dx: vec![1.0; d], dgbar: vec![1.0; d] };
-        assert_eq!(up.bytes(), 5 + 2 * (5 + 4 * d) as u64);
+        assert_eq!(up.bytes(F32W), 5 + 2 * (5 + 4 * d) as u64);
     }
 
     #[test]
@@ -154,7 +200,7 @@ mod tests {
             dx: vec![1.0; 3],
             dgbar: vec![1.0; 5],
         };
-        assert_eq!(up.bytes(), 5 + (5 + 4 * 3) + (5 + 4 * 5));
+        assert_eq!(up.bytes(F32W), 5 + (5 + 4 * 3) + (5 + 4 * 5));
     }
 
     #[test]
@@ -188,12 +234,14 @@ mod tests {
             Upload::GradStep { dx: vec![0.5; d] },
         ];
         for up in &ups {
-            assert_eq!(
-                up.bytes(),
-                codec::encode_upload(up).len() as u64,
-                "{}",
-                up.kind()
-            );
+            for wire in WireFormat::ALL {
+                assert_eq!(
+                    up.bytes(wire),
+                    codec::encode_upload(up, wire).len() as u64,
+                    "{} at {wire}",
+                    up.kind()
+                );
+            }
         }
         let v = GlobalView { x: vec![1.0; d], gbar: vec![2.0; d] };
         assert_eq!(v.bytes(), codec::encode_view(&v).len() as u64);

@@ -24,12 +24,18 @@
 //! byte, scalar fields, then payload vectors that are dense
 //! (`d x f32`) or sparse (strictly-increasing `(u32 index, f32 value)`
 //! pairs) — the encoder picks whichever is smaller for `Delta` /
-//! `GradPartial` payloads. `Upload::bytes()` / `GlobalView::bytes()`
-//! report the exact encoded frame length, so the simulator's network
-//! charges and the Table 1 / Fig 2 byte counters price precisely what
-//! the TCP transport carries. See [`codec`] for the layout diagram and
-//! `centralvr dist serve` / `centralvr dist worker` for multi-process
-//! runs.
+//! `GradPartial` payloads. A quantized tier ([`codec::WireFormat`],
+//! `--wire {f32,f16,int8}`) shrinks the bulk algorithm payloads
+//! (`Delta`/`State`/`GradPartial`) to IEEE binary16 or per-frame-scaled
+//! int8 codes, with per-worker error-feedback residuals in
+//! [`local::LocalNode`] re-injecting the quantization error into the
+//! next round so variance-reduction guarantees survive (VR survey,
+//! arXiv 2010.00892). `Upload::bytes()` / `GlobalView::bytes()` report
+//! the exact encoded frame length at the session's wire format, so the
+//! simulator's network charges and the Table 1 / Fig 2 byte counters
+//! price precisely what the TCP transport carries. See [`codec`] for
+//! the layout diagrams and `centralvr dist serve` / `centralvr dist
+//! worker` for multi-process runs.
 
 pub mod codec;
 pub mod local;
@@ -73,6 +79,15 @@ pub struct DistConfig {
     pub ps_batch: usize,
     /// Latency/bandwidth/service-time/heterogeneity model (simulator).
     pub network: NetworkModel,
+    /// Payload encoding for the quantized-tier uploads
+    /// (`Delta`/`State`/`GradPartial`): f32 (exact), f16, or int8.
+    pub wire: codec::WireFormat,
+    /// Keep per-worker error-feedback residuals when `wire` is lossy:
+    /// each round quantizes `upload + residual` and parks the
+    /// quantization error for the next round. Disabling this (the
+    /// `--no-error-feedback` ablation) drops the error on the floor and
+    /// demonstrably degrades convergence at int8.
+    pub error_feedback: bool,
 }
 
 impl Default for DistConfig {
@@ -91,6 +106,8 @@ impl Default for DistConfig {
             decay: 1.0,
             ps_batch: 10,
             network: NetworkModel::default(),
+            wire: codec::WireFormat::F32,
+            error_feedback: true,
         }
     }
 }
@@ -107,6 +124,9 @@ mod tests {
         assert_eq!(c.decay, 1.0);
         assert_eq!(c.tol, 1e-5);
         assert!(c.network.bandwidth_bps > 0.0);
+        // exact wire + EF on by default: quantization is strictly opt-in
+        assert_eq!(c.wire, codec::WireFormat::F32);
+        assert!(c.error_feedback);
     }
 
     #[test]

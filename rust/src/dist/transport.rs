@@ -50,7 +50,7 @@ use std::time::Duration;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::data::dataset::Dataset;
-use crate::dist::codec::{self, Hello, WireMsg, MAX_FRAME_BODY};
+use crate::dist::codec::{self, Hello, WireFormat, WireMsg, MAX_FRAME_BODY};
 use crate::dist::local::{LocalNode, RoundMachine};
 use crate::dist::messages::{GlobalView, Upload};
 use crate::dist::server::ServerState;
@@ -145,6 +145,9 @@ pub struct TcpClient {
     stream: TcpStream,
     /// Session feature dimension; bounds reply decoding.
     dim: u32,
+    /// Payload encoding announced in the handshake; uploads are encoded
+    /// with it so the server's byte accounting agrees.
+    wire: WireFormat,
     /// Reused encode buffer (arena: one allocation per session, not per
     /// frame).
     ebuf: Vec<u8>,
@@ -165,6 +168,7 @@ impl TcpClient {
         let mut client = TcpClient {
             stream,
             dim: hello.d,
+            wire: hello.wire,
             ebuf: Vec::new(),
             rbuf: Vec::new(),
             bytes_sent: 0,
@@ -195,7 +199,7 @@ impl TcpClient {
     /// pushed a `Stop` frame — the run is over and the worker should wind
     /// down cleanly at its current round.
     pub fn exchange(&mut self, up: &Upload) -> Result<Option<GlobalView>> {
-        codec::encode_upload_into(up, &mut self.ebuf);
+        codec::encode_upload_into(up, self.wire, &mut self.ebuf);
         self.flush_ebuf()?;
         match read_msg_into(&mut self.stream, self.dim, &mut self.rbuf)? {
             Some((WireMsg::View(v), n)) => {
@@ -279,6 +283,10 @@ pub struct ServeConfig {
     /// first in the sweep — set it well above the worst-case round time,
     /// or leave `None` to wait forever as the in-process engines do).
     pub read_timeout: Option<Duration>,
+    /// Payload encoding the session runs at; every worker's Hello must
+    /// announce the same format or its byte accounting (and its grid
+    /// quantization) would disagree with the server's.
+    pub wire: WireFormat,
 }
 
 /// What a completed [`serve`] run measured.
@@ -386,6 +394,12 @@ pub fn serve(listener: TcpListener, cfg: ServeConfig) -> Result<ServeReport> {
             "worker {s} sharded for p={}, server expects p={}",
             h.p,
             cfg.p
+        );
+        ensure!(
+            h.wire == cfg.wire,
+            "worker {s} encodes uploads as {}, server expects {}",
+            h.wire,
+            cfg.wire
         );
         match dim {
             None => dim = Some(h.d),
@@ -507,7 +521,7 @@ pub fn serve(listener: TcpListener, cfg: ServeConfig) -> Result<ServeReport> {
             check_dims(&up, d)?;
             frames += 1;
             bytes_on_wire += len;
-            bytes_accounted += up.bytes();
+            bytes_accounted += up.bytes(cfg.wire);
             if up.is_barrier() {
                 in_barrier[s] = true;
                 if let Some(round) = state.deposit(s, up) {
@@ -621,6 +635,7 @@ pub fn run_worker(
         p: cfg.p as u32,
         n_s: shard.n() as u64,
         d: d as u32,
+        wire: cfg.wire,
     };
     let mut client = connect_with_retry(addr, hello, RetryPolicy::default())?;
     let mut grad_evals = 0u64;
@@ -669,7 +684,7 @@ mod tests {
 
     #[test]
     fn read_frame_truncated_body_errors() {
-        let mut bytes = codec::encode_upload(&Upload::Ready);
+        let mut bytes = codec::encode_upload(&Upload::Ready, WireFormat::F32);
         bytes.truncate(4); // prefix says 1 body byte, stream has none
         let mut r = Cursor::new(bytes);
         assert!(read_frame(&mut r).is_err());
@@ -704,12 +719,12 @@ mod tests {
     fn read_msg_roundtrips_a_frame_stream() {
         let up = Upload::XOnly { x: vec![1.0, -2.0] };
         let view = GlobalView { x: vec![0.5], gbar: vec![0.25] };
-        let mut stream = codec::encode_upload(&up);
+        let mut stream = codec::encode_upload(&up, WireFormat::F32);
         stream.extend_from_slice(&codec::encode_view(&view));
         let mut r = Cursor::new(stream);
         let (m1, n1) = read_msg(&mut r).unwrap().unwrap();
         assert_eq!(m1, WireMsg::Upload(up.clone()));
-        assert_eq!(n1, up.bytes());
+        assert_eq!(n1, up.bytes(WireFormat::F32));
         let (m2, n2) = read_msg(&mut r).unwrap().unwrap();
         assert_eq!(m2, WireMsg::View(view.clone()));
         assert_eq!(n2, view.bytes());
@@ -723,13 +738,13 @@ mod tests {
     fn read_msg_into_replaces_buffer_contents() {
         let big = Upload::XOnly { x: vec![1.0; 32] };
         let small = Upload::Ready;
-        let mut stream = codec::encode_upload(&big);
-        stream.extend_from_slice(&codec::encode_upload(&small));
+        let mut stream = codec::encode_upload(&big, WireFormat::F32);
+        stream.extend_from_slice(&codec::encode_upload(&small, WireFormat::F32));
         let mut r = Cursor::new(stream);
         let mut buf = Vec::new();
         let (m1, n1) = read_msg_into(&mut r, 32, &mut buf).unwrap().unwrap();
         assert_eq!(m1, WireMsg::Upload(big.clone()));
-        assert_eq!(n1, big.bytes());
+        assert_eq!(n1, big.bytes(WireFormat::F32));
         let cap = buf.capacity();
         let (m2, n2) = read_msg_into(&mut r, 32, &mut buf).unwrap().unwrap();
         assert_eq!(m2, WireMsg::Upload(small));

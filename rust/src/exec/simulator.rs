@@ -472,7 +472,7 @@ impl<'a> Sim<'a> {
                 }
                 scn.stats.extra_latency_s += extra;
             }
-            let bytes = out.upload.bytes();
+            let bytes = out.upload.bytes(self.cfg.wire);
             self.counters.add_frame_bytes(bytes);
             let arrive = item.t0 + compute + extra + self.cfg.network.transfer_time(bytes);
             self.push(

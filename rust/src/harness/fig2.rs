@@ -87,6 +87,8 @@ pub fn dist_config(problem: Problem, algo: Algorithm, p: usize, n_per: usize, d:
             Algorithm::CentralVrAsync | Algorithm::DistSaga | Algorithm::Easgd => p,
             _ => 1,
         },
+        wire: crate::dist::codec::WireFormat::F32,
+        error_feedback: true,
     }
 }
 

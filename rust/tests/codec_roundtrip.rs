@@ -2,7 +2,7 @@
 //! `bytes()` accounting equals the encoded frame length, and malformed
 //! frames are rejected with errors — never panics — no matter the input.
 
-use centralvr::dist::codec::{self, CodecError, Hello, WireMsg, MAX_FRAME_BODY};
+use centralvr::dist::codec::{self, CodecError, Hello, WireFormat, WireMsg, MAX_FRAME_BODY};
 use centralvr::dist::messages::{GlobalView, Upload};
 use centralvr::util::propcheck::{ensure, forall, gen_usize};
 use centralvr::util::rng::Pcg64;
@@ -45,19 +45,53 @@ fn gen_upload(r: &mut Pcg64) -> Upload {
     }
 }
 
+/// What a [`LocalNode`] at a lossy wire format actually ships: the
+/// quantized-tier payload vectors snapped to the format's grid. On the
+/// grid the codec is lossless, so round-trips are *exact* equality.
+fn quantize_upload(up: &Upload, wire: WireFormat) -> Upload {
+    let mut up = up.clone();
+    match &mut up {
+        Upload::Delta { dx, dgbar } => {
+            codec::quantize_in_place(dx, wire);
+            codec::quantize_in_place(dgbar, wire);
+        }
+        Upload::State { x, gbar } => {
+            codec::quantize_in_place(x, wire);
+            codec::quantize_in_place(gbar, wire);
+        }
+        Upload::GradPartial { gsum, .. } => codec::quantize_in_place(gsum, wire),
+        _ => {}
+    }
+    up
+}
+
 #[test]
 fn upload_roundtrip_and_bytes_invariant() {
-    forall("upload round-trips; bytes() == encoded.len()", gen_upload, |up| {
-        let frame = codec::encode_upload(up);
-        ensure(
-            frame.len() as u64 == up.bytes(),
-            format!("bytes()={} but frame is {}", up.bytes(), frame.len()),
-        )?;
-        match codec::decode(&frame) {
-            Ok(WireMsg::Upload(back)) => ensure(back == *up, "payload mismatch"),
-            other => Err(format!("decode gave {other:?}")),
-        }
-    });
+    forall(
+        "upload round-trips; bytes() == encoded.len() at every wire format",
+        gen_upload,
+        |up| {
+            for wire in WireFormat::ALL {
+                let grid = quantize_upload(up, wire);
+                let frame = codec::encode_upload(&grid, wire);
+                ensure(
+                    frame.len() as u64 == grid.bytes(wire),
+                    format!(
+                        "{wire}: bytes()={} but frame is {}",
+                        grid.bytes(wire),
+                        frame.len()
+                    ),
+                )?;
+                match codec::decode(&frame) {
+                    Ok(WireMsg::Upload(back)) => {
+                        ensure(back == grid, format!("{wire}: payload mismatch"))?
+                    }
+                    other => return Err(format!("{wire}: decode gave {other:?}")),
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]
@@ -97,6 +131,7 @@ fn hello_roundtrip() {
             p: (r.next_u64() & 0xFFFF) as u32,
             n_s: r.next_u64() >> 1,
             d: (r.next_u64() & 0xFFFF_FFFF) as u32,
+            wire: WireFormat::ALL[gen_usize(r, 0..WireFormat::ALL.len())],
         },
         |h| {
             let frame = codec::encode_hello(h);
@@ -130,14 +165,17 @@ fn edge_payload_lengths_roundtrip() {
             Upload::GradStep { dx: dense.clone() },
         ];
         for up in &cases {
-            let frame = codec::encode_upload(up);
-            assert_eq!(frame.len() as u64, up.bytes(), "d={d} {}", up.kind());
-            assert_eq!(
-                codec::decode(&frame),
-                Ok(WireMsg::Upload(up.clone())),
-                "d={d} {}",
-                up.kind()
-            );
+            for wire in WireFormat::ALL {
+                let grid = quantize_upload(up, wire);
+                let frame = codec::encode_upload(&grid, wire);
+                assert_eq!(frame.len() as u64, grid.bytes(wire), "d={d} {wire} {}", up.kind());
+                assert_eq!(
+                    codec::decode(&frame),
+                    Ok(WireMsg::Upload(grid)),
+                    "d={d} {wire} {}",
+                    up.kind()
+                );
+            }
         }
         let v = GlobalView { x: dense.clone(), gbar: Vec::new() };
         let frame = codec::encode_view(&v);
@@ -175,7 +213,7 @@ fn oversized_length_prefix_rejected() {
         Err(CodecError::FrameTooLarge { len: MAX_FRAME_BODY + 1 })
     );
     // a lying (but in-cap) prefix is a length mismatch
-    let mut f = codec::encode_upload(&Upload::Ready);
+    let mut f = codec::encode_upload(&Upload::Ready, WireFormat::F32);
     f[..4].copy_from_slice(&100u32.to_le_bytes());
     assert!(matches!(
         codec::decode(&f),
@@ -242,6 +280,64 @@ fn non_increasing_sparse_indices_rejected() {
     );
 }
 
+/// The quantized sparse layouts enforce the same canonical-form rules as
+/// the f32 one: nnz bounded by d, indices strictly increasing, in range.
+#[test]
+fn malformed_quantized_sparse_frames_rejected() {
+    // f16 sparse (mode 3): d=2 but nnz=5
+    let mut body = vec![4u8, 3];
+    body.extend_from_slice(&2u32.to_le_bytes());
+    body.extend_from_slice(&5u32.to_le_bytes());
+    assert_eq!(
+        codec::decode(&frame(&body)),
+        Err(CodecError::NnzOverrun { nnz: 5, d: 2 })
+    );
+    // int8 sparse (mode 5): d=4, nnz=1, index 9 out of range
+    let mut body = vec![4u8, 5];
+    body.extend_from_slice(&4u32.to_le_bytes());
+    body.extend_from_slice(&1.0f32.to_le_bytes()); // scale
+    body.extend_from_slice(&1u32.to_le_bytes());
+    body.extend_from_slice(&9u32.to_le_bytes());
+    body.push(1);
+    assert_eq!(
+        codec::decode(&frame(&body)),
+        Err(CodecError::IndexInvalid { idx: 9, d: 4 })
+    );
+    // int8 sparse: non-increasing indices (2 then 1)
+    let mut body = vec![4u8, 5];
+    body.extend_from_slice(&4u32.to_le_bytes());
+    body.extend_from_slice(&1.0f32.to_le_bytes());
+    body.extend_from_slice(&2u32.to_le_bytes());
+    for idx in [2u32, 1] {
+        body.extend_from_slice(&idx.to_le_bytes());
+        body.push(1);
+    }
+    assert_eq!(
+        codec::decode(&frame(&body)),
+        Err(CodecError::IndexInvalid { idx: 1, d: 4 })
+    );
+}
+
+/// Truncating a quantized frame anywhere in its value block errors.
+#[test]
+fn truncated_quantized_frames_rejected() {
+    // f16 dense (mode 2): d=4 but only 3 of the 8 value bytes present
+    let mut body = vec![4u8, 2];
+    body.extend_from_slice(&4u32.to_le_bytes());
+    body.extend_from_slice(&[0u8; 3]);
+    assert!(codec::decode(&frame(&body)).is_err());
+    // int8 dense (mode 4): scale present, values cut short
+    let mut body = vec![4u8, 4];
+    body.extend_from_slice(&4u32.to_le_bytes());
+    body.extend_from_slice(&1.0f32.to_le_bytes());
+    body.extend_from_slice(&[0u8; 2]);
+    assert!(codec::decode(&frame(&body)).is_err());
+    // int8 dense missing its scale entirely
+    let mut body = vec![4u8, 4];
+    body.extend_from_slice(&4u32.to_le_bytes());
+    assert!(codec::decode(&frame(&body)).is_err());
+}
+
 #[test]
 fn huge_sparse_dimension_rejected_before_allocation() {
     // sparse vector claiming d = u32::MAX from a tiny frame
@@ -305,7 +401,8 @@ fn truncations_of_valid_frames_always_error() {
         "any strict prefix of a frame fails to decode",
         |r| {
             let up = gen_upload(r);
-            let frame = codec::encode_upload(&up);
+            let wire = WireFormat::ALL[gen_usize(r, 0..WireFormat::ALL.len())];
+            let frame = codec::encode_upload(&quantize_upload(&up, wire), wire);
             let cut = gen_usize(r, 0..frame.len());
             (frame, cut)
         },
@@ -324,7 +421,8 @@ fn single_byte_corruptions_never_panic() {
         "bit-flipped frames decode or error, never panic",
         |r| {
             let up = gen_upload(r);
-            let mut frame = codec::encode_upload(&up);
+            let wire = WireFormat::ALL[gen_usize(r, 0..WireFormat::ALL.len())];
+            let mut frame = codec::encode_upload(&quantize_upload(&up, wire), wire);
             let i = gen_usize(r, 0..frame.len());
             frame[i] ^= 1 << gen_usize(r, 0..8);
             frame

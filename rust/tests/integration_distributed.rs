@@ -158,7 +158,7 @@ fn bytes_accounting_scales_with_rounds() {
     use centralvr::dist::messages::{GlobalView, Upload};
     let state = Upload::State { x: vec![0.0; 6], gbar: vec![0.0; 6] };
     let view = GlobalView { x: vec![0.0; 6], gbar: vec![0.0; 6] };
-    let per_pair = state.bytes() + view.bytes();
+    let per_pair = state.bytes(centralvr::dist::codec::WireFormat::F32) + view.bytes();
     let per_round = 3 * per_pair;
     assert_eq!(a.counters.bytes_communicated % per_round, 0);
     // frame counter: one frame per upload and one per broadcast reply

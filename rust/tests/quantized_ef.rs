@@ -1,0 +1,110 @@
+//! Error-feedback convergence suite (the issue's satellite 4): CVR-Sync
+//! and CVR-Async at `--wire int8` with error feedback must land within
+//! 1e-3 relative final loss of the f32 run, and dropping the residual
+//! (`--no-error-feedback`) must be demonstrably worse — the guard that
+//! catches the residual being silently dropped.
+//!
+//! Why the asymmetry between the two ablation checks below: CVR-Async
+//! ships cumulative *deltas*, whose per-frame int8 scale shrinks as the
+//! run converges — with EF the final-iterate error shrinks along with
+//! it, while without EF the errors dropped in early (large-scale) rounds
+//! are never re-sent, so the loss floors strictly above the EF run.
+//! CVR-Sync ships full *states*, whose frame scale stays at max|x|;
+//! there both variants are grid-limited at the end, so the sync ablation
+//! pins that the flag is actually wired (the trajectories must differ)
+//! rather than betting on a magnitude gap the scheme does not promise.
+
+use centralvr::config::schema::Algorithm;
+use centralvr::data::shard::ShardedDataset;
+use centralvr::data::synth;
+use centralvr::dist::codec::WireFormat;
+use centralvr::dist::DistConfig;
+use centralvr::exec::simulator::{self, SimParams};
+use centralvr::model::gradients;
+use centralvr::model::glm::Problem;
+
+const P: usize = 4;
+const N_PER: usize = 64;
+const D: usize = 10;
+
+fn data() -> ShardedDataset {
+    ShardedDataset::from_shards(synth::toy_least_squares_per_worker(P, N_PER, D, 21))
+}
+
+fn cfg(algorithm: Algorithm, wire: WireFormat, error_feedback: bool) -> DistConfig {
+    DistConfig {
+        algorithm,
+        p: P,
+        eta: 0.02,
+        max_rounds: 100,
+        tol: 0.0, // fixed budget: every variant runs the same schedule
+        seed: 17,
+        record_every: P,
+        wire,
+        error_feedback,
+        ..Default::default()
+    }
+}
+
+/// Final objective of a simulator run at the given knobs.
+fn final_loss(data: &ShardedDataset, c: DistConfig) -> (f64, Vec<u32>) {
+    let rep = simulator::run(Problem::Ridge, data, c, SimParams::analytic(D));
+    let shards: Vec<_> = (0..P).map(|s| data.shard(s)).collect();
+    let loss = gradients::objective(Problem::Ridge, &shards, &rep.trace.x, c.lambda);
+    let bits = rep.trace.x.iter().map(|v| v.to_bits()).collect();
+    (loss, bits)
+}
+
+fn rel(a: f64, b: f64) -> f64 {
+    (a - b).abs() / b.abs().max(1e-12)
+}
+
+#[test]
+fn cvr_sync_int8_with_ef_matches_f32_final_loss() {
+    let data = data();
+    let (f32_loss, _) = final_loss(&data, cfg(Algorithm::CentralVrSync, WireFormat::F32, true));
+    let (ef_loss, ef_x) =
+        final_loss(&data, cfg(Algorithm::CentralVrSync, WireFormat::I8, true));
+    let r = rel(ef_loss, f32_loss);
+    assert!(r <= 1e-3, "int8+EF drifted {r:.3e} from f32 ({f32_loss} vs {ef_loss})");
+    // the ablation flag must actually change the trajectory: identical
+    // runs would mean the residual is silently dropped (or never parked)
+    let (noef_loss, noef_x) =
+        final_loss(&data, cfg(Algorithm::CentralVrSync, WireFormat::I8, false));
+    assert_ne!(ef_x, noef_x, "EF on/off produced bit-identical runs");
+    assert!(noef_loss.is_finite());
+}
+
+#[test]
+fn cvr_async_int8_with_ef_matches_f32_and_no_ef_is_worse() {
+    let data = data();
+    let (f32_loss, _) = final_loss(&data, cfg(Algorithm::CentralVrAsync, WireFormat::F32, true));
+    let (ef_loss, ef_x) =
+        final_loss(&data, cfg(Algorithm::CentralVrAsync, WireFormat::I8, true));
+    let (noef_loss, noef_x) =
+        final_loss(&data, cfg(Algorithm::CentralVrAsync, WireFormat::I8, false));
+    let r_ef = rel(ef_loss, f32_loss);
+    let r_noef = rel(noef_loss, f32_loss);
+    assert!(
+        r_ef <= 1e-3,
+        "int8+EF drifted {r_ef:.3e} from f32 ({f32_loss} vs {ef_loss})"
+    );
+    assert_ne!(ef_x, noef_x, "EF on/off produced bit-identical runs");
+    assert!(
+        r_noef > r_ef,
+        "dropping the residual should cost accuracy: EF {r_ef:.3e} vs no-EF {r_noef:.3e}"
+    );
+}
+
+/// f16 is a much finer grid than int8; with EF it must sit at least as
+/// close to the f32 endpoint as the 1e-3 budget, for both algorithms.
+#[test]
+fn f16_with_ef_stays_within_budget_too() {
+    let data = data();
+    for algo in [Algorithm::CentralVrSync, Algorithm::CentralVrAsync] {
+        let (f32_loss, _) = final_loss(&data, cfg(algo, WireFormat::F32, true));
+        let (f16_loss, _) = final_loss(&data, cfg(algo, WireFormat::F16, true));
+        let r = rel(f16_loss, f32_loss);
+        assert!(r <= 1e-3, "{algo:?}: f16+EF drifted {r:.3e}");
+    }
+}

@@ -115,6 +115,38 @@ fn kitchen_sink_scenario_is_bit_identical_across_thread_widths() {
     }
 }
 
+/// The hostile kitchen sink again, but at the lossy wire formats: the
+/// error-feedback residual is per-worker compute-half state, so churn,
+/// parking, and unsend/replay must not perturb a single bit at any
+/// fan-out width.
+#[test]
+fn kitchen_sink_stays_bit_identical_at_quantized_wire_formats() {
+    use centralvr::dist::codec::WireFormat;
+    let spec = hostile();
+    let data = data();
+    for wire in [WireFormat::F16, WireFormat::I8] {
+        let mut c = cfg(Algorithm::CentralVrAsync);
+        c.wire = wire;
+        let run = |threads: usize| {
+            simulator::run_with_scenario(
+                Problem::Ridge,
+                &data,
+                c,
+                SimParams::analytic(D).with_threads(threads),
+                Some(&spec),
+            )
+        };
+        let serial = run(1);
+        let s = serial.scenario.as_ref().unwrap();
+        assert_eq!(s.deaths, 1, "{wire}: {s:?}");
+        assert_eq!(s.rejoins, 1, "{wire}: {s:?}");
+        for threads in [3usize, 8] {
+            let wide = run(threads);
+            assert_identical(&serial, &wide, &format!("{wire} threads={threads}"));
+        }
+    }
+}
+
 #[test]
 fn staleness_scenario_is_bit_identical_for_ps_svrg() {
     // PS-SVRG mixes barrier phases with an async GradStep stream; only

@@ -111,6 +111,43 @@ fn all_algorithms_bit_identical_on_dense_shards() {
     }
 }
 
+/// Quantization happens inside the compute half (LocalNode), so the
+/// any-width contract must survive every wire format — with and without
+/// error feedback — for the algorithms whose payloads actually shrink.
+#[test]
+fn quantized_wire_formats_stay_bit_identical_at_any_width() {
+    use centralvr::dist::codec::WireFormat;
+    let data = dense_shards();
+    for algo in [
+        Algorithm::CentralVrSync,
+        Algorithm::CentralVrAsync,
+        Algorithm::DistSvrg,
+        Algorithm::DistSaga,
+    ] {
+        for wire in [WireFormat::F16, WireFormat::I8] {
+            for ef in [true, false] {
+                let mut c = cfg(algo);
+                c.wire = wire;
+                c.error_feedback = ef;
+                let serial = simulator::run(Problem::Ridge, &data, c, SimParams::analytic(D));
+                for threads in [3usize, 8] {
+                    let parallel = simulator::run(
+                        Problem::Ridge,
+                        &data,
+                        c,
+                        SimParams::analytic(D).with_threads(threads),
+                    );
+                    assert_identical(
+                        &serial,
+                        &parallel,
+                        &format!("{}/{wire}/ef={ef} threads={threads}", algo.name()),
+                    );
+                }
+            }
+        }
+    }
+}
+
 #[test]
 fn all_algorithms_bit_identical_on_csr_shards() {
     let data = csr_shards();

@@ -1,89 +1,191 @@
 #!/usr/bin/env python3
-"""Warn-only bench regression diff (CI: sparse_steps section).
+"""Bench regression diff for the hot_paths artifacts.
 
-Usage: bench_diff.py <current.json> <baseline.json>
+Usage: bench_diff.py <results_dir> <baselines_dir> [bench ...]
 
-Compares a fresh BENCH_sparse_steps.json against the committed baseline
-(rust/benches/baselines/BENCH_sparse_steps.json):
+Tracks three artifacts (all of them by default):
 
-  * per-case wall-time ratio current/baseline above TIME_RATIO_WARN warns
-  * metrics["speedup_lazy_vs_eager"] below SPEEDUP_FLOOR warns (the PR-7
-    acceptance target: lazy CSR epoch >= 5x eager-sparse at d=5k / 1%)
+  * BENCH_sparse_steps.json  — lazy/eager/dense CentralVR epoch times
+  * BENCH_parallel_sim.json  — parallel-simulator wall-clock scaling
+  * BENCH_wire_bytes.json    — exact quantized-payload frame sizes
 
-This step is deliberately advisory: shared CI runners make wall-clock
-noisy, so the script ALWAYS exits 0 and regressions surface as log
-warnings, not red builds. If the baseline is unseeded (empty "runs" —
-the initial commit ships a placeholder because bench numbers must come
-from a real runner, not be invented), it prints seeding instructions
+Two severities, chosen by what the number is:
+
+  * EXACT quantities — everything under an artifact's "exact" block
+    (byte counts, frame sizes) plus ratios derived from them — are
+    deterministic integers: any drift from the committed baseline is a
+    codec change, not runner noise, so the script prints FAIL and exits
+    1. A missing artifact for a bench whose baseline carries an "exact"
+    block also fails: CI runs that section, so absence means breakage.
+  * TIME quantities (t_epoch_s, t_serial_s, t_parallel_s) are noisy on
+    shared runners: ratios above TIME_RATIO_WARN print WARN but never
+    fail the build.
+
+Floors: metrics["speedup_lazy_vs_eager"] below SPEEDUP_FLOOR warns (the
+PR-7 acceptance target); metrics["delta_dense_f32_over_int8"] below
+WIRE_RATIO_FLOOR fails (the PR-8 acceptance target — a pure function of
+frame layout, immune to runner noise).
+
+Unseeded time baselines (empty "runs" — placeholders committed because
+honest numbers must come from a real runner) print seeding instructions
 instead of diffing.
 """
 
 import json
+import os
 import sys
 
 TIME_RATIO_WARN = 1.25
 SPEEDUP_FLOOR = 5.0
+WIRE_RATIO_FLOOR = 3.5
+
+BENCHES = ["sparse_steps", "parallel_sim", "wire_bytes"]
+TIME_KEYS = ("t_epoch_s", "t_serial_s", "t_parallel_s")
 
 
-def main() -> int:
-    if len(sys.argv) != 3:
-        print(f"usage: {sys.argv[0]} <current.json> <baseline.json>")
-        return 0  # advisory step: never fail the build
-
+def load(path):
     try:
-        with open(sys.argv[1]) as f:
-            cur = json.load(f)
+        with open(path) as f:
+            return json.load(f)
     except (OSError, ValueError) as e:
-        print(f"bench_diff: WARN could not read current results: {e}")
-        return 0
-    try:
-        with open(sys.argv[2]) as f:
-            base = json.load(f)
-    except (OSError, ValueError) as e:
-        print(f"bench_diff: WARN could not read baseline: {e}")
-        return 0
+        print(f"bench_diff: could not read {path}: {e}")
+        return None
 
-    # absolute floor check runs even without a seeded baseline
-    speedup = cur.get("metrics", {}).get("speedup_lazy_vs_eager")
+
+def run_key(run):
+    """Identity of one timing entry within a runs list."""
+    if "case" in run:
+        return run["case"]
+    return "p{p}_t{threads}".format(**run) if "p" in run else repr(sorted(run))
+
+
+def diff_times(name, cur, base):
+    """Warn-only wall-clock comparison; returns nothing fatal."""
+    if "runs" not in base and "runs" not in cur:
+        return  # purely exact artifact (wire_bytes): nothing timed
+    if not base.get("runs"):
+        print(
+            f"bench_diff: {name}: baseline is unseeded (no runs). Seed from a real "
+            f"runner:\n    cargo bench --bench hot_paths -- {name}\n"
+            f"    cp results/BENCH_{name}.json rust/benches/baselines/BENCH_{name}.json\n"
+            "and commit the result."
+        )
+        return
+    base_by_key = {run_key(r): r for r in base.get("runs", [])}
+    for run in cur.get("runs", []):
+        ref = base_by_key.get(run_key(run))
+        if ref is None:
+            print(f"bench_diff: note: {name}/{run_key(run)} has no baseline entry")
+            continue
+        for key in TIME_KEYS:
+            t_cur, t_base = run.get(key), ref.get(key)
+            if not t_base or t_cur is None:
+                continue
+            ratio = t_cur / t_base
+            if ratio > TIME_RATIO_WARN:
+                print(
+                    f"bench_diff: WARN {name}/{run_key(run)} {key}: {t_cur:.4f}s vs "
+                    f"baseline {t_base:.4f}s ({ratio:.2f}x, threshold {TIME_RATIO_WARN}x)"
+                )
+            else:
+                print(
+                    f"bench_diff: ok {name}/{run_key(run)} {key}: "
+                    f"{t_cur:.4f}s vs {t_base:.4f}s ({ratio:.2f}x)"
+                )
+
+
+def diff_exact(name, cur, base):
+    """Hard comparison of the deterministic block; returns failure count."""
+    cur_exact = cur.get("exact", {})
+    base_exact = base.get("exact", {})
+    failures = 0
+    for key in sorted(set(cur_exact) | set(base_exact)):
+        if key not in cur_exact:
+            print(f"bench_diff: FAIL {name}: exact key {key!r} missing from current run")
+            failures += 1
+        elif key not in base_exact:
+            print(
+                f"bench_diff: FAIL {name}: exact key {key!r} has no baseline "
+                "(new frame kind? update the committed baseline in the same PR)"
+            )
+            failures += 1
+        elif cur_exact[key] != base_exact[key]:
+            print(
+                f"bench_diff: FAIL {name}: {key} = {cur_exact[key]} but baseline "
+                f"says {base_exact[key]} (frame layout changed)"
+            )
+            failures += 1
+    if not failures and base_exact:
+        print(f"bench_diff: ok {name}: all {len(base_exact)} exact quantities match")
+    return failures
+
+
+def check_floors(name, cur):
+    """Per-metric acceptance floors; returns failure count."""
+    failures = 0
+    metrics = cur.get("metrics", {})
+    speedup = metrics.get("speedup_lazy_vs_eager")
     if speedup is not None:
         if speedup < SPEEDUP_FLOOR:
             print(
-                f"bench_diff: WARN speedup_lazy_vs_eager = {speedup:.2f}x "
+                f"bench_diff: WARN {name}: speedup_lazy_vs_eager = {speedup:.2f}x "
                 f"is below the {SPEEDUP_FLOOR:.0f}x acceptance floor"
             )
         else:
-            print(f"bench_diff: speedup_lazy_vs_eager = {speedup:.2f}x (floor {SPEEDUP_FLOOR:.0f}x) OK")
-
-    if not base.get("runs"):
-        print(
-            "bench_diff: baseline is unseeded (placeholder with no runs).\n"
-            "To seed it from a real runner, copy the bench output over the placeholder:\n"
-            "    cargo bench --bench hot_paths -- sparse_steps\n"
-            "    cp results/BENCH_sparse_steps.json rust/benches/baselines/BENCH_sparse_steps.json\n"
-            "and commit the result."
-        )
-        return 0
-
-    base_by_case = {r["case"]: r for r in base.get("runs", [])}
-    for run in cur.get("runs", []):
-        case = run.get("case")
-        ref = base_by_case.get(case)
-        if ref is None:
-            print(f"bench_diff: note: case {case!r} has no baseline entry")
-            continue
-        t_cur, t_base = run.get("t_epoch_s"), ref.get("t_epoch_s")
-        if not t_base or t_cur is None:
-            continue
-        ratio = t_cur / t_base
-        tag = "WARN" if ratio > TIME_RATIO_WARN else "ok"
-        if ratio > TIME_RATIO_WARN:
             print(
-                f"bench_diff: WARN {case}: {t_cur:.4f}s vs baseline "
-                f"{t_base:.4f}s ({ratio:.2f}x, threshold {TIME_RATIO_WARN}x)"
+                f"bench_diff: ok {name}: speedup_lazy_vs_eager = {speedup:.2f}x "
+                f"(floor {SPEEDUP_FLOOR:.0f}x)"
             )
+    ratio = metrics.get("delta_dense_f32_over_int8")
+    if ratio is not None:
+        if ratio < WIRE_RATIO_FLOOR:
+            print(
+                f"bench_diff: FAIL {name}: delta_dense_f32_over_int8 = {ratio:.2f}x "
+                f"is below the {WIRE_RATIO_FLOOR}x acceptance floor"
+            )
+            failures += 1
         else:
-            print(f"bench_diff: {tag} {case}: {t_cur:.4f}s vs {t_base:.4f}s ({ratio:.2f}x)")
+            print(
+                f"bench_diff: ok {name}: delta_dense_f32_over_int8 = {ratio:.2f}x "
+                f"(floor {WIRE_RATIO_FLOOR}x)"
+            )
+    return failures
 
+
+def main() -> int:
+    if len(sys.argv) < 3:
+        print(f"usage: {sys.argv[0]} <results_dir> <baselines_dir> [bench ...]")
+        return 2
+    results_dir, baselines_dir = sys.argv[1], sys.argv[2]
+    benches = sys.argv[3:] or BENCHES
+
+    failures = 0
+    for name in benches:
+        cur_path = os.path.join(results_dir, f"BENCH_{name}.json")
+        base_path = os.path.join(baselines_dir, f"BENCH_{name}.json")
+        base = load(base_path)
+        if base is None:
+            print(f"bench_diff: note: {name} has no committed baseline, skipping")
+            continue
+        cur = load(cur_path)
+        if cur is None:
+            if base.get("exact"):
+                print(
+                    f"bench_diff: FAIL {name}: baseline carries exact quantities but "
+                    f"no current artifact exists — did the bench section run?"
+                )
+                failures += 1
+            else:
+                print(f"bench_diff: note: {name} produced no current artifact, skipping")
+            continue
+        failures += diff_exact(name, cur, base)
+        failures += check_floors(name, cur)
+        diff_times(name, cur, base)
+
+    if failures:
+        print(f"bench_diff: {failures} hard failure(s)")
+        return 1
+    print("bench_diff: no hard failures")
     return 0
 
 
