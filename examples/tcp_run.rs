@@ -89,7 +89,14 @@ fn driver() {
     // real thing: loopback server + p spawned worker processes
     let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
     let addr = listener.local_addr().expect("local addr").to_string();
-    let scfg = ServeConfig { p: P, easgd_beta: cfg.easgd_beta, read_timeout: None, wire: cfg.wire };
+    let scfg = ServeConfig {
+        p: P,
+        easgd_beta: cfg.easgd_beta,
+        read_timeout: None,
+        wire: cfg.wire,
+        servers: 1,
+        server_id: 0,
+    };
     let server = std::thread::spawn(move || transport::serve(listener, scfg));
     let exe = std::env::current_exe().expect("current_exe");
     let children: Vec<_> = (0..P)

@@ -39,8 +39,14 @@ common options:
   --artifacts DIR      artifact directory (default: artifacts/)
   --dataset K          toy-class|toy-ls|ijcnn1|susy|millionsong|libsvm
                        (sized by --n/--d; libsvm takes --data-path FILE)
-  --addr HOST:PORT     dist: listen (serve) / connect (worker) address
+  --addr HOST:PORT     dist: listen (serve) / connect (worker) address;
+                       workers take a comma-separated list, one per
+                       parameter-plane shard, in shard order
   --worker-id S        dist worker: shard index in [0, p)
+  --servers S          parameter-plane shard count: coordinates 0..d are
+                       split into S contiguous ranges, one server per
+                       range (default 1 = single central server)
+  --server-id K        dist serve: this server's range index in [0, S)
   --easgd-beta B       dist serve: elastic coefficient (default 0.9)
   --out FILE           dist serve: write the final iterate, one f32/line
   --wire W             payload encoding f32|f16|int8 (default f32); serve

@@ -64,6 +64,9 @@ pub fn build_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.get_usize("p")? {
         cfg.p = v;
     }
+    if let Some(v) = args.get_usize("servers")? {
+        cfg.servers = v;
+    }
     if let Some(v) = args.get_f64("eta")? {
         cfg.eta = v as f32;
     }
@@ -115,6 +118,7 @@ fn dist_config(cfg: &ExperimentConfig) -> DistConfig {
         ps_batch: 10,
         network: cfg.network,
         record_every: cfg.p.max(1),
+        servers: cfg.servers,
         wire: cfg.wire,
         error_feedback: cfg.error_feedback,
     }
@@ -186,6 +190,12 @@ fn train(args: &Args) -> Result<()> {
             }
         };
         if args.has("threads") {
+            anyhow::ensure!(
+                dcfg.servers == 1,
+                "--threads runs a single in-process server; use the simulator \
+                 (drop --threads) or `dist serve/worker` for --servers {}",
+                dcfg.servers
+            );
             let trace = threads::run(cfg.problem, &sharded, dcfg);
             println!(
                 "threads: converged={} rel={:.3e} grad_evals={} elapsed={:.3}s (wall)",
@@ -232,11 +242,13 @@ fn train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Real TCP runs: `dist serve` hosts the central server, `dist worker`
-/// runs one shard in this process. A p-worker run is one serve process
-/// plus p worker processes pointed at the same --addr with the same
-/// dataset/seed flags and distinct --worker-id values (see
-/// `examples/tcp_run.rs` for a scripted driver).
+/// Real TCP runs: `dist serve` hosts one central server (or one
+/// parameter-plane shard of it with `--servers S --server-id k`),
+/// `dist worker` runs one data shard in this process. A p-worker run is
+/// S serve processes plus p worker processes pointed at the same
+/// comma-separated --addr list with the same dataset/seed flags and
+/// distinct --worker-id values (see `examples/tcp_run.rs` for a
+/// scripted driver).
 fn dist(args: &Args) -> Result<()> {
     let role = args
         .positional
@@ -256,13 +268,24 @@ fn dist(args: &Args) -> Result<()> {
                 Some(w) => crate::dist::codec::WireFormat::parse(w)
                     .with_context(|| format!("bad --wire {w:?} (f32 | f16 | int8)"))?,
             };
+            let servers = args.get_usize("servers")?.unwrap_or(1);
+            let server_id = args.get_usize("server-id")?.unwrap_or(0);
+            anyhow::ensure!(servers >= 1, "--servers must be >= 1");
+            anyhow::ensure!(
+                server_id < servers,
+                "--server-id {server_id} out of range (servers={servers})"
+            );
             let listener = std::net::TcpListener::bind(addr)
                 .with_context(|| format!("bind {addr}"))?;
             println!(
-                "dist serve: listening on {} for p={p} workers (wire={wire})",
+                "dist serve: listening on {} for p={p} workers \
+                 (wire={wire}, shard {server_id}/{servers})",
                 listener.local_addr()?
             );
-            let rep = transport::serve(listener, ServeConfig { p, easgd_beta, read_timeout, wire })?;
+            let rep = transport::serve(
+                listener,
+                ServeConfig { p, easgd_beta, read_timeout, wire, servers, server_id },
+            )?;
             println!(
                 "dist serve: updates={} frames={} bytes={} (accounted={}) handshake={}B \
                  stops={} goodbyes={} crashes={}",
@@ -315,8 +338,18 @@ fn dist(args: &Args) -> Result<()> {
                 "dist worker needs a distributed --algorithm, got {}",
                 dcfg.algorithm.name()
             );
-            let rep = transport::run_worker(
-                addr,
+            // one address per parameter-plane shard, comma-separated in
+            // shard order; a single address is the classic topology
+            let addrs: Vec<&str> = addr.split(',').map(str::trim).collect();
+            anyhow::ensure!(
+                addrs.len() == dcfg.servers,
+                "--addr lists {} endpoint(s) but --servers is {}; give one \
+                 address per parameter-plane shard, in shard order",
+                addrs.len(),
+                dcfg.servers
+            );
+            let rep = transport::run_worker_sharded(
+                &addrs,
                 s,
                 cfg.problem,
                 sharded.shard(s),
@@ -489,6 +522,19 @@ mod tests {
         let d = dist_config(&ex);
         assert_eq!(d.wire, WireFormat::F16);
         assert!(!d.error_feedback);
+    }
+
+    #[test]
+    fn servers_flag_layers_into_config() {
+        let cfg = build_config(&parse(&["train", "--servers", "4"])).unwrap();
+        assert_eq!(cfg.servers, 4);
+        let cfg = build_config(&parse(&["train"])).unwrap();
+        assert_eq!(cfg.servers, 1);
+        assert!(build_config(&parse(&["train", "--servers", "0"])).is_err());
+        // dist_config carries the topology through to the engines
+        let mut ex = ExperimentConfig::default();
+        ex.servers = 3;
+        assert_eq!(dist_config(&ex).servers, 3);
     }
 
     #[test]

@@ -178,6 +178,10 @@ pub struct ExperimentConfig {
     pub dataset: DatasetSpec,
     /// Worker count (1 for sequential algorithms).
     pub p: usize,
+    /// Parameter-plane shard count: the coordinate space is split into
+    /// this many contiguous ranges, one server per range (TOML
+    /// `servers = 2`, CLI `--servers`). 1 = single central server.
+    pub servers: usize,
     pub eta: f32,
     pub lambda: f32,
     /// Communication period for D-SVRG / D-SAGA / EASGD (paper's tau).
@@ -208,6 +212,7 @@ impl Default for ExperimentConfig {
             problem: Problem::Logistic,
             dataset: DatasetSpec::ToyClassification { n: 5000, d: 20 },
             p: 1,
+            servers: 1,
             eta: 0.05,
             lambda: 1e-4,
             tau: 0,
@@ -251,6 +256,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_int("p") {
             cfg.p = v as usize;
+        }
+        if let Some(v) = doc.get_int("servers") {
+            cfg.servers = v as usize;
         }
         if let Some(v) = doc.get_float("eta") {
             cfg.eta = v as f32;
@@ -318,6 +326,9 @@ impl ExperimentConfig {
         }
         if self.p == 0 {
             bail!("p must be >= 1");
+        }
+        if self.servers == 0 {
+            bail!("servers must be >= 1");
         }
         if self.algorithm.is_distributed() && self.p < 2 {
             bail!(
@@ -399,6 +410,15 @@ mod tests {
         assert_eq!(cfg.wire, WireFormat::F32);
         assert!(cfg.error_feedback);
         assert!(ExperimentConfig::from_toml_str(r#"wire = "f64""#).is_err());
+    }
+
+    #[test]
+    fn servers_key_parses_and_defaults_to_one() {
+        let cfg = ExperimentConfig::from_toml_str("servers = 4").unwrap();
+        assert_eq!(cfg.servers, 4);
+        let cfg = ExperimentConfig::from_toml_str("eta = 0.1").unwrap();
+        assert_eq!(cfg.servers, 1);
+        assert!(ExperimentConfig::from_toml_str("servers = 0").is_err());
     }
 
     #[test]

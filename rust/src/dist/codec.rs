@@ -79,10 +79,11 @@ pub const MAX_WIRE_DIM: u32 = MAX_FRAME_BODY / 4;
 /// density; every quantized layout the encoder would actually pick is
 /// smaller). Lets a transport reject a hostile length prefix before
 /// allocating the body buffer (see `transport::read_frame_bounded`).
-/// `max_dim = 0` still admits handshake frames.
+/// Floored at the `Hello` body size so `max_dim = 0` still admits
+/// handshake frames.
 pub fn max_body_for_dim(max_dim: u32) -> u32 {
     let vec = 9u64 + 8 * max_dim as u64;
-    (1 + 8 + 2 * vec).min(MAX_FRAME_BODY as u64) as u32
+    (1 + 8 + 2 * vec).max(hello_frame_len() - 4).min(MAX_FRAME_BODY as u64) as u32
 }
 
 const TAG_READY: u8 = 0;
@@ -180,11 +181,36 @@ pub struct Hello {
     pub p: u32,
     /// Shard sample count (drives the server-side barrier weights).
     pub n_s: u64,
-    /// Feature dimension (all workers must agree).
+    /// Feature dimension (all workers must agree). This is the *global*
+    /// `d`; a sharded-plane server owns only `[range_lo, range_hi)` of it.
     pub d: u32,
+    /// Parameter-plane shard count the worker sliced its uploads for;
+    /// must equal the server's `--servers`, else subframes describe a
+    /// different partition than the server applies.
+    pub servers: u32,
+    /// Which shard the worker believes this connection serves; must equal
+    /// the server's `--server-id` (a worker dialed the wrong address
+    /// otherwise).
+    pub server_id: u32,
+    /// First coordinate of the range this connection will carry
+    /// (inclusive) — must equal `shard_range(d, servers, server_id).0`.
+    pub range_lo: u32,
+    /// One past the last coordinate of the range (exclusive) — must equal
+    /// `shard_range(d, servers, server_id).1`. Carried explicitly so a
+    /// topology mismatch is rejected at the handshake with both sides'
+    /// numbers in the error, not discovered as a dimension error mid-run.
+    pub range_hi: u32,
     /// Payload encoding this worker will upload with; must equal the
     /// server's configured format so the byte accounting agrees.
     pub wire: WireFormat,
+}
+
+impl Hello {
+    /// Handshake for the classic single-server plane: one connection
+    /// carrying the full coordinate range `[0, d)`.
+    pub fn single(s: u32, p: u32, n_s: u64, d: u32, wire: WireFormat) -> Hello {
+        Hello { s, p, n_s, d, servers: 1, server_id: 0, range_lo: 0, range_hi: d, wire }
+    }
 }
 
 /// Every message the transport can carry.
@@ -464,9 +490,10 @@ pub fn view_frame_len(v: &GlobalView) -> u64 {
     4 + (1 + vec_len(&v.x, false, f32w) + vec_len(&v.gbar, false, f32w)) as u64
 }
 
-/// Encoded frame size of a [`Hello`] handshake.
+/// Encoded frame size of a [`Hello`] handshake: prefix + tag + s + p +
+/// n_s + d + servers + server_id + range_lo + range_hi + wire code.
 pub fn hello_frame_len() -> u64 {
-    4 + (1 + 4 + 4 + 8 + 4 + 1)
+    4 + (1 + 4 + 4 + 8 + 4 + 4 + 4 + 4 + 4 + 1)
 }
 
 /// Encoded frame size of a server-push `Stop` (prefix + tag).
@@ -662,6 +689,10 @@ pub fn encode_hello_into(h: &Hello, buf: &mut Vec<u8>) {
         put_u32(buf, h.p);
         put_u64(buf, h.n_s);
         put_u32(buf, h.d);
+        put_u32(buf, h.servers);
+        put_u32(buf, h.server_id);
+        put_u32(buf, h.range_lo);
+        put_u32(buf, h.range_hi);
         buf.push(h.wire.code());
     });
     debug_assert_eq!(buf.len() as u64, hello_frame_len());
@@ -863,8 +894,12 @@ pub fn decode_body_bounded(body: &[u8], max_dim: u32) -> Result<WireMsg, CodecEr
             let p = cur.u32()?;
             let n_s = cur.u64()?;
             let d = cur.u32()?;
+            let servers = cur.u32()?;
+            let server_id = cur.u32()?;
+            let range_lo = cur.u32()?;
+            let range_hi = cur.u32()?;
             let wire = WireFormat::from_code(cur.u8()?)?;
-            WireMsg::Hello(Hello { s, p, n_s, d, wire })
+            WireMsg::Hello(Hello { s, p, n_s, d, servers, server_id, range_lo, range_hi, wire })
         }
         TAG_STOP => WireMsg::Stop,
         TAG_GOODBYE => WireMsg::Goodbye { rounds: cur.u64()? },
@@ -987,7 +1022,17 @@ mod tests {
     #[test]
     fn hello_roundtrip_and_len() {
         for wire in WireFormat::ALL {
-            let h = Hello { s: 3, p: 4, n_s: 12345, d: 77, wire };
+            let h = Hello {
+                s: 3,
+                p: 4,
+                n_s: 12345,
+                d: 77,
+                servers: 4,
+                server_id: 2,
+                range_lo: 38,
+                range_hi: 57,
+                wire,
+            };
             let frame = encode_hello(&h);
             assert_eq!(frame.len() as u64, hello_frame_len());
             assert_eq!(decode(&frame), Ok(WireMsg::Hello(h)));
@@ -995,8 +1040,17 @@ mod tests {
     }
 
     #[test]
+    fn hello_single_covers_the_full_range() {
+        let h = Hello::single(1, 3, 99, 20, WireFormat::F16);
+        assert_eq!((h.servers, h.server_id), (1, 0));
+        assert_eq!((h.range_lo, h.range_hi), (0, 20));
+        let frame = encode_hello(&h);
+        assert_eq!(decode(&frame), Ok(WireMsg::Hello(h)));
+    }
+
+    #[test]
     fn hello_with_unknown_wire_code_is_rejected() {
-        let h = Hello { s: 0, p: 1, n_s: 1, d: 1, wire: WireFormat::F32 };
+        let h = Hello::single(0, 1, 1, 1, WireFormat::F32);
         let mut frame = encode_hello(&h);
         let last = frame.len() - 1;
         frame[last] = 9;

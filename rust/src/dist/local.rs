@@ -197,11 +197,22 @@ impl<'a> LocalNode<'a> {
     /// next round's delta must re-include the dropped movement or the
     /// server's mean drifts permanently.
     pub fn unsend_delta(&mut self, up: &Upload) {
+        self.unsend_delta_at(up, 0);
+    }
+
+    /// [`Self::unsend_delta`] for a per-range subframe of the sharded
+    /// parameter plane: `up` covers coordinates `[lo, lo + len)` of the
+    /// full delta. Every piece of `sent` bookkeeping is per-coordinate,
+    /// so each server's parking decision rolls back exactly its own range
+    /// — shards that applied their subframes keep their bookkeeping, and
+    /// the next delta re-includes only the genuinely dropped coordinates.
+    /// `lo = 0` with a full-length payload is `unsend_delta` itself.
+    pub fn unsend_delta_at(&mut self, up: &Upload, lo: usize) {
         let Upload::Delta { dx, dgbar } = up else {
             panic!("unsend_delta expects Upload::Delta, got {}", up.kind());
         };
-        math::axpy(-1.0, dx, &mut self.sent_x);
-        math::axpy(-1.0, dgbar, &mut self.sent_gbar);
+        math::axpy(-1.0, dx, &mut self.sent_x[lo..lo + dx.len()]);
+        math::axpy(-1.0, dgbar, &mut self.sent_gbar[lo..lo + dgbar.len()]);
         // D-SAGA's dgbar is a table increment, not cumulative bookkeeping:
         // rolling back `sent_gbar` cannot resend it, so on a lossy wire
         // with error feedback the parked increment rides the residual
@@ -211,12 +222,13 @@ impl<'a> LocalNode<'a> {
             && self.cfg.wire != WireFormat::F32
             && self.cfg.error_feedback
         {
+            let d = self.sent_gbar.len();
             let r = &mut self.ef[1];
-            if r.len() != dgbar.len() {
+            if r.len() != d {
                 r.clear();
-                r.resize(dgbar.len(), 0.0);
+                r.resize(d, 0.0);
             }
-            math::add_assign(r, dgbar);
+            math::add_assign(&mut r[lo..lo + dgbar.len()], dgbar);
         }
     }
 
@@ -687,6 +699,13 @@ impl<'a> RoundMachine<'a> {
     /// [`LocalNode::unsend_delta`]).
     pub fn unsend_delta(&mut self, up: &Upload) {
         self.node.unsend_delta(up);
+    }
+
+    /// Roll back a refused per-range delta subframe starting at
+    /// coordinate `lo` (sharded-plane parking; see
+    /// [`LocalNode::unsend_delta_at`]).
+    pub fn unsend_delta_at(&mut self, up: &Upload, lo: usize) {
+        self.node.unsend_delta_at(up, lo);
     }
 
     /// Compute halves executed so far (budget units).

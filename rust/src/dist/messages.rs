@@ -69,6 +69,36 @@ impl Upload {
         )
     }
 
+    /// The sub-upload covering coordinate range `[lo, hi)` — the per-range
+    /// subframe a worker sends to the parameter-plane shard owning that
+    /// range (see [`crate::dist::shard_range`]). Payload vectors are
+    /// subsliced (the codec rebases sparse indices automatically, since a
+    /// sub-upload's encoded dimension *is* the range length); scalar
+    /// fields that describe the whole round — `GradPartial`'s sample
+    /// count — are carried whole to every shard, because each server
+    /// normalizes its own range by the same pooled count. `slice(0, d)`
+    /// is the identity, so a 1-server plane degenerates to today's wire
+    /// traffic exactly.
+    ///
+    /// Quantized payloads stay lossless under slicing: the int8 grid
+    /// scale is a power of two chosen from the payload max, a subrange
+    /// max never exceeds the full max, and a smaller pow2 scale divides
+    /// every value already on the coarser grid — so re-encoding a slice
+    /// of an already-quantized vector is exact (pinned by the
+    /// `codec_roundtrip` slice/reassemble properties).
+    pub fn slice(&self, lo: usize, hi: usize) -> Upload {
+        let cut = |v: &Vec<f32>| v[lo..hi].to_vec();
+        match self {
+            Upload::Ready => Upload::Ready,
+            Upload::Delta { dx, dgbar } => Upload::Delta { dx: cut(dx), dgbar: cut(dgbar) },
+            Upload::State { x, gbar } => Upload::State { x: cut(x), gbar: cut(gbar) },
+            Upload::GradPartial { gsum, n } => Upload::GradPartial { gsum: cut(gsum), n: *n },
+            Upload::XOnly { x } => Upload::XOnly { x: cut(x) },
+            Upload::ElasticPush { x } => Upload::ElasticPush { x: cut(x) },
+            Upload::GradStep { dx } => Upload::GradStep { dx: cut(dx) },
+        }
+    }
+
     /// Short label for logs and traces.
     pub fn kind(&self) -> &'static str {
         match self {
@@ -97,6 +127,21 @@ impl GlobalView {
     /// [`crate::dist::codec`] (length prefix included).
     pub fn bytes(&self) -> u64 {
         crate::dist::codec::view_frame_len(self)
+    }
+
+    /// Assemble the global view from per-range partial downlinks, in
+    /// shard order (shard k's part covers `shard_range(d, servers, k)`).
+    /// An algorithm that ships no `gbar` (EASGD) leaves every part's
+    /// `gbar` empty, and the assembled view keeps it empty. With a single
+    /// part this is a plain copy, so 1-server planes are unchanged.
+    pub fn concat(parts: &[GlobalView]) -> GlobalView {
+        let mut x = Vec::with_capacity(parts.iter().map(|p| p.x.len()).sum());
+        let mut gbar = Vec::with_capacity(parts.iter().map(|p| p.gbar.len()).sum());
+        for part in parts {
+            x.extend_from_slice(&part.x);
+            gbar.extend_from_slice(&part.gbar);
+        }
+        GlobalView { x, gbar }
     }
 }
 
@@ -258,6 +303,63 @@ mod tests {
         assert!(!Upload::Delta { dx: vec![], dgbar: vec![] }.is_barrier());
         assert!(!Upload::ElasticPush { x: vec![] }.is_barrier());
         assert!(!Upload::GradStep { dx: vec![] }.is_barrier());
+    }
+
+    /// Slicing is per-coordinate and scalar-preserving: the identity at
+    /// the full range, subslices elsewhere, and `GradPartial`'s pooled
+    /// count rides along to every shard.
+    #[test]
+    fn slice_subsets_payloads_and_keeps_scalars() {
+        let up = Upload::Delta {
+            dx: vec![1.0, 2.0, 3.0, 4.0, 5.0],
+            dgbar: vec![-1.0, -2.0, -3.0, -4.0, -5.0],
+        };
+        assert_eq!(up.slice(0, 5), up);
+        assert_eq!(
+            up.slice(1, 3),
+            Upload::Delta { dx: vec![2.0, 3.0], dgbar: vec![-2.0, -3.0] }
+        );
+        let gp = Upload::GradPartial { gsum: vec![1.0, 2.0, 3.0], n: 77 };
+        assert_eq!(gp.slice(2, 3), Upload::GradPartial { gsum: vec![3.0], n: 77 });
+        assert_eq!(Upload::Ready.slice(0, 0), Upload::Ready);
+        // empty ranges are legal (d < servers leaves some shards empty)
+        assert_eq!(
+            up.slice(2, 2),
+            Upload::Delta { dx: vec![], dgbar: vec![] }
+        );
+    }
+
+    /// Slices over `shard_range` reassemble to the original payload, and
+    /// concat of per-range views is the identity at one part.
+    #[test]
+    fn slices_reassemble_and_views_concat() {
+        use crate::dist::shard_range;
+        let x: Vec<f32> = (0..11).map(|i| i as f32 * 0.5).collect();
+        let gbar: Vec<f32> = (0..11).map(|i| -(i as f32)).collect();
+        let up = Upload::State { x: x.clone(), gbar: gbar.clone() };
+        for servers in [1usize, 2, 3, 4] {
+            let mut rx = Vec::new();
+            let mut rg = Vec::new();
+            for k in 0..servers {
+                let (lo, hi) = shard_range(11, servers, k);
+                let Upload::State { x, gbar } = up.slice(lo, hi) else {
+                    panic!("slice changed the kind");
+                };
+                rx.extend(x);
+                rg.extend(gbar);
+            }
+            assert_eq!(rx, x);
+            assert_eq!(rg, gbar);
+        }
+        let parts = [
+            GlobalView { x: vec![1.0, 2.0], gbar: Vec::new() },
+            GlobalView { x: vec![3.0], gbar: Vec::new() },
+        ];
+        let v = GlobalView::concat(&parts);
+        assert_eq!(v.x, vec![1.0, 2.0, 3.0]);
+        assert!(v.gbar.is_empty(), "empty gbar parts must stay empty");
+        let one = GlobalView { x: vec![4.0], gbar: vec![5.0] };
+        assert_eq!(GlobalView::concat(std::slice::from_ref(&one)), one);
     }
 
     #[test]

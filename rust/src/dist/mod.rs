@@ -79,6 +79,12 @@ pub struct DistConfig {
     pub ps_batch: usize,
     /// Latency/bandwidth/service-time/heterogeneity model (simulator).
     pub network: NetworkModel,
+    /// Parameter-plane shard count: the coordinate space `0..d` is split
+    /// into this many contiguous ranges, one server per range (worker s
+    /// slices every upload into per-range subframes and a round completes
+    /// only when all `servers` replies are absorbed). 1 = the classic
+    /// single central server.
+    pub servers: usize,
     /// Payload encoding for the quantized-tier uploads
     /// (`Delta`/`State`/`GradPartial`): f32 (exact), f16, or int8.
     pub wire: codec::WireFormat,
@@ -106,15 +112,52 @@ impl Default for DistConfig {
             decay: 1.0,
             ps_batch: 10,
             network: NetworkModel::default(),
+            servers: 1,
             wire: codec::WireFormat::F32,
             error_feedback: true,
         }
     }
 }
 
+/// The coordinate range owned by parameter-plane shard `k` of `servers`:
+/// `[d*k/servers, d*(k+1)/servers)`. Contiguous, disjoint, covering
+/// `0..d`, with sizes differing by at most one — the single source of
+/// truth shared by the TCP serve loop, the worker's upload slicer, the
+/// simulator's S apply streams, and the Hello handshake validation.
+pub fn shard_range(d: usize, servers: usize, k: usize) -> (usize, usize) {
+    assert!(servers >= 1, "need at least one server");
+    assert!(k < servers, "server id {k} out of range (servers={servers})");
+    (d * k / servers, d * (k + 1) / servers)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn shard_ranges_partition_the_coordinate_space() {
+        for d in [0usize, 1, 5, 8, 97] {
+            for servers in [1usize, 2, 3, 4, 7] {
+                let mut cursor = 0usize;
+                for k in 0..servers {
+                    let (lo, hi) = shard_range(d, servers, k);
+                    assert_eq!(lo, cursor, "d={d} servers={servers} k={k}");
+                    assert!(hi >= lo);
+                    cursor = hi;
+                }
+                assert_eq!(cursor, d, "ranges must cover 0..{d}");
+                // near-equal: range lengths differ by at most 1
+                let lens: Vec<usize> = (0..servers)
+                    .map(|k| {
+                        let (lo, hi) = shard_range(d, servers, k);
+                        hi - lo
+                    })
+                    .collect();
+                let (mn, mx) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                assert!(mx - mn <= 1, "{lens:?}");
+            }
+        }
+    }
 
     #[test]
     fn default_is_a_sane_paper_config() {

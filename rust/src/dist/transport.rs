@@ -5,6 +5,15 @@
 //! Three pieces:
 //!
 //! * [`serve`] — a single-threaded central server over a [`TcpListener`].
+//!   With `--servers S` the parameter plane is sharded: this instance
+//!   owns the contiguous coordinate range
+//!   [`crate::dist::shard_range`]`(d, servers, server_id)` and every
+//!   worker's [`Hello`] must announce the identical topology (shard
+//!   count, shard id, and the exact range) or the handshake is rejected
+//!   with both sides' numbers. The serve loop itself is shard-oblivious:
+//!   [`ServerState`] is sized by the range length and every apply is
+//!   per-coordinate, so `servers = 1` (the classic single central
+//!   server, range `[0, d)`) runs the very same code path.
 //!   It accepts `p` connections, identifies each worker from its
 //!   [`Hello`] handshake (worker slot, shard size for barrier weights,
 //!   feature dimension), then services uploads in a deterministic
@@ -29,12 +38,17 @@
 //!   pushed `Stop`). Encode and frame-read buffers are owned by the
 //!   session and reused across frames, so steady-state rounds allocate
 //!   nothing on the wire path even at text-scale `d`.
-//! * [`run_worker`] — drives the canonical [`RoundMachine`]
-//!   compute/absorb state machine from [`crate::dist::local`] over a
-//!   [`TcpClient`]. No round sequencing lives here: the same machine
-//!   drives `exec::threads` and `exec::simulator`, so TCP endpoints are
+//! * [`run_worker_sharded`] — drives the canonical [`RoundMachine`]
+//!   compute/absorb state machine from [`crate::dist::local`] over one
+//!   [`TcpClient`] per parameter-plane shard: each round's upload is
+//!   sliced into per-range subframes ([`Upload::slice`]), fanned out to
+//!   all `S` servers before blocking on any reply, and the round counts
+//!   as complete only when all `S` partial views are absorbed as one
+//!   [`GlobalView::concat`]. [`run_worker`] is the single-server wrapper.
+//!   No round sequencing lives here: the same machine drives
+//!   `exec::threads` and `exec::simulator`, so TCP endpoints are
 //!   comparable with the in-process engines on the same seed (see
-//!   `rust/tests/tcp_loopback.rs`).
+//!   `rust/tests/tcp_loopback.rs` and `rust/tests/shard_parity.rs`).
 //!
 //! Byte accounting is measured twice on purpose: [`ServeReport`] carries
 //! both the actual frame lengths moved over the socket
@@ -54,7 +68,7 @@ use crate::dist::codec::{self, Hello, WireFormat, WireMsg, MAX_FRAME_BODY};
 use crate::dist::local::{LocalNode, RoundMachine};
 use crate::dist::messages::{GlobalView, Upload};
 use crate::dist::server::ServerState;
-use crate::dist::DistConfig;
+use crate::dist::{shard_range, DistConfig};
 use crate::model::glm::Problem;
 
 /// Read one complete frame (prefix + body) into a reusable buffer,
@@ -160,14 +174,17 @@ pub struct TcpClient {
 }
 
 impl TcpClient {
-    /// Connect and send the identifying handshake.
+    /// Connect and send the identifying handshake. Reply decoding is
+    /// bounded by the Hello's declared coordinate range, not the full
+    /// `d`: a sharded server only ever sends partial views of its own
+    /// range (for [`Hello::single`] the two bounds coincide).
     pub fn connect(addr: &str, hello: Hello) -> Result<TcpClient> {
         let stream = TcpStream::connect(addr)
             .with_context(|| format!("worker {}: connect to {addr}", hello.s))?;
         stream.set_nodelay(true).ok();
         let mut client = TcpClient {
             stream,
-            dim: hello.d,
+            dim: hello.range_hi.saturating_sub(hello.range_lo),
             wire: hello.wire,
             ebuf: Vec::new(),
             rbuf: Vec::new(),
@@ -194,13 +211,21 @@ impl TcpClient {
         self.flush_ebuf()
     }
 
-    /// One protocol round trip: send an upload, block for the reply.
+    /// Send half of a round trip: encode and flush one upload frame.
+    /// Split from [`TcpClient::recv_reply`] so a sharded worker can fan
+    /// out all `S` subframes before blocking on any reply — interleaving
+    /// a send with a blocking read would deadlock a barrier waiting on
+    /// this worker's remaining subframes.
+    pub fn send_upload(&mut self, up: &Upload) -> Result<()> {
+        codec::encode_upload_into(up, self.wire, &mut self.ebuf);
+        self.flush_ebuf()
+    }
+
+    /// Receive half of a round trip: block for the server's reply.
     /// `Ok(Some(view))` is the normal reply; `Ok(None)` means the server
     /// pushed a `Stop` frame — the run is over and the worker should wind
     /// down cleanly at its current round.
-    pub fn exchange(&mut self, up: &Upload) -> Result<Option<GlobalView>> {
-        codec::encode_upload_into(up, self.wire, &mut self.ebuf);
-        self.flush_ebuf()?;
+    pub fn recv_reply(&mut self) -> Result<Option<GlobalView>> {
         match read_msg_into(&mut self.stream, self.dim, &mut self.rbuf)? {
             Some((WireMsg::View(v), n)) => {
                 self.bytes_received += n;
@@ -213,6 +238,12 @@ impl TcpClient {
             Some((other, _)) => bail!("expected a GlobalView reply, got {other:?}"),
             None => bail!("server closed the connection mid round"),
         }
+    }
+
+    /// One protocol round trip: send an upload, block for the reply.
+    pub fn exchange(&mut self, up: &Upload) -> Result<Option<GlobalView>> {
+        self.send_upload(up)?;
+        self.recv_reply()
     }
 }
 
@@ -287,6 +318,13 @@ pub struct ServeConfig {
     /// announce the same format or its byte accounting (and its grid
     /// quantization) would disagree with the server's.
     pub wire: WireFormat,
+    /// Parameter-plane shard count. This server owns the coordinate
+    /// range [`shard_range`]`(d, servers, server_id)`; every worker's
+    /// Hello must announce the identical topology. 1 = the classic
+    /// single central server owning `[0, d)`.
+    pub servers: usize,
+    /// This server's shard id in `0..servers`.
+    pub server_id: usize,
 }
 
 /// What a completed [`serve`] run measured.
@@ -363,6 +401,13 @@ fn check_dims(up: &Upload, d: usize) -> Result<()> {
 /// `Stop` only resolves barriers that cannot fill.
 pub fn serve(listener: TcpListener, cfg: ServeConfig) -> Result<ServeReport> {
     ensure!(cfg.p >= 1, "need at least one worker");
+    ensure!(cfg.servers >= 1, "need at least one parameter-plane shard");
+    ensure!(
+        cfg.server_id < cfg.servers,
+        "server id {} out of range (servers={})",
+        cfg.server_id,
+        cfg.servers
+    );
     // session-owned arenas: one frame-read + one encode buffer for the
     // whole run, reused across workers and rounds
     let mut rbuf: Vec<u8> = Vec::new();
@@ -401,6 +446,22 @@ pub fn serve(listener: TcpListener, cfg: ServeConfig) -> Result<ServeReport> {
             h.wire,
             cfg.wire
         );
+        ensure!(
+            h.servers as usize == cfg.servers && h.server_id as usize == cfg.server_id,
+            "worker {s} addressed shard {}/{} but this server is shard {}/{}",
+            h.server_id,
+            h.servers,
+            cfg.server_id,
+            cfg.servers
+        );
+        let (want_lo, want_hi) = shard_range(h.d as usize, cfg.servers, cfg.server_id);
+        ensure!(
+            (h.range_lo as usize, h.range_hi as usize) == (want_lo, want_hi),
+            "worker {s} declares range [{}, {}) of d={}, this shard owns [{want_lo}, {want_hi})",
+            h.range_lo,
+            h.range_hi,
+            h.d
+        );
         match dim {
             None => dim = Some(h.d),
             Some(d0) => ensure!(
@@ -413,12 +474,17 @@ pub fn serve(listener: TcpListener, cfg: ServeConfig) -> Result<ServeReport> {
         slots[s] = Some(stream);
     }
     let d = dim.expect("p >= 1 so at least one Hello arrived") as usize;
+    // every Hello agreed on the topology, so this server's slice of the
+    // coordinate space is fixed; the state and every decode bound are
+    // sized by the range length (= d when servers == 1)
+    let (range_lo, range_hi) = shard_range(d, cfg.servers, cfg.server_id);
+    let range_len = range_hi - range_lo;
     let mut conns: Vec<TcpStream> = slots.into_iter().map(|c| c.unwrap()).collect();
     let n_total: u64 = n_s.iter().sum();
     ensure!(n_total > 0, "workers reported zero samples in total");
     let weights: Vec<f64> = n_s.iter().map(|&n| n as f64 / n_total as f64).collect();
 
-    let mut state = ServerState::new(d, cfg.p, cfg.easgd_beta);
+    let mut state = ServerState::new(range_len, cfg.p, cfg.easgd_beta);
     let mut done = vec![false; cfg.p];
     let mut said_goodbye = vec![false; cfg.p];
     let mut in_barrier = vec![false; cfg.p];
@@ -461,7 +527,7 @@ pub fn serve(listener: TcpListener, cfg: ServeConfig) -> Result<ServeReport> {
             if done[s] || in_barrier[s] {
                 continue;
             }
-            let msg = match read_msg_into(&mut conns[s], d as u32, &mut rbuf) {
+            let msg = match read_msg_into(&mut conns[s], range_len as u32, &mut rbuf) {
                 Ok(Some((msg, len))) => Some((msg, len)),
                 Ok(None) => None,
                 // a socket error mid-session (connection reset, a frame
@@ -518,7 +584,7 @@ pub fn serve(listener: TcpListener, cfg: ServeConfig) -> Result<ServeReport> {
                 other => bail!("worker {s}: expected an Upload, got {other:?}"),
             };
             ensure!(!said_goodbye[s], "worker {s} sent an Upload after its Goodbye");
-            check_dims(&up, d)?;
+            check_dims(&up, range_len)?;
             frames += 1;
             bytes_on_wire += len;
             bytes_accounted += up.bytes(cfg.wire);
@@ -609,17 +675,114 @@ pub struct WorkerReport {
     pub x: Vec<f32>,
 }
 
-/// Drive one worker's full round budget over TCP. All round sequencing
-/// lives in [`RoundMachine`] — this loop is the same compute/exchange/
-/// absorb two-beat the thread engine runs, so a TCP run does the same
-/// math as the in-process engines on the same seed. Convergence-based
-/// early stop is not propagated over the wire; a server-push `Stop`
-/// (desynced barrier schedule) ends the run cleanly at the current round.
+/// Drive one worker's full round budget over TCP against `S` sharded
+/// parameter servers, `addrs[k]` owning [`shard_range`]`(d, S, k)`. All
+/// round sequencing lives in [`RoundMachine`] — this loop is the same
+/// compute/exchange/absorb two-beat the thread engine runs, so a TCP run
+/// does the same math as the in-process engines on the same seed; the
+/// only transport-layer addition is the slice/fan-out/concat around the
+/// exchange. Each round the full-length upload is cut into per-range
+/// subframes with [`Upload::slice`], all `S` sends are flushed before
+/// the first blocking read, and the round completes only when all `S`
+/// partial views are absorbed as one [`GlobalView::concat`]. EF
+/// residuals never see the slicing: [`LocalNode`] quantizes the
+/// full-length vectors, and slicing an already-quantized payload is
+/// bit-exact (see [`Upload::slice`]).
 ///
-/// The connection is made with [`connect_with_retry`] under the default
-/// [`RetryPolicy`], so workers may be launched before the server binds;
+/// Every worker sends the same frame-kind sequence to every server, so
+/// the `S` server-side protocol state machines evolve in lockstep: a
+/// stall wind-down pushes `Stop` from *all* servers at the same protocol
+/// point. All-`Stop` ends the run cleanly at the current round; a mixed
+/// reply (some views, some stops) means the shards desynced and is an
+/// error. Convergence-based early stop is still not propagated over the
+/// wire.
+///
+/// Connections are made with [`connect_with_retry`] under the default
+/// [`RetryPolicy`], so workers may be launched before the servers bind;
 /// every clean exit (budget spent or `Stop` honored) sends a Goodbye
-/// frame carrying the completed round count before the socket closes.
+/// frame to every server before the sockets close, so each per-server
+/// byte ledger closes independently.
+pub fn run_worker_sharded(
+    addrs: &[&str],
+    s: usize,
+    problem: Problem,
+    shard: &Dataset,
+    n_global: usize,
+    cfg: DistConfig,
+) -> Result<WorkerReport> {
+    ensure!(
+        addrs.len() == cfg.servers,
+        "got {} server addresses for --servers {}",
+        addrs.len(),
+        cfg.servers
+    );
+    ensure!(cfg.servers >= 1, "need at least one server address");
+    let d = shard.d();
+    let mut machine = RoundMachine::new(LocalNode::new(s, shard, problem, cfg, n_global));
+    let ranges: Vec<(usize, usize)> = (0..cfg.servers)
+        .map(|k| shard_range(d, cfg.servers, k))
+        .collect();
+    let mut clients = Vec::with_capacity(cfg.servers);
+    for (k, addr) in addrs.iter().enumerate() {
+        let (lo, hi) = ranges[k];
+        let hello = Hello {
+            s: s as u32,
+            p: cfg.p as u32,
+            n_s: shard.n() as u64,
+            d: d as u32,
+            servers: cfg.servers as u32,
+            server_id: k as u32,
+            range_lo: lo as u32,
+            range_hi: hi as u32,
+            wire: cfg.wire,
+        };
+        clients.push(connect_with_retry(addr, hello, RetryPolicy::default())?);
+    }
+    let mut grad_evals = 0u64;
+    let mut iterations = 0u64;
+    let mut stopped_by_server = false;
+    while let Some(out) = machine.compute() {
+        grad_evals += out.evals;
+        iterations += out.iters;
+        for (k, client) in clients.iter_mut().enumerate() {
+            let (lo, hi) = ranges[k];
+            client.send_upload(&out.upload.slice(lo, hi))?;
+        }
+        let mut parts: Vec<GlobalView> = Vec::with_capacity(cfg.servers);
+        let mut stops = 0usize;
+        for client in clients.iter_mut() {
+            match client.recv_reply()? {
+                Some(view) => parts.push(view),
+                None => stops += 1,
+            }
+        }
+        if stops == cfg.servers {
+            stopped_by_server = true;
+            break;
+        }
+        ensure!(
+            stops == 0,
+            "worker {s}: {stops}/{} servers pushed Stop mid round (shards desynced)",
+            cfg.servers
+        );
+        machine.absorb(GlobalView::concat(&parts));
+    }
+    for client in clients.iter_mut() {
+        client.send_goodbye(machine.rounds() as u64)?;
+    }
+    Ok(WorkerReport {
+        rounds: machine.rounds(),
+        grad_evals,
+        iterations,
+        bytes_sent: clients.iter().map(|c| c.bytes_sent).sum(),
+        bytes_received: clients.iter().map(|c| c.bytes_received).sum(),
+        stopped_by_server,
+        x: machine.node().x().to_vec(),
+    })
+}
+
+/// [`run_worker_sharded`] against the classic single central server
+/// (`cfg.servers` must be 1).
 pub fn run_worker(
     addr: &str,
     s: usize,
@@ -628,40 +791,7 @@ pub fn run_worker(
     n_global: usize,
     cfg: DistConfig,
 ) -> Result<WorkerReport> {
-    let d = shard.d();
-    let mut machine = RoundMachine::new(LocalNode::new(s, shard, problem, cfg, n_global));
-    let hello = Hello {
-        s: s as u32,
-        p: cfg.p as u32,
-        n_s: shard.n() as u64,
-        d: d as u32,
-        wire: cfg.wire,
-    };
-    let mut client = connect_with_retry(addr, hello, RetryPolicy::default())?;
-    let mut grad_evals = 0u64;
-    let mut iterations = 0u64;
-    let mut stopped_by_server = false;
-    while let Some(out) = machine.compute() {
-        grad_evals += out.evals;
-        iterations += out.iters;
-        match client.exchange(&out.upload)? {
-            Some(view) => machine.absorb(view),
-            None => {
-                stopped_by_server = true;
-                break;
-            }
-        }
-    }
-    client.send_goodbye(machine.rounds() as u64)?;
-    Ok(WorkerReport {
-        rounds: machine.rounds(),
-        grad_evals,
-        iterations,
-        bytes_sent: client.bytes_sent,
-        bytes_received: client.bytes_received,
-        stopped_by_server,
-        x: machine.node().x().to_vec(),
-    })
+    run_worker_sharded(&[addr], s, problem, shard, n_global, cfg)
 }
 
 #[cfg(test)]

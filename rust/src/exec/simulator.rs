@@ -57,6 +57,25 @@
 //! the server charges its service time, and the worker gets a fresh
 //! view. Everything the scenario machinery did is reported in
 //! [`SimReport::scenario`].
+//!
+//! # Sharded parameter plane
+//!
+//! With `cfg.servers = S > 1` the simulator models S serialized apply
+//! streams, one per contiguous coordinate range
+//! [`crate::dist::shard_range`]`(d, S, k)`: each upload is sliced into
+//! per-range subframes ([`Upload::slice`]) that arrive, queue behind
+//! their own server's FIFO lock, and reply independently; a worker's
+//! next compute fires only when all S partial views have landed and are
+//! concatenated into one [`GlobalView`] — exactly the TCP
+//! [`crate::dist::transport::run_worker_sharded`] round contract, which
+//! is why this engine is the oracle for `rust/tests/shard_parity.rs`.
+//! Batching stays event-order-determined (reply-set completion order is
+//! a pure function of the serialized event sequence), so any
+//! `--sim-threads` width stays bit-identical at every S. Global metrics
+//! are recorded on shard 0's apply stream against the concatenation of
+//! all shards' iterates; worker churn (deaths/rejoins) is rejected at
+//! S > 1. `servers = 1` runs the identical code path over the single
+//! range `[0, d)`.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -115,12 +134,14 @@ impl SimParams {
 
 #[derive(Debug)]
 enum EventKind {
-    /// An upload from worker `s` reaches the server inbox. Barrier kinds
-    /// collect in the server inbox; the rest apply immediately.
-    Arrive { s: usize, upload: Upload },
-    /// The server's reply reaches worker `s`, which absorbs it and
-    /// computes its next round (charging virtual compute time).
-    Reply { s: usize, view: GlobalView },
+    /// Worker `s`'s subframe for parameter-plane shard `k` reaches that
+    /// server's inbox. Barrier kinds collect in the shard's inbox; the
+    /// rest apply immediately. (`k = 0` is the only shard at S=1.)
+    Arrive { s: usize, k: usize, upload: Upload },
+    /// Shard `k`'s partial reply reaches worker `s`. The worker absorbs
+    /// the concatenated view and computes its next round (charging
+    /// virtual compute time) once all S parts have landed.
+    Reply { s: usize, k: usize, view: GlobalView },
     /// Scenario: worker `s` crashes at this instant (its in-flight upload
     /// was already dropped); the server evicts its contribution.
     Death { s: usize },
@@ -269,8 +290,9 @@ struct ScenarioRun {
     death_round: Vec<Option<u64>>,
     /// Rejoin delay per worker, consumed at death time.
     rejoin_after: Vec<Option<f64>>,
-    /// `server.updates` at the instant each worker's last view was sent
-    /// (staleness age = updates now − born then).
+    /// `updates` of shard `k`'s server at the instant worker `s`'s last
+    /// view part was sent, indexed `s * servers + k` (staleness age =
+    /// updates now − born then; each shard ages its own subframes).
     born: Vec<u64>,
     track_contrib: bool,
     contrib_x: Vec<Vec<f32>>,
@@ -279,7 +301,7 @@ struct ScenarioRun {
 }
 
 impl ScenarioRun {
-    fn new(spec: &ScenarioSpec, seed: u64, p: usize, d: usize) -> ScenarioRun {
+    fn new(spec: &ScenarioSpec, seed: u64, p: usize, d: usize, servers: usize) -> ScenarioRun {
         let mut death_round = vec![None; p];
         for dsp in &spec.deaths {
             death_round[dsp.worker] = Some(dsp.round);
@@ -301,7 +323,7 @@ impl ScenarioRun {
             alive: vec![true; p],
             death_round,
             rejoin_after,
-            born: vec![0; p],
+            born: vec![0; p * servers],
             track_contrib,
             contrib_x: zeros(),
             contrib_gbar: zeros(),
@@ -317,15 +339,22 @@ struct Sim<'a> {
     cfg: DistConfig,
     params: SimParams,
     machines: Vec<RoundMachine<'a>>,
-    server: ServerState,
+    /// One serialized apply stream per parameter-plane shard;
+    /// `servers[k]` owns `ranges[k]` (a single `[0, d)` entry at S=1).
+    servers: Vec<ServerState>,
+    ranges: Vec<(usize, usize)>,
     speeds: Vec<f64>,
     weights: Vec<f64>,
     heap: BinaryHeap<Event>,
     seq: u64,
-    // FIFO server-lock model
-    server_free_at: f64,
-    // barrier timing (collection itself lives in the server inbox)
-    barrier_last_arrival: f64,
+    // FIFO server-lock model, per shard
+    server_free_at: Vec<f64>,
+    // barrier timing per shard (collection lives in each shard's inbox)
+    barrier_last_arrival: Vec<f64>,
+    /// Partial-reply assembly: `parts[s][k]` holds shard `k`'s view until
+    /// all S land, then the concatenation becomes one compute item.
+    parts: Vec<Vec<Option<GlobalView>>>,
+    parts_left: Vec<usize>,
     counters: Arc<Counters>,
     series: Series,
     check: ConvergenceCheck,
@@ -347,8 +376,12 @@ impl<'a> Sim<'a> {
     ) -> Self {
         let p = data.p();
         assert_eq!(cfg.p, p, "cfg.p must match shard count");
+        assert!(cfg.servers >= 1, "need at least one parameter-plane shard");
         let d = data.d();
         let n_global = data.n_total();
+        let ranges: Vec<(usize, usize)> = (0..cfg.servers)
+            .map(|k| crate::dist::shard_range(d, cfg.servers, k))
+            .collect();
         let machines: Vec<RoundMachine> = (0..p)
             .map(|s| RoundMachine::new(LocalNode::new(s, data.shard(s), problem, cfg, n_global)))
             .collect();
@@ -372,13 +405,19 @@ impl<'a> Sim<'a> {
             cfg,
             params,
             machines,
-            server: ServerState::new(d, p, cfg.easgd_beta),
+            servers: ranges
+                .iter()
+                .map(|&(lo, hi)| ServerState::new(hi - lo, p, cfg.easgd_beta))
+                .collect(),
             speeds,
             weights,
             heap: BinaryHeap::new(),
             seq: 0,
-            server_free_at: 0.0,
-            barrier_last_arrival: 0.0,
+            server_free_at: vec![0.0; cfg.servers],
+            barrier_last_arrival: vec![0.0; cfg.servers],
+            parts: vec![vec![None; cfg.servers]; p],
+            parts_left: vec![cfg.servers; p],
+            ranges,
             counters: Counters::new(),
             series: Series::new(cfg.algorithm.name()),
             check: ConvergenceCheck::new(cfg.tol),
@@ -396,11 +435,21 @@ impl<'a> Sim<'a> {
         if let Some(spec) = spec {
             spec.validate(self.cfg.algorithm, self.cfg.p)
                 .expect("scenario spec rejected for this run");
+            // churn rewrites a single server's mean over live workers;
+            // coordinating an eviction across S independent apply streams
+            // is future work, so the combination is rejected up front
+            assert!(
+                self.cfg.servers == 1 || (spec.deaths.is_empty() && spec.rejoins.is_empty()),
+                "worker deaths/rejoins are not supported on a sharded parameter plane \
+                 (servers={})",
+                self.cfg.servers
+            );
             self.scn = Some(ScenarioRun::new(
                 spec,
                 self.cfg.seed,
                 self.cfg.p,
                 self.data.d(),
+                self.cfg.servers,
             ));
         }
         self
@@ -460,7 +509,9 @@ impl<'a> Sim<'a> {
             }
             let mut extra = 0.0;
             if let Some(scn) = &mut self.scn {
-                // straggler latency on the worker->server leg
+                // straggler latency on the worker->server leg, drawn ONCE
+                // per upload (the noise models the worker's uplink, so
+                // every per-range subframe shares the same draw)
                 if let Some(dist) = scn.spec.latency_for(item.s) {
                     extra += dist.sample(&mut scn.rng);
                 }
@@ -472,30 +523,59 @@ impl<'a> Sim<'a> {
                 }
                 scn.stats.extra_latency_s += extra;
             }
-            let bytes = out.upload.bytes(self.cfg.wire);
-            self.counters.add_frame_bytes(bytes);
-            let arrive = item.t0 + compute + extra + self.cfg.network.transfer_time(bytes);
-            self.push(
-                arrive,
-                EventKind::Arrive {
-                    s: item.s,
-                    upload: out.upload,
-                },
-            );
+            if self.cfg.servers == 1 {
+                // single shard: move the upload instead of slicing a copy
+                let bytes = out.upload.bytes(self.cfg.wire);
+                self.counters.add_frame_bytes(bytes);
+                let arrive = item.t0 + compute + extra + self.cfg.network.transfer_time(bytes);
+                self.push(
+                    arrive,
+                    EventKind::Arrive {
+                        s: item.s,
+                        k: 0,
+                        upload: out.upload,
+                    },
+                );
+                continue;
+            }
+            // fan the upload out into per-range subframes, one Arrive per
+            // parameter-plane shard; each subframe pays its own
+            // size-dependent transfer time
+            for k in 0..self.cfg.servers {
+                let (lo, hi) = self.ranges[k];
+                let sub = out.upload.slice(lo, hi);
+                let bytes = sub.bytes(self.cfg.wire);
+                self.counters.add_frame_bytes(bytes);
+                let arrive = item.t0 + compute + extra + self.cfg.network.transfer_time(bytes);
+                self.push(
+                    arrive,
+                    EventKind::Arrive {
+                        s: item.s,
+                        k,
+                        upload: sub,
+                    },
+                );
+            }
         }
     }
 
+    /// The global iterate: the concatenation of every shard's `x` in
+    /// range order (shard 0's vector verbatim at S=1).
+    fn global_x(&self) -> Vec<f32> {
+        let mut x = Vec::with_capacity(self.data.d());
+        for srv in &self.servers {
+            x.extend_from_slice(&srv.x);
+        }
+        x
+    }
+
     fn record(&mut self, t: f64) {
+        let x = self.global_x();
         let shards: Vec<&crate::data::dataset::Dataset> =
             self.data.shards().iter().collect();
-        let g = gradients::global_grad_norm(
-            self.problem,
-            &shards,
-            &self.server.x,
-            self.cfg.lambda,
-        );
+        let g = gradients::global_grad_norm(self.problem, &shards, &x, self.cfg.lambda);
         let rel = self.check.observe(g);
-        let obj = gradients::objective(self.problem, &shards, &self.server.x, self.cfg.lambda);
+        let obj = gradients::objective(self.problem, &shards, &x, self.cfg.lambda);
         self.series.push(Sample {
             time_s: t,
             grad_evals: self.total_grad_evals,
@@ -509,29 +589,33 @@ impl<'a> Sim<'a> {
         }
     }
 
-    /// Server half of an arrival: barrier kinds collect in the server
-    /// inbox, the rest apply immediately — both strictly serialized in
-    /// virtual-time order. With a bounded-staleness scenario, an async
-    /// upload computed against a view older than τ server updates is
-    /// parked instead of applied.
-    fn arrive(&mut self, t: f64, s: usize, upload: Upload) {
+    /// Server half of a subframe arrival at shard `k`: barrier kinds
+    /// collect in that shard's inbox, the rest apply immediately — both
+    /// strictly serialized in virtual-time order per shard. With a
+    /// bounded-staleness scenario, a subframe computed against a view
+    /// older than τ of *that shard's* updates is parked instead of
+    /// applied (each shard decides for its own range, and a parked
+    /// `Delta` rolls back exactly its own range's `sent` bookkeeping).
+    fn arrive(&mut self, t: f64, s: usize, k: usize, upload: Upload) {
         if upload.is_barrier() {
-            self.barrier_collect(t, s, upload);
-        } else if self.stale_should_park(s) {
-            self.park_stale(t, s, upload);
+            self.barrier_collect(t, s, k, upload);
+        } else if self.stale_should_park(s, k) {
+            self.park_stale(t, s, k, upload);
         } else {
-            self.async_apply(t, s, upload);
+            self.async_apply(t, s, k, upload);
         }
     }
 
-    /// Bounded-staleness decision for an async upload from worker `s`;
-    /// updates the age statistics as a side effect.
-    fn stale_should_park(&mut self, s: usize) -> bool {
-        let updates = self.server.updates;
+    /// Bounded-staleness decision for an async subframe from worker `s`
+    /// at shard `k`; updates the age statistics as a side effect (ages
+    /// count per (upload, shard) subframe at S > 1).
+    fn stale_should_park(&mut self, s: usize, k: usize) -> bool {
+        let updates = self.servers[k].updates;
+        let servers = self.cfg.servers;
         let Some(scn) = &mut self.scn else {
             return false;
         };
-        let age = updates.saturating_sub(scn.born[s]);
+        let age = updates.saturating_sub(scn.born[s * servers + k]);
         match scn.spec.staleness_tau {
             Some(tau) if age > tau => {
                 scn.stats.stale_parked += 1;
@@ -546,30 +630,32 @@ impl<'a> Sim<'a> {
         }
     }
 
-    /// Park a too-stale async upload: the server charges its service time
-    /// (inspecting the frame is not free, and the spent budget guarantees
-    /// termination) but applies nothing; the worker gets a reply so it
-    /// keeps running against fresher state. A parked `Delta`'s `sent`
-    /// bookkeeping is rolled back so the next delta re-includes the
-    /// dropped movement; a parked EASGD push echoes the worker's own
-    /// iterate back (nothing exchanged); a parked PS-SVRG step is simply
-    /// a lost gradient step.
-    fn park_stale(&mut self, t: f64, s: usize, upload: Upload) {
-        let start = self.server_free_at.max(t);
+    /// Park a too-stale async subframe: shard `k` charges its service
+    /// time (inspecting the frame is not free, and the spent budget
+    /// guarantees termination) but applies nothing; the worker gets a
+    /// partial reply so it keeps running against fresher state. A parked
+    /// `Delta` subframe rolls back exactly its own range's `sent`
+    /// bookkeeping ([`RoundMachine::unsend_delta_at`]) so the next delta
+    /// re-includes the dropped movement — other shards' subframes from
+    /// the same upload park or apply independently; a parked EASGD push
+    /// echoes the worker's own iterate back (nothing exchanged); a
+    /// parked PS-SVRG step is simply a lost gradient step.
+    fn park_stale(&mut self, t: f64, s: usize, k: usize, upload: Upload) {
+        let start = self.server_free_at[k].max(t);
         let done = start + self.cfg.network.server_service_s;
-        self.server_free_at = done;
+        self.server_free_at[k] = done;
         let view = match &upload {
             Upload::Delta { .. } => {
-                self.machines[s].unsend_delta(&upload);
-                self.server.view()
+                self.machines[s].unsend_delta_at(&upload, self.ranges[k].0);
+                self.servers[k].view()
             }
             Upload::ElasticPush { x } => GlobalView {
                 x: x.clone(),
                 gbar: Vec::new(),
             },
-            _ => self.server.view(),
+            _ => self.servers[k].view(),
         };
-        self.send_reply(done, s, view);
+        self.send_reply(done, s, k, view);
     }
 
     /// Scenario: worker `s` crashes. Its contribution (the sum of every
@@ -585,7 +671,8 @@ impl<'a> Sim<'a> {
         let cx = std::mem::replace(&mut scn.contrib_x[s], vec![0.0; d]);
         let cg = std::mem::replace(&mut scn.contrib_gbar[s], vec![0.0; d]);
         let rejoin = scn.rejoin_after[s].take();
-        self.server.evict_contribution(&cx, &cg);
+        // churn is rejected at S > 1, so this is the single shard [0, d)
+        self.servers[0].evict_contribution(&cx, &cg);
         if let Some(after) = rejoin {
             self.push(t + after, EventKind::Rejoin { s });
         }
@@ -601,89 +688,98 @@ impl<'a> Sim<'a> {
             scn.alive[s] = true;
             scn.stats.rejoins += 1;
         }
-        self.server.admit_zero_contribution();
+        self.servers[0].admit_zero_contribution();
         self.machines[s].reset_contribution();
-        let start = self.server_free_at.max(t);
+        let start = self.server_free_at[0].max(t);
         let done = start + self.cfg.network.server_service_s;
-        self.server_free_at = done;
-        let view = self.server.view();
-        self.send_reply(done, s, view);
+        self.server_free_at[0] = done;
+        let view = self.servers[0].view();
+        self.send_reply(done, s, 0, view);
     }
 
-    /// Charge a reply's wire bytes, stamp the receiver's staleness birth
-    /// mark, and schedule its delivery. Every reply the simulator sends
-    /// goes through here.
-    fn send_reply(&mut self, done: f64, s: usize, view: GlobalView) {
-        let updates = self.server.updates;
+    /// Charge a partial reply's wire bytes, stamp the receiver's
+    /// staleness birth mark for shard `k`, and schedule its delivery.
+    /// Every reply the simulator sends goes through here.
+    fn send_reply(&mut self, done: f64, s: usize, k: usize, view: GlobalView) {
+        let updates = self.servers[k].updates;
+        let servers = self.cfg.servers;
         if let Some(scn) = &mut self.scn {
-            scn.born[s] = updates;
+            scn.born[s * servers + k] = updates;
         }
         let bytes = view.bytes();
         self.counters.add_frame_bytes(bytes);
         let reply_at = done + self.cfg.network.transfer_time(bytes);
-        self.push(reply_at, EventKind::Reply { s, view });
+        self.push(reply_at, EventKind::Reply { s, k, view });
     }
 
-    /// Server applies an async upload (FIFO lock model) and replies.
-    fn async_apply(&mut self, t: f64, s: usize, upload: Upload) {
-        let start = self.server_free_at.max(t);
+    /// Shard `k` applies an async subframe (FIFO lock model per shard)
+    /// and replies with its partial view. Global metrics are recorded on
+    /// shard 0's stream only, so `record_every` keeps its S=1 semantics.
+    fn async_apply(&mut self, t: f64, s: usize, k: usize, upload: Upload) {
+        let start = self.server_free_at[k].max(t);
         let done = start + self.cfg.network.server_service_s;
-        self.server_free_at = done;
+        self.server_free_at[k] = done;
         self.counters.add_server_round();
+        let (lo, _) = self.ranges[k];
         let view = match &upload {
             Upload::Delta { dx, dgbar } => {
-                self.server.apply_delta(&upload);
+                self.servers[k].apply_delta(&upload);
                 // churn bookkeeping: remember what the server now holds
                 // for this worker, so a death can evict exactly that
                 if let Some(scn) = &mut self.scn {
                     if scn.track_contrib {
-                        math::add_assign(&mut scn.contrib_x[s], dx);
-                        math::add_assign(&mut scn.contrib_gbar[s], dgbar);
+                        math::add_assign(&mut scn.contrib_x[s][lo..lo + dx.len()], dx);
+                        math::add_assign(&mut scn.contrib_gbar[s][lo..lo + dgbar.len()], dgbar);
                     }
                 }
-                self.server.view()
+                self.servers[k].view()
             }
             Upload::ElasticPush { .. } => GlobalView {
-                x: self.server.apply_elastic(&upload),
+                x: self.servers[k].apply_elastic(&upload),
                 gbar: Vec::new(),
             },
             Upload::GradStep { .. } => {
-                self.server.apply_grad_step(&upload);
-                self.server.view()
+                self.servers[k].apply_grad_step(&upload);
+                self.servers[k].view()
             }
             other => panic!("barrier upload {} routed to async apply", other.kind()),
         };
-        self.applies_since_record += 1;
-        if self.applies_since_record >= self.cfg.record_every {
-            self.applies_since_record = 0;
-            self.record(done);
+        if k == 0 {
+            self.applies_since_record += 1;
+            if self.applies_since_record >= self.cfg.record_every {
+                self.applies_since_record = 0;
+                self.record(done);
+            }
         }
-        self.send_reply(done, s, view);
+        self.send_reply(done, s, k, view);
     }
 
-    /// Barrier collection: deposit into the server inbox; when all p have
-    /// arrived, apply the round (kind-dispatched) and broadcast.
-    fn barrier_collect(&mut self, t: f64, s: usize, upload: Upload) {
-        self.barrier_last_arrival = self.barrier_last_arrival.max(t);
-        let Some(round) = self.server.deposit(s, upload) else {
+    /// Barrier collection at shard `k`: deposit into that shard's inbox;
+    /// when all p subframes have arrived, apply the round
+    /// (kind-dispatched) and broadcast the partial view. Each shard's
+    /// barrier completes independently — a worker's next round still
+    /// waits for all S broadcasts via the reply assembly.
+    fn barrier_collect(&mut self, t: f64, s: usize, k: usize, upload: Upload) {
+        self.barrier_last_arrival[k] = self.barrier_last_arrival[k].max(t);
+        let Some(round) = self.servers[k].deposit(s, upload) else {
             return;
         };
-        // serialized processing of p messages under the lock
+        // serialized processing of p messages under the shard's lock
         let done =
-            self.barrier_last_arrival + self.cfg.p as f64 * self.cfg.network.server_service_s;
-        self.barrier_last_arrival = 0.0;
+            self.barrier_last_arrival[k] + self.cfg.p as f64 * self.cfg.network.server_service_s;
+        self.barrier_last_arrival[k] = 0.0;
         self.counters.add_server_round();
         let freeze = matches!(round[0], Upload::Ready);
-        self.server
+        self.servers[k]
             .apply_barrier_round(&round, &self.weights)
             .expect("lockstep barrier rounds are kind-uniform");
-        if !freeze {
+        if !freeze && k == 0 {
             self.record(done);
         }
-        // broadcast
+        // broadcast the shard's partial view to every worker
         for s in 0..self.cfg.p {
-            let view = self.server.view();
-            self.send_reply(done, s, view);
+            let view = self.servers[k].view();
+            self.send_reply(done, s, k, view);
         }
     }
 
@@ -700,8 +796,12 @@ impl<'a> Sim<'a> {
             .collect();
         self.run_compute_batch(kick);
         'events: loop {
-            // drain every consecutive Reply at the head of the queue into
-            // one compute batch (their compute halves are independent)
+            // drain every consecutive Reply at the head of the queue. A
+            // worker joins the compute batch the moment its S-th partial
+            // view lands (S = 1: every reply completes a set), stamped at
+            // that completing reply's time — set completion is a pure
+            // function of the serialized event order, so batch membership
+            // is identical at every thread width.
             let mut batch: Vec<ComputeItem> = Vec::new();
             while matches!(
                 self.heap.peek().map(|e| &e.kind),
@@ -714,8 +814,25 @@ impl<'a> Sim<'a> {
                     break 'events;
                 }
                 self.now = ev.t;
-                let EventKind::Reply { s, view } = ev.kind else {
+                let EventKind::Reply { s, k, view } = ev.kind else {
                     unreachable!("peek matched Reply");
+                };
+                debug_assert!(self.parts[s][k].is_none(), "duplicate reply part");
+                self.parts[s][k] = Some(view);
+                self.parts_left[s] -= 1;
+                if self.parts_left[s] > 0 {
+                    continue;
+                }
+                self.parts_left[s] = self.cfg.servers;
+                let view = if self.cfg.servers == 1 {
+                    // single shard: move the view instead of concat-copying
+                    self.parts[s][0].take().expect("the one part landed")
+                } else {
+                    let set: Vec<GlobalView> = self.parts[s]
+                        .iter_mut()
+                        .map(|part| part.take().expect("all parts landed"))
+                        .collect();
+                    GlobalView::concat(&set)
                 };
                 batch.push(ComputeItem {
                     s,
@@ -734,7 +851,7 @@ impl<'a> Sim<'a> {
             }
             self.now = ev.t;
             match ev.kind {
-                EventKind::Arrive { s, upload } => self.arrive(ev.t, s, upload),
+                EventKind::Arrive { s, k, upload } => self.arrive(ev.t, s, k, upload),
                 EventKind::Death { s } => self.worker_death(ev.t, s),
                 EventKind::Rejoin { s } => self.worker_rejoin(ev.t, s),
                 EventKind::Reply { .. } => unreachable!("replies drained above"),
@@ -751,7 +868,7 @@ impl<'a> Sim<'a> {
             iterations: self.total_iterations,
             elapsed_s: self.now,
             converged: self.converged,
-            x: self.server.x.clone(),
+            x: self.global_x(),
             series: self.series,
         };
         SimReport {
@@ -1016,6 +1133,49 @@ mod tests {
             "rejoined worker must compute again: {:?}",
             rep.rounds_per_worker
         );
+    }
+
+    /// A sharded parameter plane changes the topology, not the math: for
+    /// a barrier algorithm every shard applies the same round, so S=2
+    /// must land on (essentially) the S=1 iterate. The exhaustive wall
+    /// (S ∈ {1,2,4} × algorithms × layouts, plus TCP) lives in
+    /// `rust/tests/shard_parity.rs`.
+    #[test]
+    fn sharded_sync_matches_single_server() {
+        let data = toy_sharded(3, 64, 5);
+        let mut cfg = base_cfg(Algorithm::CentralVrSync, 3);
+        cfg.tol = 0.0;
+        cfg.max_rounds = 6;
+        let one = run(Problem::Ridge, &data, cfg, SimParams::analytic(5));
+        cfg.servers = 2;
+        let two = run(Problem::Ridge, &data, cfg, SimParams::analytic(5));
+        assert_eq!(one.trace.x.len(), two.trace.x.len());
+        for (a, b) in one.trace.x.iter().zip(&two.trace.x) {
+            assert!((a - b).abs() <= 1e-5, "S=1 {a} vs S=2 {b}");
+        }
+        // every worker still completed its full budget at S=2
+        assert!(two.rounds_per_worker.iter().all(|&r| r == 6));
+    }
+
+    /// Sharded runs keep the thread-width determinism guarantee: reply
+    /// sets complete in serialized event order, so batching is identical.
+    #[test]
+    fn sharded_parallel_compute_is_bit_identical_to_serial() {
+        let data = toy_sharded(4, 64, 5);
+        let mut cfg = base_cfg(Algorithm::CentralVrAsync, 4);
+        cfg.tol = 0.0;
+        cfg.max_rounds = 6;
+        cfg.servers = 2;
+        let serial = run(Problem::Ridge, &data, cfg, SimParams::analytic(5));
+        let parallel = run(
+            Problem::Ridge,
+            &data,
+            cfg,
+            SimParams::analytic(5).with_threads(4),
+        );
+        assert_eq!(serial.trace.x, parallel.trace.x);
+        assert_eq!(serial.events, parallel.events);
+        assert_eq!(serial.counters, parallel.counters);
     }
 
     #[test]

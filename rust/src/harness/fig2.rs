@@ -81,6 +81,7 @@ pub fn dist_config(problem: Problem, algo: Algorithm, p: usize, n_per: usize, d:
         easgd_beta: 0.9,
         decay: 1.0,
         ps_batch: 10,
+        servers: 1,
         network: Default::default(),
         record_every: match algo {
             Algorithm::PsSvrg => 50 * p,

@@ -4,6 +4,7 @@
 
 use centralvr::dist::codec::{self, CodecError, Hello, WireFormat, WireMsg, MAX_FRAME_BODY};
 use centralvr::dist::messages::{GlobalView, Upload};
+use centralvr::dist::shard_range;
 use centralvr::util::propcheck::{ensure, forall, gen_usize};
 use centralvr::util::rng::Pcg64;
 
@@ -126,12 +127,22 @@ fn view_roundtrip_and_bytes_invariant() {
 fn hello_roundtrip() {
     forall(
         "hello round-trips",
-        |r| Hello {
-            s: (r.next_u64() & 0xFFFF) as u32,
-            p: (r.next_u64() & 0xFFFF) as u32,
-            n_s: r.next_u64() >> 1,
-            d: (r.next_u64() & 0xFFFF_FFFF) as u32,
-            wire: WireFormat::ALL[gen_usize(r, 0..WireFormat::ALL.len())],
+        |r| {
+            let d = (r.next_u64() & 0xFFFF_FFFF) as u32;
+            let servers = gen_usize(r, 1..9);
+            let server_id = gen_usize(r, 0..servers);
+            let (lo, hi) = shard_range(d as usize, servers, server_id);
+            Hello {
+                s: (r.next_u64() & 0xFFFF) as u32,
+                p: (r.next_u64() & 0xFFFF) as u32,
+                n_s: r.next_u64() >> 1,
+                d,
+                servers: servers as u32,
+                server_id: server_id as u32,
+                range_lo: lo as u32,
+                range_hi: hi as u32,
+                wire: WireFormat::ALL[gen_usize(r, 0..WireFormat::ALL.len())],
+            }
         },
         |h| {
             let frame = codec::encode_hello(h);
@@ -182,6 +193,160 @@ fn edge_payload_lengths_roundtrip() {
         assert_eq!(frame.len() as u64, v.bytes());
         assert_eq!(codec::decode(&frame), Ok(WireMsg::View(v)));
     }
+}
+
+// ---------------------------------------------------------------------------
+// sharded parameter plane: range subframes
+// ---------------------------------------------------------------------------
+
+/// Full dimension of an upload's payload vectors (0 for `Ready`).
+fn upload_dim(up: &Upload) -> usize {
+    match up {
+        Upload::Ready => 0,
+        Upload::Delta { dx, .. } => dx.len(),
+        Upload::State { x, .. } => x.len(),
+        Upload::GradPartial { gsum, .. } => gsum.len(),
+        Upload::XOnly { x } | Upload::ElasticPush { x } => x.len(),
+        Upload::GradStep { dx } => dx.len(),
+    }
+}
+
+/// Concatenate decoded range subframes back into a whole upload, in
+/// shard order — the inverse of `Upload::slice` over a full partition.
+fn reassemble(parts: Vec<Upload>) -> Upload {
+    let mut it = parts.into_iter();
+    let mut acc = it.next().expect("at least one shard");
+    for part in it {
+        match (&mut acc, part) {
+            (Upload::Ready, Upload::Ready) => {}
+            (Upload::Delta { dx, dgbar }, Upload::Delta { dx: a, dgbar: b }) => {
+                dx.extend_from_slice(&a);
+                dgbar.extend_from_slice(&b);
+            }
+            (Upload::State { x, gbar }, Upload::State { x: a, gbar: b }) => {
+                x.extend_from_slice(&a);
+                gbar.extend_from_slice(&b);
+            }
+            (Upload::GradPartial { gsum, n }, Upload::GradPartial { gsum: a, n: m }) => {
+                assert_eq!(*n, m, "subframes of one upload must agree on n");
+                gsum.extend_from_slice(&a);
+            }
+            (Upload::XOnly { x }, Upload::XOnly { x: a })
+            | (Upload::ElasticPush { x }, Upload::ElasticPush { x: a }) => {
+                x.extend_from_slice(&a)
+            }
+            (Upload::GradStep { dx }, Upload::GradStep { dx: a }) => dx.extend_from_slice(&a),
+            (acc, part) => panic!("variant drifted across shards: {} vs {}", acc.kind(), part.kind()),
+        }
+    }
+    acc
+}
+
+/// The tentpole codec invariant: slicing an upload into S range
+/// subframes, shipping each through its own encode/decode, and
+/// concatenating the results reproduces the unsliced payload
+/// bit-for-bit — for every wire format, every payload kind, and both
+/// dense and sparse layouts. Each subframe's `bytes()` is exactly its
+/// frame length, so per-server byte ledgers stay honest.
+#[test]
+fn range_subframes_reassemble_bit_for_bit() {
+    forall(
+        "slice -> wire -> reassemble == whole at every wire format",
+        |r| (gen_upload(r), gen_usize(r, 1..5)),
+        |(up, servers)| {
+            for wire in WireFormat::ALL {
+                let grid = quantize_upload(up, wire);
+                let d = upload_dim(&grid);
+                let mut parts = Vec::with_capacity(*servers);
+                for k in 0..*servers {
+                    let (lo, hi) = shard_range(d, *servers, k);
+                    let sub = grid.slice(lo, hi);
+                    let frame = codec::encode_upload(&sub, wire);
+                    ensure(
+                        frame.len() as u64 == sub.bytes(wire),
+                        format!(
+                            "{wire} shard {k}/{servers}: bytes()={} but frame is {}",
+                            sub.bytes(wire),
+                            frame.len()
+                        ),
+                    )?;
+                    // decode at the *range* bound, exactly as the shard server does
+                    match codec::decode_bounded(&frame, (hi - lo) as u32) {
+                        Ok(WireMsg::Upload(back)) => {
+                            ensure(back == sub, format!("{wire} shard {k}: subframe drifted"))?;
+                            parts.push(back);
+                        }
+                        other => return Err(format!("{wire} shard {k}: decode gave {other:?}")),
+                    }
+                }
+                ensure(
+                    reassemble(parts) == grid,
+                    format!("{wire}: reassembly differs from the unsliced upload"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A subframe whose rebased sparse index lands outside its declared
+/// range decodes to a [`CodecError`] on every sparse layout — never a
+/// panic, never a silent out-of-range apply on the server.
+#[test]
+fn subframe_index_outside_declared_range_rejected() {
+    let range_len = 4u32;
+    // f32 sparse (mode 1): nnz=1, idx == range_len (one past the end)
+    let mut body = vec![4u8, 1];
+    body.extend_from_slice(&range_len.to_le_bytes());
+    body.extend_from_slice(&1u32.to_le_bytes());
+    body.extend_from_slice(&range_len.to_le_bytes());
+    body.extend_from_slice(&1.0f32.to_le_bytes());
+    assert_eq!(
+        codec::decode_bounded(&frame(&body), range_len),
+        Err(CodecError::IndexInvalid { idx: range_len, d: range_len })
+    );
+    // f16 sparse (mode 3)
+    let mut body = vec![4u8, 3];
+    body.extend_from_slice(&range_len.to_le_bytes());
+    body.extend_from_slice(&1u32.to_le_bytes());
+    body.extend_from_slice(&range_len.to_le_bytes());
+    body.extend_from_slice(&[0u8; 2]);
+    assert_eq!(
+        codec::decode_bounded(&frame(&body), range_len),
+        Err(CodecError::IndexInvalid { idx: range_len, d: range_len })
+    );
+    // int8 sparse (mode 5)
+    let mut body = vec![4u8, 5];
+    body.extend_from_slice(&range_len.to_le_bytes());
+    body.extend_from_slice(&1.0f32.to_le_bytes());
+    body.extend_from_slice(&1u32.to_le_bytes());
+    body.extend_from_slice(&range_len.to_le_bytes());
+    body.push(1);
+    assert_eq!(
+        codec::decode_bounded(&frame(&body), range_len),
+        Err(CodecError::IndexInvalid { idx: range_len, d: range_len })
+    );
+}
+
+/// A subframe sized for the wrong shard — its declared dimension larger
+/// than the range this server owns — is rejected at the session bound
+/// before any allocation or apply.
+#[test]
+fn subframe_dim_beyond_declared_range_rejected() {
+    let d = 11usize;
+    let (lo, hi) = shard_range(d, 2, 0); // [0, 6): the *larger* half
+    let whole = Upload::XOnly { x: (0..d).map(|i| i as f32).collect() };
+    let sub = whole.slice(lo, hi);
+    let f = codec::encode_upload(&sub, WireFormat::F32);
+    // the right server accepts it...
+    assert!(codec::decode_bounded(&f, (hi - lo) as u32).is_ok());
+    // ...the shard that owns the smaller range [6, 11) must not
+    let (lo1, hi1) = shard_range(d, 2, 1);
+    assert!(hi1 - lo1 < hi - lo, "test geometry: shard 1 strictly smaller");
+    assert_eq!(
+        codec::decode_bounded(&f, (hi1 - lo1) as u32),
+        Err(CodecError::DimTooLarge { d: (hi - lo) as u32 })
+    );
 }
 
 // ---------------------------------------------------------------------------

@@ -147,6 +147,49 @@ fn kitchen_sink_stays_bit_identical_at_quantized_wire_formats() {
     }
 }
 
+/// The kitchen sink on a *sharded* parameter plane: S=2 apply streams,
+/// hostile latency + delays + a staleness bound (churn is a
+/// single-plane-only feature, so deaths/rejoins stay off). The
+/// per-shard event interleave must be a pure function of (spec, seed):
+/// bit-identical at every compute fan-out width.
+#[test]
+fn sharded_kitchen_sink_is_bit_identical_across_thread_widths() {
+    let spec = ScenarioSpec {
+        name: "sharded-kitchen-sink".into(),
+        seed_salt: 3,
+        default_latency: Some(LatencyDist::Uniform { lo: 1e-5, hi: 4e-4 }),
+        worker_latency: [(2usize, LatencyDist::Pareto { scale: 2e-4, alpha: 1.2 })]
+            .into_iter()
+            .collect(),
+        delay_prob: 0.3,
+        delay: Some(LatencyDist::Uniform { lo: 1e-4, hi: 2e-3 }),
+        staleness_tau: Some(6),
+        deaths: vec![],
+        rejoins: vec![],
+    };
+    spec.validate(Algorithm::CentralVrAsync, P).unwrap();
+    let data = data();
+    let mut c = cfg(Algorithm::CentralVrAsync);
+    c.servers = 2;
+    let run = |threads: usize| {
+        simulator::run_with_scenario(
+            Problem::Ridge,
+            &data,
+            c,
+            SimParams::analytic(D).with_threads(threads),
+            Some(&spec),
+        )
+    };
+    let serial = run(1);
+    let s = serial.scenario.as_ref().unwrap();
+    assert!(s.delayed > 0, "{s:?}");
+    assert!(s.extra_latency_s > 0.0, "{s:?}");
+    for threads in [3usize, 8] {
+        let wide = run(threads);
+        assert_identical(&serial, &wide, &format!("S=2 threads={threads}"));
+    }
+}
+
 #[test]
 fn staleness_scenario_is_bit_identical_for_ps_svrg() {
     // PS-SVRG mixes barrier phases with an async GradStep stream; only

@@ -1,0 +1,249 @@
+//! The shard-parity wall: the sharded parameter plane must be
+//! invisible to the math. For S ∈ {1, 2, 4} × {CVR-Sync, CVR-Async,
+//! PS-SVRG} × {dense, CSR}, a real-socket run against S range servers
+//! lands within 1e-5 of the S-stream simulator oracle *and* of the
+//! single-server simulator endpoint, while every server's byte ledger
+//! (`bytes_on_wire == bytes_accounted`) closes independently — Stop
+//! and Goodbye frames included — and the union of the workers' ledgers
+//! closes against the sum of the servers'.
+//!
+//! Like the loopback suite, the wall honors
+//! `CENTRALVR_WIRE={f32,f16,int8}`: quantization happens on the *full*
+//! vector inside [`LocalNode`] before the worker slices it, and the
+//! int8 scale is a power of two derived from the full-vector max, so
+//! subframe re-encoding is bit-exact and parity survives lossy wire
+//! formats unchanged. CI re-runs the `s2_`-prefixed configuration at
+//! `CENTRALVR_WIRE=int8`.
+//!
+//! [`LocalNode`]: centralvr::dist::local::LocalNode
+
+use std::net::TcpListener;
+use std::thread;
+
+use centralvr::config::schema::Algorithm;
+use centralvr::data::shard::ShardedDataset;
+use centralvr::data::synth;
+use centralvr::dist::codec::WireFormat;
+use centralvr::dist::transport::{self, ServeConfig, ServeReport, WorkerReport};
+use centralvr::dist::DistConfig;
+use centralvr::exec::simulator::{self, SimParams};
+use centralvr::model::glm::Problem;
+use centralvr::util::math;
+
+const P: usize = 3;
+const N_PER: usize = 32;
+const D: usize = 16;
+
+fn wire_from_env() -> WireFormat {
+    match std::env::var("CENTRALVR_WIRE") {
+        Ok(v) => WireFormat::parse(&v).expect("CENTRALVR_WIRE must be f32 | f16 | int8"),
+        Err(_) => WireFormat::F32,
+    }
+}
+
+fn dense_data() -> ShardedDataset {
+    ShardedDataset::from_shards(synth::toy_least_squares_per_worker(P, N_PER, D, 21))
+}
+
+/// CSR shards, equal-sized so every worker's schedule stays in
+/// lockstep; dense enough that both dense and sparse frame layouts
+/// appear on the wire over a run.
+fn csr_data() -> ShardedDataset {
+    let sp = synth::sparse_least_squares(P * N_PER, D, 0.5, 21);
+    ShardedDataset::split(&sp, P, 1)
+}
+
+fn cfg(algorithm: Algorithm, servers: usize) -> DistConfig {
+    DistConfig {
+        algorithm,
+        p: P,
+        eta: 0.02,
+        max_rounds: 8,
+        tol: 0.0, // fixed budget: no early stop on either side
+        seed: 57,
+        record_every: P,
+        ps_batch: 8,
+        servers,
+        wire: wire_from_env(),
+        ..Default::default()
+    }
+}
+
+/// Full sharded TCP run: `cfg.servers` server threads (one listener and
+/// one coordinate range each) + P worker threads, each worker driving
+/// one connection per server. Server reports come back in shard order.
+fn tcp_run_sharded(data: &ShardedDataset, cfg: DistConfig) -> (Vec<ServeReport>, Vec<WorkerReport>) {
+    let listeners: Vec<TcpListener> = (0..cfg.servers)
+        .map(|_| TcpListener::bind("127.0.0.1:0").unwrap())
+        .collect();
+    let addrs: Vec<String> = listeners
+        .iter()
+        .map(|l| l.local_addr().unwrap().to_string())
+        .collect();
+    thread::scope(|scope| {
+        let servers: Vec<_> = listeners
+            .into_iter()
+            .enumerate()
+            .map(|(k, listener)| {
+                let scfg = ServeConfig {
+                    p: P,
+                    easgd_beta: cfg.easgd_beta,
+                    read_timeout: None,
+                    wire: cfg.wire,
+                    servers: cfg.servers,
+                    server_id: k,
+                };
+                scope.spawn(move || transport::serve(listener, scfg).unwrap())
+            })
+            .collect();
+        let workers: Vec<_> = (0..P)
+            .map(|s| {
+                let addrs = &addrs;
+                scope.spawn(move || {
+                    let refs: Vec<&str> = addrs.iter().map(String::as_str).collect();
+                    transport::run_worker_sharded(
+                        &refs,
+                        s,
+                        Problem::Ridge,
+                        data.shard(s),
+                        data.n_total(),
+                        cfg,
+                    )
+                    .unwrap()
+                })
+            })
+            .collect();
+        let wreps = workers.into_iter().map(|h| h.join().unwrap()).collect();
+        let sreps = servers.into_iter().map(|h| h.join().unwrap()).collect();
+        (sreps, wreps)
+    })
+}
+
+/// Concatenate the servers' final iterates in shard order.
+fn assemble_x(sreps: &[ServeReport]) -> Vec<f32> {
+    sreps.iter().flat_map(|r| r.x.iter().copied()).collect()
+}
+
+/// One cell of the wall: a sharded TCP run at every S must agree with
+/// the S-stream simulator on the same config, with the single-server
+/// simulator oracle, and keep every ledger closed.
+fn shard_parity_wall(data: &ShardedDataset, algorithm: Algorithm, what: &str) {
+    let oracle = {
+        let c1 = cfg(algorithm, 1);
+        simulator::run(Problem::Ridge, data, c1, SimParams::analytic(D))
+    };
+    for servers in [1usize, 2, 4] {
+        let c = cfg(algorithm, servers);
+        let (sreps, wreps) = tcp_run_sharded(data, c);
+        assert_eq!(sreps.len(), servers);
+        // every server's byte books close on their own — no shard can
+        // borrow accounting from a sibling
+        for (k, rep) in sreps.iter().enumerate() {
+            assert_eq!(
+                rep.bytes_on_wire, rep.bytes_accounted,
+                "{what} {algorithm:?} S={servers} shard {k}: books drifted"
+            );
+            assert_eq!(rep.crashes, 0, "{what} {algorithm:?} S={servers} shard {k}");
+            assert_eq!(rep.goodbyes, P as u64, "{what} {algorithm:?} S={servers} shard {k}");
+        }
+        // the union of the worker ledgers closes against the sum of the
+        // servers' (handshakes + payload + any Stop frames)
+        let client_total: u64 = wreps.iter().map(|w| w.bytes_sent + w.bytes_received).sum();
+        let server_total: u64 =
+            sreps.iter().map(|r| r.bytes_on_wire + r.bytes_handshake).sum();
+        assert_eq!(
+            client_total, server_total,
+            "{what} {algorithm:?} S={servers}: worker ledgers drifted from the servers'"
+        );
+        assert!(
+            wreps.iter().all(|w| w.rounds == c.max_rounds),
+            "{what} {algorithm:?} S={servers}: some worker cut its budget short"
+        );
+        let x = assemble_x(&sreps);
+        assert_eq!(x.len(), D, "{what} {algorithm:?} S={servers}: ranges do not cover d");
+        // the S-stream simulator on the same knobs is the direct oracle
+        let sim = simulator::run(Problem::Ridge, data, c, SimParams::analytic(D));
+        let dx = math::max_abs_diff(&x, &sim.trace.x);
+        assert!(
+            dx <= 1e-5,
+            "{what} {algorithm:?} S={servers}: TCP vs S-stream simulator drifted {dx}"
+        );
+        // and sharding must not move the math at all: the single-server
+        // simulator endpoint is the same point
+        let dx1 = math::max_abs_diff(&x, &oracle.trace.x);
+        assert!(
+            dx1 <= 1e-5,
+            "{what} {algorithm:?} S={servers}: drifted {dx1} from the S=1 oracle"
+        );
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn cvr_sync_dense_shard_parity() {
+    shard_parity_wall(&dense_data(), Algorithm::CentralVrSync, "dense");
+}
+
+#[test]
+fn cvr_sync_csr_shard_parity() {
+    shard_parity_wall(&csr_data(), Algorithm::CentralVrSync, "csr");
+}
+
+#[test]
+fn cvr_async_dense_shard_parity() {
+    shard_parity_wall(&dense_data(), Algorithm::CentralVrAsync, "dense");
+}
+
+#[test]
+fn cvr_async_csr_shard_parity() {
+    shard_parity_wall(&csr_data(), Algorithm::CentralVrAsync, "csr");
+}
+
+#[test]
+fn ps_svrg_dense_shard_parity() {
+    shard_parity_wall(&dense_data(), Algorithm::PsSvrg, "dense");
+}
+
+#[test]
+fn ps_svrg_csr_shard_parity() {
+    shard_parity_wall(&csr_data(), Algorithm::PsSvrg, "csr");
+}
+
+/// The configuration CI re-runs at `CENTRALVR_WIRE=int8`: one S=2
+/// CVR-Sync run, full ledger + oracle checks. Kept as its own test so
+/// the rerun filter (`s2_`) stays cheap.
+#[test]
+fn s2_cvr_sync_sharded_parity_at_env_wire() {
+    let data = dense_data();
+    let c = cfg(Algorithm::CentralVrSync, 2);
+    let (sreps, wreps) = tcp_run_sharded(&data, c);
+    for (k, rep) in sreps.iter().enumerate() {
+        assert_eq!(rep.bytes_on_wire, rep.bytes_accounted, "shard {k}: books drifted");
+    }
+    let client_total: u64 = wreps.iter().map(|w| w.bytes_sent + w.bytes_received).sum();
+    let server_total: u64 = sreps.iter().map(|r| r.bytes_on_wire + r.bytes_handshake).sum();
+    assert_eq!(client_total, server_total);
+    let x = assemble_x(&sreps);
+    let sim = simulator::run(Problem::Ridge, &data, c, SimParams::analytic(D));
+    let dx = math::max_abs_diff(&x, &sim.trace.x);
+    assert!(dx <= 1e-5, "S=2 TCP vs simulator at env wire drifted {dx}");
+}
+
+/// Workers must hand `run_worker_sharded` exactly one address per
+/// shard; a topology/address-count mismatch is an immediate error, not
+/// a run against the wrong partition.
+#[test]
+fn worker_rejects_wrong_address_count() {
+    let data = dense_data();
+    let c = cfg(Algorithm::CentralVrSync, 2);
+    let err = transport::run_worker_sharded(
+        &["127.0.0.1:1"],
+        0,
+        Problem::Ridge,
+        data.shard(0),
+        data.n_total(),
+        c,
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("--servers 2"), "{err}");
+}

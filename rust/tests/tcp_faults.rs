@@ -81,13 +81,7 @@ fn helper_worker_process() {
             let shard = data.shard(s);
             let mut machine =
                 RoundMachine::new(LocalNode::new(s, shard, Problem::Ridge, c, data.n_total()));
-            let hello = Hello {
-                s: s as u32,
-                p: c.p as u32,
-                n_s: shard.n() as u64,
-                d: D as u32,
-                wire: c.wire,
-            };
+            let hello = Hello::single(s as u32, c.p as u32, shard.n() as u64, D as u32, c.wire);
             let mut client = TcpClient::connect(&addr, hello).expect("killer connect");
             while let Some(out) = machine.compute() {
                 match client.exchange(&out.upload).expect("killer exchange") {
@@ -128,6 +122,8 @@ fn kill_mid_run_winds_down_with_stop_goodbye_and_closed_books() {
         // backstop only: EOF from the dead process arrives long before
         read_timeout: Some(Duration::from_secs(60)),
         wire: cfg().wire,
+        servers: 1,
+        server_id: 0,
     };
     let server = thread::spawn(move || transport::serve(listener, scfg).unwrap());
     let children: Vec<_> = (0..P)
@@ -168,7 +164,14 @@ fn workers_reconnect_when_the_server_binds_late() {
             scope.spawn(move || {
                 thread::sleep(Duration::from_millis(250));
                 let listener = TcpListener::bind(&addr).expect("rebind reserved port");
-                let scfg = ServeConfig { p: P, easgd_beta: 0.9, read_timeout: None, wire: c.wire };
+                let scfg = ServeConfig {
+                    p: P,
+                    easgd_beta: 0.9,
+                    read_timeout: None,
+                    wire: c.wire,
+                    servers: 1,
+                    server_id: 0,
+                };
                 transport::serve(listener, scfg).unwrap()
             })
         };
@@ -211,7 +214,7 @@ fn connect_with_retry_gives_up_after_its_attempts() {
         base_delay: Duration::from_millis(5),
         max_delay: Duration::from_millis(10),
     };
-    let hello = Hello { s: 0, p: 1, n_s: 1, d: 1, wire: centralvr::dist::codec::WireFormat::F32 };
+    let hello = Hello::single(0, 1, 1, 1, centralvr::dist::codec::WireFormat::F32);
     let err = transport::connect_with_retry(&addr, hello, policy).unwrap_err();
     assert!(err.to_string().contains("3 connect attempts"), "{err}");
 }

@@ -68,6 +68,8 @@ fn tcp_run(data: &ShardedDataset, cfg: DistConfig) -> (ServeReport, Vec<WorkerRe
         easgd_beta: cfg.easgd_beta,
         read_timeout: None,
         wire: cfg.wire,
+        servers: 1,
+        server_id: 0,
     };
     thread::scope(|scope| {
         let server = scope.spawn(move || transport::serve(listener, scfg).unwrap());
@@ -354,9 +356,16 @@ fn serve_rejects_mismatched_worker_count() {
     use centralvr::dist::codec::Hello;
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
-    let scfg = ServeConfig { p: 2, easgd_beta: 0.9, read_timeout: None, wire: WireFormat::F32 };
+    let scfg = ServeConfig {
+        p: 2,
+        easgd_beta: 0.9,
+        read_timeout: None,
+        wire: WireFormat::F32,
+        servers: 1,
+        server_id: 0,
+    };
     let server = thread::spawn(move || transport::serve(listener, scfg));
-    let hello = Hello { s: 0, p: 4, n_s: 10, d: 3, wire: WireFormat::F32 };
+    let hello = Hello::single(0, 4, 10, 3, WireFormat::F32);
     let _client = transport::TcpClient::connect(&addr, hello).unwrap();
     let err = server.join().unwrap().unwrap_err();
     assert!(err.to_string().contains("sharded for p=4"), "{err}");
@@ -369,15 +378,83 @@ fn serve_rejects_mismatched_wire_format() {
     use centralvr::dist::codec::Hello;
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
-    let scfg = ServeConfig { p: 2, easgd_beta: 0.9, read_timeout: None, wire: WireFormat::F32 };
+    let scfg = ServeConfig {
+        p: 2,
+        easgd_beta: 0.9,
+        read_timeout: None,
+        wire: WireFormat::F32,
+        servers: 1,
+        server_id: 0,
+    };
     let server = thread::spawn(move || transport::serve(listener, scfg));
-    let hello = Hello { s: 0, p: 2, n_s: 10, d: 3, wire: WireFormat::I8 };
+    let hello = Hello::single(0, 2, 10, 3, WireFormat::I8);
     let _client = transport::TcpClient::connect(&addr, hello).unwrap();
     let err = server.join().unwrap().unwrap_err();
     assert!(
         err.to_string().contains("encodes uploads as int8"),
         "{err}"
     );
+}
+
+/// A worker that addressed a different parameter-plane shard — or the
+/// right shard with the wrong coordinate range — must be rejected at
+/// the handshake, not have its subframes applied to the wrong range.
+#[test]
+fn serve_rejects_mismatched_shard_topology() {
+    use centralvr::dist::codec::Hello;
+    // wrong shard id: worker thinks this server is shard 0 of 2
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let scfg = ServeConfig {
+        p: 2,
+        easgd_beta: 0.9,
+        read_timeout: None,
+        wire: WireFormat::F32,
+        servers: 2,
+        server_id: 1,
+    };
+    let server = thread::spawn(move || transport::serve(listener, scfg));
+    let hello = Hello {
+        s: 0,
+        p: 2,
+        n_s: 10,
+        d: 8,
+        servers: 2,
+        server_id: 0,
+        range_lo: 0,
+        range_hi: 4,
+        wire: WireFormat::F32,
+    };
+    let _client = transport::TcpClient::connect(&addr, hello).unwrap();
+    let err = server.join().unwrap().unwrap_err();
+    assert!(err.to_string().contains("addressed shard 0/2"), "{err}");
+
+    // right shard id, wrong range bounds
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let scfg = ServeConfig {
+        p: 2,
+        easgd_beta: 0.9,
+        read_timeout: None,
+        wire: WireFormat::F32,
+        servers: 2,
+        server_id: 1,
+    };
+    let server = thread::spawn(move || transport::serve(listener, scfg));
+    let hello = Hello {
+        s: 0,
+        p: 2,
+        n_s: 10,
+        d: 8,
+        servers: 2,
+        server_id: 1,
+        range_lo: 3,
+        range_hi: 8,
+        wire: WireFormat::F32,
+    };
+    let _client = transport::TcpClient::connect(&addr, hello).unwrap();
+    let err = server.join().unwrap().unwrap_err();
+    assert!(err.to_string().contains("declares range [3, 8)"), "{err}");
 }
 
 /// PS-SVRG on *uneven* shards desyncs the barrier schedule: each worker's
@@ -401,7 +478,14 @@ fn ps_svrg_uneven_shards_shuts_down_via_server_stop() {
     c.max_rounds = 13;
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
-    let scfg = ServeConfig { p, easgd_beta: c.easgd_beta, read_timeout: None, wire: c.wire };
+    let scfg = ServeConfig {
+        p,
+        easgd_beta: c.easgd_beta,
+        read_timeout: None,
+        wire: c.wire,
+        servers: 1,
+        server_id: 0,
+    };
     let (rep, wreps) = thread::scope(|scope| {
         let server = scope.spawn(move || transport::serve(listener, scfg).unwrap());
         let workers: Vec<_> = (0..p)

@@ -17,6 +17,8 @@ Two severities, chosen by what the number is:
     codec change, not runner noise, so the script prints FAIL and exits
     1. A missing artifact for a bench whose baseline carries an "exact"
     block also fails: CI runs that section, so absence means breakage.
+    The same goes for any bench named explicitly on the command line —
+    asking for it and getting nothing is a failure, not a skip.
   * TIME quantities (t_epoch_s, t_serial_s, t_parallel_s) are noisy on
     shared runners: ratios above TIME_RATIO_WARN print WARN but never
     fail the build.
@@ -157,6 +159,9 @@ def main() -> int:
         print(f"usage: {sys.argv[0]} <results_dir> <baselines_dir> [bench ...]")
         return 2
     results_dir, baselines_dir = sys.argv[1], sys.argv[2]
+    # A bench named explicitly on the command line was asked for: its
+    # absence is breakage, never something to skip past.
+    explicit = bool(sys.argv[3:])
     benches = sys.argv[3:] or BENCHES
 
     failures = 0
@@ -173,6 +178,12 @@ def main() -> int:
                 print(
                     f"bench_diff: FAIL {name}: baseline carries exact quantities but "
                     f"no current artifact exists — did the bench section run?"
+                )
+                failures += 1
+            elif explicit:
+                print(
+                    f"bench_diff: FAIL {name}: requested on the command line but "
+                    f"produced no current artifact — did the bench section run?"
                 )
                 failures += 1
             else:
