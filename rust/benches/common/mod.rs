@@ -2,8 +2,153 @@
 //! warmed-up repeated measurement with robust summaries, printed in a
 //! criterion-like format so `cargo bench | tee bench_output.txt` reads
 //! naturally.
+//!
+//! Two tiers:
+//!
+//! * [`Bench::case`] — the original quick path: `warmup` unrecorded +
+//!   `samples` recorded runs, median headline.
+//! * [`Bench::run_case`] — the full harness: a reproducibility
+//!   pre-check (two untimed invocations must return bit-identical
+//!   fingerprints, or every number the case would print is noise), an
+//!   explicit warmup phase, then a measure phase where every invocation
+//!   is wrapped by a set of [`Probe`]s — wall time always, plus any
+//!   counter deltas the caller attaches. The headline statistic is the
+//!   **minimum** over measured runs: for a deterministic workload the
+//!   min is the least-interference estimate, and it is the number the
+//!   committed baselines pin.
 
-use centralvr::util::timer::{fmt_secs, measure, Summary};
+// Each bench binary compiles this module separately and uses a
+// different subset of the API.
+#![allow(dead_code)]
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use centralvr::metrics::counters::Counters;
+use centralvr::util::timer::{black_box, fmt_secs, measure, Summary};
+
+/// One observation source wrapped around every measured invocation.
+/// `begin` runs immediately before the case closure, `end` immediately
+/// after and returns the value observed for that invocation.
+pub trait Probe {
+    fn name(&self) -> String;
+    fn unit(&self) -> &'static str;
+    fn begin(&mut self);
+    fn end(&mut self) -> f64;
+}
+
+/// Wall-clock seconds per invocation (the probe every case gets).
+#[derive(Default)]
+pub struct WallClock {
+    t0: Option<Instant>,
+}
+
+impl WallClock {
+    pub fn new() -> WallClock {
+        WallClock { t0: None }
+    }
+}
+
+impl Probe for WallClock {
+    fn name(&self) -> String {
+        "wall_s".into()
+    }
+    fn unit(&self) -> &'static str {
+        "s"
+    }
+    fn begin(&mut self) {
+        self.t0 = Some(Instant::now());
+    }
+    fn end(&mut self) -> f64 {
+        self.t0.take().expect("end without begin").elapsed().as_secs_f64()
+    }
+}
+
+/// Which [`Counters`] field a [`CounterDelta`] probe observes.
+#[derive(Clone, Copy)]
+pub enum CounterField {
+    GradEvals,
+    Iterations,
+    BytesCommunicated,
+}
+
+/// Per-invocation delta of one shared cost counter. The case closure
+/// (acting as the driver) charges the counters; the probe reads what the
+/// code under measurement actually reported — so counts land in the
+/// bench artifact measured, not transcribed.
+pub struct CounterDelta {
+    field: CounterField,
+    counters: Arc<Counters>,
+    base: u64,
+}
+
+impl CounterDelta {
+    pub fn new(field: CounterField, counters: Arc<Counters>) -> CounterDelta {
+        CounterDelta {
+            field,
+            counters,
+            base: 0,
+        }
+    }
+
+    fn read(&self) -> u64 {
+        let s = self.counters.snapshot();
+        match self.field {
+            CounterField::GradEvals => s.grad_evals,
+            CounterField::Iterations => s.iterations,
+            CounterField::BytesCommunicated => s.bytes_communicated,
+        }
+    }
+}
+
+impl Probe for CounterDelta {
+    fn name(&self) -> String {
+        match self.field {
+            CounterField::GradEvals => "grad_evals".into(),
+            CounterField::Iterations => "updates".into(),
+            CounterField::BytesCommunicated => "bytes".into(),
+        }
+    }
+    fn unit(&self) -> &'static str {
+        match self.field {
+            CounterField::GradEvals => "evals",
+            CounterField::Iterations => "updates",
+            CounterField::BytesCommunicated => "bytes",
+        }
+    }
+    fn begin(&mut self) {
+        self.base = self.read();
+    }
+    fn end(&mut self) -> f64 {
+        (self.read() - self.base) as f64
+    }
+}
+
+/// Explicit warmup/measure schedule for [`Bench::run_case`].
+#[derive(Clone, Copy)]
+pub struct Phases {
+    pub warmup: usize,
+    pub samples: usize,
+}
+
+impl Phases {
+    pub fn new(warmup: usize, samples: usize) -> Phases {
+        assert!(samples > 0, "a case needs at least one measured run");
+        Phases { warmup, samples }
+    }
+}
+
+/// Result of one [`Bench::run_case`]: the wall-clock summary (headline:
+/// `min_s`) plus one constant observation per attached probe.
+pub struct CaseRun {
+    pub wall: Summary,
+    pub min_s: f64,
+    /// (name, per-invocation value, unit) for each attached probe, in
+    /// attachment order. Values are asserted constant across measured
+    /// invocations — a deterministic case charges identical counts
+    /// every time, or the case (not the runner) is broken.
+    pub observations: Vec<(String, f64, &'static str)>,
+}
 
 pub struct Bench {
     group: &'static str,
@@ -16,7 +161,13 @@ impl Bench {
     }
 
     /// Measure a closure: `warmup` unrecorded + `samples` recorded runs.
-    pub fn case<T>(&self, name: &str, warmup: usize, samples: usize, f: impl FnMut() -> T) -> Summary {
+    pub fn case<T>(
+        &self,
+        name: &str,
+        warmup: usize,
+        samples: usize,
+        f: impl FnMut() -> T,
+    ) -> Summary {
         let s = measure(warmup, samples, f);
         println!(
             "{}/{name}: median {} (p10 {}, p90 {}, n={})",
@@ -27,6 +178,73 @@ impl Bench {
             s.samples
         );
         s
+    }
+
+    /// Full harness run: reproducibility pre-check, warmup phase, then
+    /// `phases.samples` measured invocations each wrapped by every probe.
+    /// The closure must return a fingerprint of its result (e.g. the
+    /// first iterate's bit pattern) and must be invocation-idempotent —
+    /// same fingerprint every call — or the pre-check panics.
+    pub fn run_case(
+        &self,
+        name: &str,
+        phases: Phases,
+        probes: &mut [&mut dyn Probe],
+        mut f: impl FnMut() -> u64,
+    ) -> CaseRun {
+        // Pre-bench sanity: a case whose result changes between
+        // invocations is accumulating state, and every timing it would
+        // print is a measurement of nothing.
+        let fp1 = f();
+        let fp2 = f();
+        assert_eq!(
+            fp1, fp2,
+            "{}/{name}: non-reproducible case (fingerprint {fp1:#018x} vs {fp2:#018x})",
+            self.group
+        );
+        for _ in 0..phases.warmup {
+            black_box(f());
+        }
+        let mut wall = WallClock::new();
+        let mut wall_samples = Vec::with_capacity(phases.samples);
+        let mut probe_samples: Vec<Vec<f64>> = vec![Vec::new(); probes.len()];
+        for _ in 0..phases.samples {
+            for p in probes.iter_mut() {
+                p.begin();
+            }
+            wall.begin();
+            black_box(f());
+            wall_samples.push(wall.end());
+            for (vals, p) in probe_samples.iter_mut().zip(probes.iter_mut()) {
+                vals.push(p.end());
+            }
+        }
+        let s = Summary::from_samples(wall_samples);
+        println!(
+            "{}/{name}: min {} (median {}, p90 {}, n={})",
+            self.group,
+            fmt_secs(s.min),
+            fmt_secs(s.median),
+            fmt_secs(s.p90),
+            s.samples
+        );
+        let mut observations = Vec::with_capacity(probes.len());
+        for (vals, p) in probe_samples.iter().zip(probes.iter()) {
+            let v0 = vals[0];
+            assert!(
+                vals.iter().all(|&v| v == v0),
+                "{}/{name}: probe {} drifted across invocations: {vals:?}",
+                self.group,
+                p.name()
+            );
+            println!("{}/{name}.{}: {v0} {}", self.group, p.name(), p.unit());
+            observations.push((p.name(), v0, p.unit()));
+        }
+        CaseRun {
+            min_s: s.min,
+            wall: s,
+            observations,
+        }
     }
 
     /// Report a derived throughput metric alongside a case.

@@ -1,7 +1,11 @@
 //! Bench: micro/hot-path measurements feeding EXPERIMENTS.md §Perf —
 //! per-gradient native cost across dimensions, fused vr_step vs a naive
 //! 3-pass update, whole native epochs, lazy vs eager vs dense sparse
-//! epochs (writes `results/BENCH_sparse_steps.json`), HLO-engine epochs
+//! epochs (writes `results/BENCH_sparse_steps.json`), mini-batched
+//! round throughput at B = 1/8/32/64 on both storage layouts through
+//! the real `RoundMachine` driver (writes
+//! `results/BENCH_batched_steps.json`; its "exact" block pins the
+//! measured gradient/update budget split), HLO-engine epochs
 //! (dispatch overhead of the AOT path), simulator event throughput,
 //! server apply latency, parallel-simulator wall-clock scaling (writes
 //! `results/BENCH_parallel_sim.json`), exact quantized-payload frame
@@ -274,6 +278,7 @@ fn main() {
         let json = format!(
             "{{\n  \"bench\": \"sparse_steps\",\n  \"workload\": \
              \"centralvr n={n} d={d} density=0.01 eta=1e-3 lam=1e-4\",\n  \
+             \"seeded\": true,\n  \
              \"runs\": [\n    \
              {{\"case\": \"lazy_csr\", \"t_epoch_s\": {:.6}}},\n    \
              {{\"case\": \"eager_csr\", \"t_epoch_s\": {:.6}}},\n    \
@@ -292,6 +297,123 @@ fn main() {
             println!("hot_paths/sparse_steps: could not write {path}: {e}");
         } else {
             println!("hot_paths/sparse_steps: wrote {path}");
+        }
+        print!("{json}");
+    }
+
+    // --- mini-batched round throughput (ISSUE 10 tentpole) ---
+    // B = 1/8/32/64 on both storage layouts at the acceptance workload
+    // (n=50k, d=5k, 1% density), driven through the REAL round path: a
+    // fresh p=1 CVR-Sync `RoundMachine` per invocation runs its init
+    // epoch plus one VR epoch against a `ServerState`, and the closure
+    // charges the shared `Counters` from each `RoundOutput` — so the
+    // gradient/update budget split in the artifact's "exact" block is
+    // measured through `updates_for`, not transcribed, and
+    // tools/bench_diff.py hard-fails CI if it ever drifts from the
+    // committed baseline. Uses the full `run_case` harness:
+    // reproducibility pre-check, explicit warmup/measure phases,
+    // min-of-k headline.
+    if enabled("batched_steps") {
+        use std::sync::Arc;
+
+        use centralvr::dist::local::{LocalNode, RoundMachine};
+        use centralvr::metrics::counters::Counters;
+        use common::{CounterDelta, CounterField, Phases};
+
+        let (n, d) = (50_000usize, 5_000usize);
+        let sp = synth::sparse_classification(n, d, 0.01, 17);
+        let dn = sp.to_dense(); // ~1 GB twin, dropped at section end
+        // (case, min_s, grad_evals, updates) per configuration
+        let mut results: Vec<(String, f64, u64, u64)> = Vec::new();
+        for (layout, ds) in [("csr", &sp), ("dense", &dn)] {
+            for batch in [1usize, 8, 32, 64] {
+                let cfg = DistConfig {
+                    algorithm: Algorithm::CentralVrSync,
+                    p: 1,
+                    eta: 1e-3,
+                    max_rounds: 2, // init epoch + one VR epoch = 2n grads
+                    tol: 0.0,
+                    batch,
+                    ..Default::default()
+                };
+                let counters = Counters::new();
+                let mut evals =
+                    CounterDelta::new(CounterField::GradEvals, Arc::clone(&counters));
+                let mut iters =
+                    CounterDelta::new(CounterField::Iterations, Arc::clone(&counters));
+                let case = format!("{layout}_b{batch}");
+                let run = b.run_case(
+                    &case,
+                    Phases::new(1, 3),
+                    &mut [&mut evals, &mut iters],
+                    || {
+                        let node = LocalNode::new(0, ds, Problem::Logistic, cfg, n);
+                        let mut m = RoundMachine::new(node);
+                        let mut server = ServerState::new(d, 1, cfg.easgd_beta);
+                        while let Some(out) = m.compute() {
+                            counters.add_grad_evals(out.evals);
+                            counters.add_iterations(out.iters);
+                            server.apply_barrier_round(&[out.upload], &[1.0]).unwrap();
+                            m.absorb(server.view());
+                        }
+                        m.node().x()[0].to_bits() as u64
+                    },
+                );
+                let grads = run.observations[0].1 as u64;
+                let updates = run.observations[1].1 as u64;
+                b.metric(
+                    &format!("batched_ns_per_grad_{case}"),
+                    run.min_s * 1e9 / grads as f64,
+                    "ns/grad",
+                );
+                results.push((case, run.min_s, grads, updates));
+            }
+        }
+        drop(dn);
+
+        let time_of = |k: &str| results.iter().find(|r| r.0 == k).unwrap().1;
+        let speedup_csr = time_of("csr_b1") / time_of("csr_b32");
+        let speedup_dense = time_of("dense_b1") / time_of("dense_b32");
+        b.metric("batched_speedup_csr_b32", speedup_csr, "x");
+        b.metric("batched_speedup_dense_b32", speedup_dense, "x");
+
+        let exact: Vec<String> = results
+            .iter()
+            .flat_map(|(case, _, grads, updates)| {
+                [
+                    format!("    \"{case}_grad_evals\": {grads}"),
+                    format!("    \"{case}_updates\": {updates}"),
+                ]
+            })
+            .collect();
+        let runs: Vec<String> = results
+            .iter()
+            .map(|(case, min_s, grads, _)| {
+                format!(
+                    "    {{\"case\": \"{case}\", \"t_rounds_s\": {min_s:.6}, \
+                     \"ns_per_grad\": {:.1}}}",
+                    min_s * 1e9 / *grads as f64
+                )
+            })
+            .collect();
+        let json = format!(
+            "{{\n  \"bench\": \"batched_steps\",\n  \"workload\": \
+             \"cvr-sync p=1 init+vr rounds, n={n} d={d} density=0.01 eta=1e-3\",\n  \
+             \"seeded\": true,\n  \"exact\": {{\n{}\n  }},\n  \"runs\": [\n{}\n  ],\n  \
+             \"metrics\": {{\n    \
+             \"batched_speedup_csr_b32\": {speedup_csr:.3},\n    \
+             \"batched_speedup_dense_b32\": {speedup_dense:.3}\n  }}\n}}\n",
+            exact.join(",\n"),
+            runs.join(",\n")
+        );
+        let out_dir = concat!(env!("CARGO_MANIFEST_DIR"), "/../results");
+        let path = format!("{out_dir}/BENCH_batched_steps.json");
+        if let Err(e) = std::fs::create_dir_all(out_dir)
+            .and_then(|()| std::fs::write(&path, &json))
+        {
+            println!("hot_paths/batched_steps: could not write {path}: {e}");
+        } else {
+            println!("hot_paths/batched_steps: wrote {path}");
         }
         print!("{json}");
     }
@@ -451,7 +573,7 @@ fn main() {
         };
         let json = format!(
             "{{\n  \"bench\": \"parallel_sim\",\n  \"workload\": \
-             \"cvr-sync n_per={n_per} d={d} rounds={rounds}\",\n  \
+             \"cvr-sync n_per={n_per} d={d} rounds={rounds}\",\n  \"seeded\": true,\n  \
              \"host_cores\": {cores},\n  \"note\": \"{note}\",\n  \"runs\": [\n{}\n  ]\n}}\n",
             entries.join(",\n")
         );
@@ -536,7 +658,8 @@ fn main() {
             .collect();
         let json = format!(
             "{{\n  \"bench\": \"wire_bytes\",\n  \"workload\": \
-             \"payload frames at d={d}, sparse nnz={nnz}\",\n  \"exact\": {{\n{}\n  }},\n  \
+             \"payload frames at d={d}, sparse nnz={nnz}\",\n  \"seeded\": true,\n  \
+             \"exact\": {{\n{}\n  }},\n  \
              \"metrics\": {{\n    \"delta_dense_f32_over_int8\": {ratio:.3}\n  }}\n}}\n",
             entries.join(",\n")
         );

@@ -51,6 +51,9 @@ common options:
   --out FILE           dist serve: write the final iterate, one f32/line
   --wire W             payload encoding f32|f16|int8 (default f32); serve
                        and workers must agree
+  --batch B            mini-batch size per step: B gradients evaluated at
+                       one iterate, averaged into one fused update
+                       (default 1 = classic per-sample path, bit for bit)
   --no-error-feedback  drop quantization error instead of carrying the
                        per-worker error-feedback residual (ablation)
 ";

@@ -67,6 +67,9 @@ pub fn build_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.get_usize("servers")? {
         cfg.servers = v;
     }
+    if let Some(v) = args.get_usize("batch")? {
+        cfg.batch = v;
+    }
     if let Some(v) = args.get_f64("eta")? {
         cfg.eta = v as f32;
     }
@@ -121,6 +124,7 @@ fn dist_config(cfg: &ExperimentConfig) -> DistConfig {
         servers: cfg.servers,
         wire: cfg.wire,
         error_feedback: cfg.error_feedback,
+        batch: cfg.batch,
     }
 }
 
@@ -535,6 +539,19 @@ mod tests {
         let mut ex = ExperimentConfig::default();
         ex.servers = 3;
         assert_eq!(dist_config(&ex).servers, 3);
+    }
+
+    #[test]
+    fn batch_flag_layers_into_config() {
+        let cfg = build_config(&parse(&["train", "--batch", "32"])).unwrap();
+        assert_eq!(cfg.batch, 32);
+        let cfg = build_config(&parse(&["train"])).unwrap();
+        assert_eq!(cfg.batch, 1);
+        assert!(build_config(&parse(&["train", "--batch", "0"])).is_err());
+        // dist_config carries the knob through to the engines
+        let mut ex = ExperimentConfig::default();
+        ex.batch = 8;
+        assert_eq!(dist_config(&ex).batch, 8);
     }
 
     #[test]

@@ -202,6 +202,11 @@ pub struct ExperimentConfig {
     /// Error-feedback residuals when `wire` is lossy; disabled by the
     /// `--no-error-feedback` ablation (TOML `error_feedback = false`).
     pub error_feedback: bool,
+    /// Mini-batch size B for the per-sample hot path (`--batch`, TOML
+    /// `batch = 32`): B gradients evaluated at a fixed iterate per
+    /// update, averaged in one fused apply. 1 (the default) is the
+    /// classic per-sample path, bit for bit.
+    pub batch: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -224,6 +229,7 @@ impl Default for ExperimentConfig {
             network: NetworkModel::default(),
             wire: crate::dist::codec::WireFormat::F32,
             error_feedback: true,
+            batch: 1,
         }
     }
 }
@@ -303,6 +309,9 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_bool("error_feedback") {
             cfg.error_feedback = v;
         }
+        if let Some(v) = doc.get_int("batch") {
+            cfg.batch = v as usize;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -329,6 +338,9 @@ impl ExperimentConfig {
         }
         if self.servers == 0 {
             bail!("servers must be >= 1");
+        }
+        if self.batch == 0 {
+            bail!("batch must be >= 1");
         }
         if self.algorithm.is_distributed() && self.p < 2 {
             bail!(
@@ -419,6 +431,15 @@ mod tests {
         let cfg = ExperimentConfig::from_toml_str("eta = 0.1").unwrap();
         assert_eq!(cfg.servers, 1);
         assert!(ExperimentConfig::from_toml_str("servers = 0").is_err());
+    }
+
+    #[test]
+    fn batch_key_parses_and_defaults_to_one() {
+        let cfg = ExperimentConfig::from_toml_str("batch = 32").unwrap();
+        assert_eq!(cfg.batch, 32);
+        let cfg = ExperimentConfig::from_toml_str("eta = 0.1").unwrap();
+        assert_eq!(cfg.batch, 1);
+        assert!(ExperimentConfig::from_toml_str("batch = 0").is_err());
     }
 
     #[test]

@@ -133,7 +133,7 @@ impl<'a> LocalNode<'a> {
             problem,
             cfg,
             n_global,
-            engine: NativeEngine::new(),
+            engine: NativeEngine::with_batch(cfg.batch),
             rng: Pcg64::new(cfg.seed).split(s as u64),
             x: vec![0.0; d],
             alpha: vec![0.0; shard.n()],
@@ -252,6 +252,14 @@ impl<'a> LocalNode<'a> {
         self.rounds_done += 1;
     }
 
+    /// Parameter updates a run over `samples` gradients performs: with
+    /// mini-batching, B gradients share one fused update, so the budget
+    /// stays in gradient evaluations while the update count shrinks to
+    /// `ceil(samples / B)` (identity at B = 1).
+    fn updates_for(&self, samples: u64) -> u64 {
+        samples.div_ceil(self.cfg.batch.max(1) as u64)
+    }
+
     // ----- lossy-wire quantization with error feedback ----------------------
 
     /// Quantize a standalone payload vector onto the wire grid, routing
@@ -362,7 +370,7 @@ impl<'a> LocalNode<'a> {
             );
         }
         let n = self.shard.n() as u64;
-        self.finish_round(n, n);
+        self.finish_round(n, self.updates_for(n));
     }
 
     // ----- CentralVR-Sync (Algorithm 2) ------------------------------------
@@ -433,7 +441,7 @@ impl<'a> LocalNode<'a> {
         );
         self.initialized = true;
         let n = self.shard.n() as u64;
-        self.finish_round(n, n);
+        self.finish_round(n, self.updates_for(n));
         let w = self.weight();
         self.sent_x.copy_from_slice(&self.x);
         for (sv, gv) in self.sent_gbar.iter_mut().zip(&self.gtilde) {
@@ -480,7 +488,7 @@ impl<'a> LocalNode<'a> {
             self.cfg.lambda,
             n_inv,
         );
-        self.finish_round(tau as u64, tau as u64);
+        self.finish_round(tau as u64, self.updates_for(tau as u64));
         let d = self.x.len();
         let mut dx = self.arena.take(d);
         for ((o, xv), sv) in dx.iter_mut().zip(&self.x).zip(&self.sent_x) {
@@ -536,7 +544,7 @@ impl<'a> LocalNode<'a> {
             self.cfg.lambda,
         );
         // two dloss evaluations per inner iteration (x and the anchor)
-        self.finish_round(2 * m as u64, m as u64);
+        self.finish_round(2 * m as u64, self.updates_for(m as u64));
         let mut xb = self.arena.take(self.x.len());
         xb.copy_from_slice(&self.x);
         Upload::XOnly { x: xb }
@@ -566,7 +574,7 @@ impl<'a> LocalNode<'a> {
             eta,
             self.cfg.lambda,
         );
-        self.finish_round(tau as u64, tau as u64);
+        self.finish_round(tau as u64, self.updates_for(tau as u64));
         let mut xb = self.arena.take(self.x.len());
         xb.copy_from_slice(&self.x);
         Upload::ElasticPush { x: xb }
@@ -951,6 +959,30 @@ mod tests {
         let up = node.cvr_sync_round(&view);
         assert!(matches!(up, Upload::State { .. }));
         assert_eq!(node.rounds_done(), 2);
+    }
+
+    /// Mini-batching keeps the budget in gradient evaluations: a batched
+    /// round charges the same evals as the per-sample round but only
+    /// `ceil(samples / B)` parameter updates (ragged tail included).
+    #[test]
+    fn batched_rounds_charge_full_evals_but_fewer_updates() {
+        let data = toy(2, 24, 3, 5);
+        let mut c = cfg(Algorithm::CentralVrSync, 2);
+        c.batch = 8;
+        let mut node = LocalNode::new(0, data.shard(0), Problem::Ridge, c, data.n_total());
+        let view = GlobalView { x: vec![0.0; 3], gbar: vec![0.0; 3] };
+        let _ = node.cvr_sync_round(&view);
+        assert_eq!(node.last_round_evals, 24);
+        assert_eq!(node.last_round_iters, 3); // ceil(24 / 8)
+
+        let mut c = cfg(Algorithm::DistSvrg, 2);
+        c.batch = 5;
+        c.tau = 12;
+        let mut node = LocalNode::new(0, data.shard(0), Problem::Ridge, c, data.n_total());
+        let _ = node.dsvrg_grad_partial(&view);
+        let _ = node.dsvrg_inner_round(&view);
+        assert_eq!(node.last_round_evals, 24); // 2 per inner iteration
+        assert_eq!(node.last_round_iters, 3); // ceil(12 / 5)
     }
 
     #[test]

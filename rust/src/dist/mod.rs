@@ -94,6 +94,15 @@ pub struct DistConfig {
     /// `--no-error-feedback` ablation) drops the error on the floor and
     /// demonstrably degrades convergence at int8.
     pub error_feedback: bool,
+    /// Mini-batch size B of the per-sample hot path (`--batch`, TOML
+    /// `batch`): every engine step draws B indices, evaluates their B
+    /// gradients at the current iterate through the blocked kernels, and
+    /// applies the averaged VR-corrected update in one fused pass. The
+    /// budget stays denominated in gradient evaluations (B samples = B
+    /// grads), so a round's eval count is unchanged — only the update
+    /// count shrinks to `ceil(len / B)`. B = 1 is bit-identical to the
+    /// classic per-sample path.
+    pub batch: usize,
 }
 
 impl Default for DistConfig {
@@ -115,6 +124,7 @@ impl Default for DistConfig {
             servers: 1,
             wire: codec::WireFormat::F32,
             error_feedback: true,
+            batch: 1,
         }
     }
 }

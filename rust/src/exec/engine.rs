@@ -133,15 +133,52 @@ pub trait EpochEngine {
 /// `EpochEngine` contract is unchanged and round drivers
 /// ([`crate::dist::local::RoundMachine`]) can build uploads from `x` /
 /// `gtilde` without knowing laziness exists.
-#[derive(Default)]
+/// Mini-batching (`--batch B`, ISSUE 10) is engine-internal: with
+/// `B > 1` every epoch arm walks its index sequence in chunks of B,
+/// evaluates the chunk's dloss scalars at one *fixed* iterate (blocked
+/// `dot_batch` on dense storage, per-row sparse dots after a single
+/// union-support catch-up on CSR), and applies the averaged
+/// VR-corrected update in one fused pass (`vr_step`/`sgd_step` with
+/// `coef = 1/B` on the accumulated data term; `LazyIterate::step_union`
+/// — one clock tick per batch — on CSR). Scalar-table algorithms read
+/// their correction terms (`alpha[i]`, SAGA's `gbar`) as of the *start
+/// of the batch*, which is the oracle the batched-parity suite averages
+/// eagerly. `B = 1` takes the per-sample code path verbatim, bit for
+/// bit.
 pub struct NativeEngine {
     /// Lazy-decay scratch, re-armed per sparse epoch (no reallocation).
     lazy: LazyIterate,
+    /// Mini-batch size B (>= 1). 1 = the classic per-sample path.
+    batch: usize,
+    /// Mini-batch scratch: dense accumulator, union-support tables,
+    /// per-row coefficient stash (steady-state allocation-free).
+    scratch: math::BatchScratch,
+}
+
+impl Default for NativeEngine {
+    fn default() -> Self {
+        NativeEngine {
+            lazy: LazyIterate::default(),
+            batch: 1,
+            scratch: math::BatchScratch::default(),
+        }
+    }
 }
 
 impl NativeEngine {
     pub fn new() -> Self {
         NativeEngine::default()
+    }
+
+    /// Engine stepping `b` samples per update (`b` is clamped to >= 1).
+    /// `with_batch(1)` is exactly [`NativeEngine::new`].
+    pub fn with_batch(b: usize) -> Self {
+        NativeEngine { batch: b.max(1), ..NativeEngine::default() }
+    }
+
+    /// The configured mini-batch size.
+    pub fn batch(&self) -> usize {
+        self.batch
     }
 }
 
@@ -151,6 +188,389 @@ fn sparse_row(shard: &Dataset, i: usize) -> (&[u32], &[f32]) {
     match shard.row_view(i) {
         RowView::Sparse { indices, values } => (indices, values),
         RowView::Dense(_) => unreachable!("sparse epoch over dense storage"),
+    }
+}
+
+/// The mini-batched (`B > 1`) bodies of the five epoch arms. Shared
+/// shape per chunk (B samples, ragged tail allowed):
+///
+/// 1. evaluate every row's dloss scalar at the chunk's *fixed* iterate
+///    (dense: blocked [`math::dot_batch`]; CSR: per-row sparse dots
+///    after ONE union-support catch-up);
+/// 2. fold each row's data term into one accumulator weighted by its
+///    algorithm coefficient — correction terms (`alpha[i]`, SAGA's
+///    `gbar`) read as of the start of the batch;
+/// 3. apply the averaged update in one fused pass (`vr_step` /
+///    `sgd_step` with `coef = 1/B`; [`LazyIterate::step_union`] on CSR
+///    — one lazy clock tick per chunk);
+/// 4. run the per-row table post-updates (`alpha`, `gtilde`, SAGA's
+///    `gbar`) after the step.
+///
+/// SAGA's lazy-validity invariant survives at batch granularity: `gbar`
+/// only mutates on union coordinates, which step 3 just materialized at
+/// the current clock, so `gbar[j]` stays constant over any interval the
+/// closed-form catch-up spans.
+impl NativeEngine {
+    #[allow(clippy::too_many_arguments)]
+    fn centralvr_epoch_batched(
+        &mut self,
+        p: Problem,
+        shard: &Dataset,
+        perm: &[u32],
+        x: &mut [f32],
+        alpha: &mut [f32],
+        gbar: &[f32],
+        gtilde_out: &mut [f32],
+        eta: f32,
+        lam: f32,
+        inv_n: f32,
+    ) {
+        let d = x.len();
+        self.scratch.ensure(d);
+        if shard.is_sparse() {
+            self.lazy.begin(d, eta, lam);
+            let mut cs: Vec<f32> = Vec::with_capacity(self.batch);
+            for chunk in perm.chunks(self.batch) {
+                self.scratch.begin_union();
+                for &iu in chunk {
+                    self.scratch.union_insert(sparse_row(shard, iu as usize).0);
+                }
+                self.lazy.catch_up(x, gbar, &self.scratch.union_idx);
+                cs.clear();
+                for &iu in chunk {
+                    let i = iu as usize;
+                    let (indices, values) = sparse_row(shard, i);
+                    let c = p.dloss(math::dot_sparse(indices, values, x), shard.label(i));
+                    self.scratch.accumulate_sparse(c - alpha[i], indices, values);
+                    cs.push(c);
+                }
+                let inv_b = 1.0 / chunk.len() as f32;
+                self.lazy.step_union(
+                    x,
+                    gbar,
+                    &self.scratch.union_idx,
+                    &self.scratch.union_acc,
+                    inv_b,
+                );
+                for (&iu, &c) in chunk.iter().zip(&cs) {
+                    let i = iu as usize;
+                    let (indices, values) = sparse_row(shard, i);
+                    alpha[i] = c;
+                    math::axpy_sparse(c * inv_n, indices, values, gtilde_out);
+                }
+            }
+            self.lazy.flush(x, gbar);
+            return;
+        }
+        let mut rows: Vec<RowView<'_>> = Vec::with_capacity(self.batch);
+        for chunk in perm.chunks(self.batch) {
+            rows.clear();
+            rows.extend(chunk.iter().map(|&iu| shard.row_view(iu as usize)));
+            let coefs = &mut self.scratch.coefs;
+            coefs.clear();
+            coefs.resize(chunk.len(), 0.0);
+            math::dot_batch(&rows, x, coefs);
+            let acc = &mut self.scratch.acc[..d];
+            math::zero(acc);
+            for (k, &iu) in chunk.iter().enumerate() {
+                let i = iu as usize;
+                let c = p.dloss(coefs[k], shard.label(i));
+                math::axpy_row(c - alpha[i], rows[k], acc);
+                coefs[k] = c;
+            }
+            let inv_b = 1.0 / chunk.len() as f32;
+            math::vr_step(x, acc, gbar, inv_b, eta, lam);
+            for (k, &iu) in chunk.iter().enumerate() {
+                let i = iu as usize;
+                alpha[i] = coefs[k];
+                math::axpy_row(coefs[k] * inv_n, rows[k], gtilde_out);
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn sgd_init_epoch_batched(
+        &mut self,
+        p: Problem,
+        shard: &Dataset,
+        perm: &[u32],
+        x: &mut [f32],
+        alpha: &mut [f32],
+        gtilde_out: &mut [f32],
+        eta: f32,
+        lam: f32,
+        inv_n: f32,
+    ) {
+        let d = x.len();
+        self.scratch.ensure(d);
+        if shard.is_sparse() {
+            self.lazy.begin(d, eta, lam);
+            let mut cs: Vec<f32> = Vec::with_capacity(self.batch);
+            for chunk in perm.chunks(self.batch) {
+                self.scratch.begin_union();
+                for &iu in chunk {
+                    self.scratch.union_insert(sparse_row(shard, iu as usize).0);
+                }
+                self.lazy.catch_up(x, &[], &self.scratch.union_idx);
+                cs.clear();
+                for &iu in chunk {
+                    let i = iu as usize;
+                    let (indices, values) = sparse_row(shard, i);
+                    let c = p.dloss(math::dot_sparse(indices, values, x), shard.label(i));
+                    self.scratch.accumulate_sparse(c, indices, values);
+                    cs.push(c);
+                }
+                let inv_b = 1.0 / chunk.len() as f32;
+                self.lazy.step_union(
+                    x,
+                    &[],
+                    &self.scratch.union_idx,
+                    &self.scratch.union_acc,
+                    inv_b,
+                );
+                for (&iu, &c) in chunk.iter().zip(&cs) {
+                    let i = iu as usize;
+                    let (indices, values) = sparse_row(shard, i);
+                    alpha[i] = c;
+                    math::axpy_sparse(c * inv_n, indices, values, gtilde_out);
+                }
+            }
+            self.lazy.flush(x, &[]);
+            return;
+        }
+        let mut rows: Vec<RowView<'_>> = Vec::with_capacity(self.batch);
+        for chunk in perm.chunks(self.batch) {
+            rows.clear();
+            rows.extend(chunk.iter().map(|&iu| shard.row_view(iu as usize)));
+            let coefs = &mut self.scratch.coefs;
+            coefs.clear();
+            coefs.resize(chunk.len(), 0.0);
+            math::dot_batch(&rows, x, coefs);
+            let acc = &mut self.scratch.acc[..d];
+            math::zero(acc);
+            for (k, &iu) in chunk.iter().enumerate() {
+                let i = iu as usize;
+                let c = p.dloss(coefs[k], shard.label(i));
+                math::axpy_row(c, rows[k], acc);
+                coefs[k] = c;
+            }
+            let inv_b = 1.0 / chunk.len() as f32;
+            math::sgd_step(x, acc, inv_b, eta, lam);
+            for (k, &iu) in chunk.iter().enumerate() {
+                let i = iu as usize;
+                alpha[i] = coefs[k];
+                math::axpy_row(coefs[k] * inv_n, rows[k], gtilde_out);
+            }
+        }
+    }
+
+    fn sgd_epoch_batched(
+        &mut self,
+        p: Problem,
+        shard: &Dataset,
+        idx: &[u32],
+        x: &mut [f32],
+        eta: f32,
+        lam: f32,
+    ) {
+        let d = x.len();
+        self.scratch.ensure(d);
+        if shard.is_sparse() {
+            self.lazy.begin(d, eta, lam);
+            for chunk in idx.chunks(self.batch) {
+                self.scratch.begin_union();
+                for &iu in chunk {
+                    self.scratch.union_insert(sparse_row(shard, iu as usize).0);
+                }
+                self.lazy.catch_up(x, &[], &self.scratch.union_idx);
+                for &iu in chunk {
+                    let i = iu as usize;
+                    let (indices, values) = sparse_row(shard, i);
+                    let c = p.dloss(math::dot_sparse(indices, values, x), shard.label(i));
+                    self.scratch.accumulate_sparse(c, indices, values);
+                }
+                let inv_b = 1.0 / chunk.len() as f32;
+                self.lazy.step_union(
+                    x,
+                    &[],
+                    &self.scratch.union_idx,
+                    &self.scratch.union_acc,
+                    inv_b,
+                );
+            }
+            self.lazy.flush(x, &[]);
+            return;
+        }
+        let mut rows: Vec<RowView<'_>> = Vec::with_capacity(self.batch);
+        for chunk in idx.chunks(self.batch) {
+            rows.clear();
+            rows.extend(chunk.iter().map(|&iu| shard.row_view(iu as usize)));
+            let coefs = &mut self.scratch.coefs;
+            coefs.clear();
+            coefs.resize(chunk.len(), 0.0);
+            math::dot_batch(&rows, x, coefs);
+            let acc = &mut self.scratch.acc[..d];
+            math::zero(acc);
+            for (k, &iu) in chunk.iter().enumerate() {
+                let c = p.dloss(coefs[k], shard.label(iu as usize));
+                math::axpy_row(c, rows[k], acc);
+            }
+            let inv_b = 1.0 / chunk.len() as f32;
+            math::sgd_step(x, acc, inv_b, eta, lam);
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn svrg_inner_batched(
+        &mut self,
+        p: Problem,
+        shard: &Dataset,
+        idx: &[u32],
+        x: &mut [f32],
+        xbar: &[f32],
+        gbar: &[f32],
+        eta: f32,
+        lam: f32,
+    ) {
+        let d = x.len();
+        self.scratch.ensure(d);
+        if shard.is_sparse() {
+            // the anchor xbar is frozen and fully materialized: its dots
+            // need no catch-up
+            self.lazy.begin(d, eta, lam);
+            for chunk in idx.chunks(self.batch) {
+                self.scratch.begin_union();
+                for &iu in chunk {
+                    self.scratch.union_insert(sparse_row(shard, iu as usize).0);
+                }
+                self.lazy.catch_up(x, gbar, &self.scratch.union_idx);
+                for &iu in chunk {
+                    let i = iu as usize;
+                    let (indices, values) = sparse_row(shard, i);
+                    let c = p.dloss(math::dot_sparse(indices, values, x), shard.label(i));
+                    let cbar =
+                        p.dloss(math::dot_sparse(indices, values, xbar), shard.label(i));
+                    self.scratch.accumulate_sparse(c - cbar, indices, values);
+                }
+                let inv_b = 1.0 / chunk.len() as f32;
+                self.lazy.step_union(
+                    x,
+                    gbar,
+                    &self.scratch.union_idx,
+                    &self.scratch.union_acc,
+                    inv_b,
+                );
+            }
+            self.lazy.flush(x, gbar);
+            return;
+        }
+        let mut rows: Vec<RowView<'_>> = Vec::with_capacity(self.batch);
+        let mut cbars: Vec<f32> = Vec::with_capacity(self.batch);
+        for chunk in idx.chunks(self.batch) {
+            rows.clear();
+            rows.extend(chunk.iter().map(|&iu| shard.row_view(iu as usize)));
+            let coefs = &mut self.scratch.coefs;
+            coefs.clear();
+            coefs.resize(chunk.len(), 0.0);
+            math::dot_batch(&rows, x, coefs);
+            cbars.clear();
+            cbars.resize(chunk.len(), 0.0);
+            math::dot_batch(&rows, xbar, &mut cbars);
+            let acc = &mut self.scratch.acc[..d];
+            math::zero(acc);
+            for (k, &iu) in chunk.iter().enumerate() {
+                let label = shard.label(iu as usize);
+                let c = p.dloss(coefs[k], label);
+                let cbar = p.dloss(cbars[k], label);
+                math::axpy_row(c - cbar, rows[k], acc);
+            }
+            let inv_b = 1.0 / chunk.len() as f32;
+            math::vr_step(x, acc, gbar, inv_b, eta, lam);
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn saga_epoch_batched(
+        &mut self,
+        p: Problem,
+        shard: &Dataset,
+        idx: &[u32],
+        x: &mut [f32],
+        alpha: &mut [f32],
+        gbar: &mut [f32],
+        eta: f32,
+        lam: f32,
+        n_inv: f32,
+    ) {
+        let d = x.len();
+        self.scratch.ensure(d);
+        // The averaged STEP reads batch-start state everywhere: every
+        // row's coefficient is `c - alpha[i]` against the pre-batch
+        // table (duplicates included) and `vr_step`/`step_union` read
+        // the pre-batch gbar. The table/gbar maintenance in the post
+        // loop is sequential: it recomputes each row's delta against
+        // the RUNNING alpha so that gbar stays exactly the table
+        // average even when a chunk repeats an index (bitwise the same
+        // subtraction as the step's delta when it does not).
+        if shard.is_sparse() {
+            self.lazy.begin(d, eta, lam);
+            let mut cs: Vec<f32> = Vec::with_capacity(self.batch);
+            for chunk in idx.chunks(self.batch) {
+                self.scratch.begin_union();
+                for &iu in chunk {
+                    self.scratch.union_insert(sparse_row(shard, iu as usize).0);
+                }
+                self.lazy.catch_up(x, gbar, &self.scratch.union_idx);
+                cs.clear();
+                for &iu in chunk {
+                    let i = iu as usize;
+                    let (indices, values) = sparse_row(shard, i);
+                    let c = p.dloss(math::dot_sparse(indices, values, x), shard.label(i));
+                    self.scratch.accumulate_sparse(c - alpha[i], indices, values);
+                    cs.push(c);
+                }
+                let inv_b = 1.0 / chunk.len() as f32;
+                self.lazy.step_union(
+                    x,
+                    gbar,
+                    &self.scratch.union_idx,
+                    &self.scratch.union_acc,
+                    inv_b,
+                );
+                for (&iu, &c) in chunk.iter().zip(&cs) {
+                    let i = iu as usize;
+                    let (indices, values) = sparse_row(shard, i);
+                    math::axpy_sparse(n_inv * (c - alpha[i]), indices, values, gbar);
+                    alpha[i] = c;
+                }
+            }
+            self.lazy.flush(x, gbar);
+            return;
+        }
+        let mut rows: Vec<RowView<'_>> = Vec::with_capacity(self.batch);
+        for chunk in idx.chunks(self.batch) {
+            rows.clear();
+            rows.extend(chunk.iter().map(|&iu| shard.row_view(iu as usize)));
+            let coefs = &mut self.scratch.coefs;
+            coefs.clear();
+            coefs.resize(chunk.len(), 0.0);
+            math::dot_batch(&rows, x, coefs);
+            let acc = &mut self.scratch.acc[..d];
+            math::zero(acc);
+            for (k, &iu) in chunk.iter().enumerate() {
+                let i = iu as usize;
+                let c = p.dloss(coefs[k], shard.label(i));
+                math::axpy_row(c - alpha[i], rows[k], acc);
+                coefs[k] = c;
+            }
+            let inv_b = 1.0 / chunk.len() as f32;
+            math::vr_step(x, acc, gbar, inv_b, eta, lam);
+            for (k, &iu) in chunk.iter().enumerate() {
+                let i = iu as usize;
+                math::axpy_row(n_inv * (coefs[k] - alpha[i]), rows[k], gbar);
+                alpha[i] = coefs[k];
+            }
+        }
     }
 }
 
@@ -169,6 +589,11 @@ impl EpochEngine for NativeEngine {
     ) {
         math::zero(gtilde_out);
         let inv_n = 1.0 / shard.n() as f32;
+        if self.batch > 1 {
+            return self.centralvr_epoch_batched(
+                p, shard, perm, x, alpha, gbar, gtilde_out, eta, lam, inv_n,
+            );
+        }
         if shard.is_sparse() {
             // O(nnz) hot path: defer the dense decay via lazy catch-up
             self.lazy.begin(x.len(), eta, lam);
@@ -207,6 +632,10 @@ impl EpochEngine for NativeEngine {
     ) {
         math::zero(gtilde_out);
         let inv_n = 1.0 / shard.n() as f32;
+        if self.batch > 1 {
+            return self
+                .sgd_init_epoch_batched(p, shard, perm, x, alpha, gtilde_out, eta, lam, inv_n);
+        }
         if shard.is_sparse() {
             // plain SGD has no gbar offset: catch-up is pure geometric
             // decay (a no-op at lam = 0, where scale == 1 exactly)
@@ -242,6 +671,9 @@ impl EpochEngine for NativeEngine {
         eta: f32,
         lam: f32,
     ) {
+        if self.batch > 1 {
+            return self.sgd_epoch_batched(p, shard, idx, x, eta, lam);
+        }
         if shard.is_sparse() {
             self.lazy.begin(x.len(), eta, lam);
             for &iu in idx {
@@ -273,6 +705,9 @@ impl EpochEngine for NativeEngine {
         eta: f32,
         lam: f32,
     ) {
+        if self.batch > 1 {
+            return self.svrg_inner_batched(p, shard, idx, x, xbar, gbar, eta, lam);
+        }
         if shard.is_sparse() {
             // x is lazy; the anchor xbar is frozen, so its dot needs no
             // catch-up
@@ -309,6 +744,9 @@ impl EpochEngine for NativeEngine {
         lam: f32,
         n_inv: f32,
     ) {
+        if self.batch > 1 {
+            return self.saga_epoch_batched(p, shard, idx, x, alpha, gbar, eta, lam, n_inv);
+        }
         if shard.is_sparse() {
             // gbar mutates, but only on coordinates the step also touches
             // in x: over any interval where coordinate j goes untouched,
@@ -491,6 +929,95 @@ mod tests {
             let expect = xbar[j] - eta * (gbar[j] + 2.0 * lam * xbar[j]);
             assert!((x[j] - expect).abs() < 1e-6, "j={j}");
         }
+    }
+
+    /// The batched CentralVR arm must be exactly the eager average of B
+    /// fixed-iterate gradients: we re-derive it here from the public
+    /// kernels (per-row `dot`, `axpy`, one `vr_step` with coef 1/B) and
+    /// demand bitwise agreement, ragged tail included.
+    #[test]
+    fn batched_centralvr_is_eager_average_of_fixed_iterate_grads() {
+        let ds = synth::toy_classification(10, 6, 7);
+        let p = Problem::Logistic;
+        let (n, d, b) = (10usize, 6usize, 4usize); // chunks 4,4,2
+        let (eta, lam) = (0.05f32, 1e-3f32);
+        let inv_n = 1.0 / n as f32;
+        let perm: Vec<u32> = (0..n as u32).rev().collect();
+        let x0 = vec![0.2f32; d];
+        let alpha0: Vec<f32> = (0..n).map(|i| 0.01 * i as f32).collect();
+        let gbar = vec![0.03f32; d];
+
+        let mut eng = NativeEngine::with_batch(b);
+        let mut x = x0.clone();
+        let mut alpha = alpha0.clone();
+        let mut gtilde = vec![0.0f32; d];
+        eng.centralvr_epoch(p, &ds, &perm, &mut x, &mut alpha, &gbar, &mut gtilde, eta, lam);
+
+        let (mut xo, mut ao) = (x0, alpha0);
+        let mut gto = vec![0.0f32; d];
+        for chunk in perm.chunks(b) {
+            let mut acc = vec![0.0f32; d];
+            let mut cs = Vec::new();
+            for &iu in chunk {
+                let i = iu as usize;
+                let c = p.dloss(math::dot(ds.row(i), &xo), ds.label(i));
+                math::axpy(c - ao[i], ds.row(i), &mut acc);
+                cs.push(c);
+            }
+            math::vr_step(&mut xo, &acc, &gbar, 1.0 / chunk.len() as f32, eta, lam);
+            for (&iu, &c) in chunk.iter().zip(&cs) {
+                let i = iu as usize;
+                ao[i] = c;
+                math::axpy(c * inv_n, ds.row(i), &mut gto);
+            }
+        }
+        assert_eq!(x, xo, "batched iterate must match the eager-average oracle bitwise");
+        assert_eq!(alpha, ao);
+        assert_eq!(gtilde, gto);
+    }
+
+    /// SAGA's gbar == table-average invariant must survive batching even
+    /// when one chunk repeats an index (the post-loop recomputes deltas
+    /// against the running table).
+    #[test]
+    fn batched_saga_gbar_stays_consistent_with_table() {
+        let ds = synth::toy_classification(24, 5, 3);
+        let p = Problem::Logistic;
+        let mut eng = NativeEngine::with_batch(4);
+        let x0 = vec![0.1f32; 5];
+        let n = 24;
+        let mut alpha = vec![0.0f32; n];
+        let mut gbar = vec![0.0f32; 5];
+        for i in 0..n {
+            alpha[i] = gradients::grad_scalar(p, &ds, i, &x0);
+            math::axpy(alpha[i] / n as f32, ds.row(i), &mut gbar);
+        }
+        let mut x = x0.clone();
+        // 3 appears twice INSIDE the first chunk of 4 and again later
+        let idx: Vec<u32> = vec![3, 17, 3, 9, 21, 3, 11, 2, 19, 5];
+        eng.saga_epoch(p, &ds, &idx, &mut x, &mut alpha, &mut gbar, 0.05, 1e-4, 1.0 / n as f32);
+        let mut expect = vec![0.0f32; 5];
+        for i in 0..n {
+            math::axpy(alpha[i] / n as f32, ds.row(i), &mut expect);
+        }
+        assert!(
+            math::max_abs_diff(&gbar, &expect) < 1e-5,
+            "batched incremental gbar drifted from table average"
+        );
+    }
+
+    /// `with_batch(1)` must take the classic per-sample path (the
+    /// dispatch guard is `batch > 1`), so it is bitwise `new()`.
+    #[test]
+    fn batch_of_one_is_bitwise_the_per_sample_path() {
+        let ds = synth::toy_least_squares(16, 4, 9);
+        let p = Problem::Ridge;
+        let idx: Vec<u32> = (0..16).collect();
+        let mut xa = vec![0.5f32; 4];
+        let mut xb = xa.clone();
+        NativeEngine::new().sgd_epoch(p, &ds, &idx, &mut xa, 0.02, 1e-3);
+        NativeEngine::with_batch(1).sgd_epoch(p, &ds, &idx, &mut xb, 0.02, 1e-3);
+        assert_eq!(xa, xb);
     }
 
     #[test]

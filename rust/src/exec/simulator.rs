@@ -362,6 +362,12 @@ struct Sim<'a> {
     total_grad_evals: u64,
     total_iterations: u64,
     converged: bool,
+    /// The run hit a terminal record (converged OR diverged) and the heap
+    /// was cleared: no further compute may run. Distinct from `converged`
+    /// (the reported outcome) because the batch-boundary lookahead can
+    /// pop events *before* the arrive that halts the run — those must do
+    /// no work either way.
+    halted: bool,
     events: u64,
     now: f64,
     scn: Option<ScenarioRun>,
@@ -425,6 +431,7 @@ impl<'a> Sim<'a> {
             total_grad_evals: 0,
             total_iterations: 0,
             converged: false,
+            halted: false,
             events: 0,
             now: 0.0,
             scn: None,
@@ -469,9 +476,9 @@ impl<'a> Sim<'a> {
     /// charge counters, price compute + transfer time, and schedule each
     /// upload's arrival at the server.
     fn run_compute_batch(&mut self, mut items: Vec<ComputeItem>) {
-        if items.is_empty() || self.converged {
-            // post-convergence replies are popped (and counted) but do no
-            // work — identical to the serial driver's historical behavior
+        if items.is_empty() || self.halted {
+            // post-halt replies are popped (and counted) but do no work —
+            // identical to the serial driver's historical behavior
             return;
         }
         self.counters.add_compute_batch();
@@ -584,6 +591,7 @@ impl<'a> Sim<'a> {
         });
         if self.check.converged(g) || self.check.diverged(g) {
             self.converged = self.check.converged(g);
+            self.halted = true;
             // stop: drain all future work by clearing the heap
             self.heap.clear();
         }
@@ -796,17 +804,40 @@ impl<'a> Sim<'a> {
             .collect();
         self.run_compute_batch(kick);
         'events: loop {
-            // drain every consecutive Reply at the head of the queue. A
-            // worker joins the compute batch the moment its S-th partial
-            // view lands (S = 1: every reply completes a set), stamped at
-            // that completing reply's time — set completion is a pure
-            // function of the serialized event order, so batch membership
-            // is identical at every thread width.
+            // Drain the head of the queue into one compute batch. A worker
+            // joins the batch the moment its S-th partial view lands
+            // (S = 1: every reply completes a set), stamped at that
+            // completing reply's time — set completion is a pure function
+            // of the serialized event order, so batch membership is
+            // identical at every thread width.
+            //
+            // Batch-boundary lookahead: an `Arrive` at the head does not
+            // have to end the batch. Server-state mutations must stay in
+            // virtual-time order, and a batched reply's compute can spawn
+            // a new arrive no earlier than its reply time plus the wire
+            // latency — so an arrive at `t <= min(batched reply t) +
+            // latency_s` cannot be preceded by anything the pending batch
+            // will schedule. Such arrives are processed inline (compute
+            // halves touch only worker state, server applies only server
+            // state, so the two commute) and the drain keeps going: the
+            // replies behind them join the same batch. Homogeneous runs
+            // are unaffected (the next arrive always trails the floor by
+            // the compute + payload time); heterogeneous clusters batch
+            // across the straggler boundary.
             let mut batch: Vec<ComputeItem> = Vec::new();
-            while matches!(
-                self.heap.peek().map(|e| &e.kind),
-                Some(EventKind::Reply { .. })
-            ) {
+            let mut reply_floor = f64::INFINITY;
+            loop {
+                let pop = match self.heap.peek() {
+                    Some(e) => match e.kind {
+                        EventKind::Reply { .. } => true,
+                        EventKind::Arrive { .. } => e.t <= reply_floor,
+                        _ => false,
+                    },
+                    None => false,
+                };
+                if !pop {
+                    break;
+                }
                 let ev = self.heap.pop().expect("peeked above");
                 self.events += 1;
                 if self.events > self.params.max_events {
@@ -814,34 +845,53 @@ impl<'a> Sim<'a> {
                     break 'events;
                 }
                 self.now = ev.t;
-                let EventKind::Reply { s, k, view } = ev.kind else {
-                    unreachable!("peek matched Reply");
-                };
-                debug_assert!(self.parts[s][k].is_none(), "duplicate reply part");
-                self.parts[s][k] = Some(view);
-                self.parts_left[s] -= 1;
-                if self.parts_left[s] > 0 {
-                    continue;
+                match ev.kind {
+                    EventKind::Reply { s, k, view } => {
+                        reply_floor = reply_floor.min(ev.t + self.cfg.network.latency_s);
+                        debug_assert!(self.parts[s][k].is_none(), "duplicate reply part");
+                        self.parts[s][k] = Some(view);
+                        self.parts_left[s] -= 1;
+                        if self.parts_left[s] > 0 {
+                            continue;
+                        }
+                        self.parts_left[s] = self.cfg.servers;
+                        let view = if self.cfg.servers == 1 {
+                            // single shard: move the view, don't concat-copy
+                            self.parts[s][0].take().expect("the one part landed")
+                        } else {
+                            let set: Vec<GlobalView> = self.parts[s]
+                                .iter_mut()
+                                .map(|part| part.take().expect("all parts landed"))
+                                .collect();
+                            GlobalView::concat(&set)
+                        };
+                        batch.push(ComputeItem {
+                            s,
+                            t0: ev.t,
+                            view: Some(view),
+                        });
+                    }
+                    EventKind::Arrive { s, k, upload } => {
+                        if !batch.is_empty() {
+                            // genuine lookahead: this arrive was jumped
+                            // into the batch window past pending replies
+                            self.counters.add_lookahead(1);
+                        }
+                        self.arrive(ev.t, s, k, upload);
+                        if self.halted {
+                            // terminal record cleared the heap; the batch
+                            // popped before it must do no work either
+                            break;
+                        }
+                    }
+                    EventKind::Death { .. } | EventKind::Rejoin { .. } => {
+                        unreachable!("churn events end the drain above")
+                    }
                 }
-                self.parts_left[s] = self.cfg.servers;
-                let view = if self.cfg.servers == 1 {
-                    // single shard: move the view instead of concat-copying
-                    self.parts[s][0].take().expect("the one part landed")
-                } else {
-                    let set: Vec<GlobalView> = self.parts[s]
-                        .iter_mut()
-                        .map(|part| part.take().expect("all parts landed"))
-                        .collect();
-                    GlobalView::concat(&set)
-                };
-                batch.push(ComputeItem {
-                    s,
-                    t0: ev.t,
-                    view: Some(view),
-                });
             }
             self.run_compute_batch(batch);
-            // then one serialized server event
+            // then one serialized event the drain refused (a too-distant
+            // arrive, or churn)
             let Some(ev) = self.heap.pop() else {
                 break;
             };
@@ -1176,6 +1226,58 @@ mod tests {
         assert_eq!(serial.trace.x, parallel.trace.x);
         assert_eq!(serial.events, parallel.events);
         assert_eq!(serial.counters, parallel.counters);
+    }
+
+    /// Homogeneous clusters never engage the batch-boundary lookahead:
+    /// every arrive trails the last drained reply's floor by its own
+    /// compute + payload time, so the drain ends exactly where the
+    /// historical one did.
+    #[test]
+    fn lookahead_is_a_no_op_on_homogeneous_runs() {
+        let data = toy_sharded(4, 64, 5);
+        let mut cfg = base_cfg(Algorithm::CentralVrAsync, 4);
+        cfg.tol = 0.0;
+        cfg.max_rounds = 8;
+        let rep = run(Problem::Ridge, &data, cfg, SimParams::analytic(5));
+        assert_eq!(
+            rep.counters.lookahead_arrives, 0,
+            "homogeneous run engaged the lookahead"
+        );
+    }
+
+    /// On a heterogeneous async cluster a straggler's arrive lands inside
+    /// the fast worker's reply window, so the lookahead processes it
+    /// inline and later replies join the same compute batch — strictly
+    /// fewer (so larger) batches, identical math at every thread width
+    /// (the width matrix lives in `rust/tests/sim_parallel_parity.rs`).
+    ///
+    /// Heterogeneity comes from shard size (speeds stay 1.0), so the
+    /// collision is hand-computable: with d=5 the analytic cost is
+    /// 30 ns/grad, so worker 0 (64 rows) computes in ~1.9 µs and worker 1
+    /// (12800 rows) in ~384 µs. Worker 0's round-2 reply lands at
+    /// ~414 µs, opening a floor window to ~514 µs; worker 1's round-1
+    /// arrive at ~484 µs falls inside it.
+    #[test]
+    fn lookahead_engages_on_heterogeneous_async_runs() {
+        let mut shards = synth::toy_least_squares_per_worker(2, 64, 5, 3);
+        shards[1] = synth::toy_least_squares_per_worker(1, 12_800, 5, 4).remove(0);
+        let data = ShardedDataset::from_shards(shards);
+        let mut cfg = base_cfg(Algorithm::CentralVrAsync, 2);
+        cfg.tol = 0.0;
+        cfg.max_rounds = 6;
+        let rep = run(Problem::Ridge, &data, cfg, SimParams::analytic(5));
+        assert!(
+            rep.counters.lookahead_arrives > 0,
+            "straggler async run never jumped an arrive into a batch"
+        );
+        let wide = run(
+            Problem::Ridge,
+            &data,
+            cfg,
+            SimParams::analytic(5).with_threads(3),
+        );
+        assert_eq!(rep.trace.x, wide.trace.x);
+        assert_eq!(rep.counters, wide.counters);
     }
 
     #[test]

@@ -90,6 +90,7 @@ pub fn dist_config(problem: Problem, algo: Algorithm, p: usize, n_per: usize, d:
         },
         wire: crate::dist::codec::WireFormat::F32,
         error_feedback: true,
+        batch: 1,
     }
 }
 

@@ -28,6 +28,12 @@ pub struct Counters {
     /// event order alone, so the count is thread-count-invariant — the
     /// parallel-vs-serial parity suite asserts it.
     pub compute_batches: AtomicU64,
+    /// Server `Arrive` events the simulator's batch-boundary lookahead
+    /// processed inline during a reply drain (past at least one pending
+    /// compute item), letting later replies join the same compute batch.
+    /// Zero on homogeneous runs; thread-count-invariant like
+    /// `compute_batches`.
+    pub lookahead_arrives: AtomicU64,
 }
 
 impl Counters {
@@ -68,6 +74,11 @@ impl Counters {
         self.compute_batches.fetch_add(1, Ordering::Relaxed);
     }
 
+    #[inline]
+    pub fn add_lookahead(&self, n: u64) {
+        self.lookahead_arrives.fetch_add(n, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> CounterSnapshot {
         CounterSnapshot {
             grad_evals: self.grad_evals.load(Ordering::Relaxed),
@@ -77,6 +88,7 @@ impl Counters {
             frames: self.frames.load(Ordering::Relaxed),
             server_rounds: self.server_rounds.load(Ordering::Relaxed),
             compute_batches: self.compute_batches.load(Ordering::Relaxed),
+            lookahead_arrives: self.lookahead_arrives.load(Ordering::Relaxed),
         }
     }
 }
@@ -91,6 +103,7 @@ pub struct CounterSnapshot {
     pub frames: u64,
     pub server_rounds: u64,
     pub compute_batches: u64,
+    pub lookahead_arrives: u64,
 }
 
 impl CounterSnapshot {

@@ -63,11 +63,25 @@ pub struct LazyIterate {
     /// the eager kernels bit-for-bit on the support fast path.
     scale: f32,
     eta: f32,
+    /// Memo table `pows[k] == (scale as f64).powi(k)`, grown on demand
+    /// and cleared by [`LazyIterate::begin`]. Catch-up gaps repeat the
+    /// same small `k` values constantly (the gap distribution is set by
+    /// the density), so caching the `powi` turns the dominant catch-up
+    /// cost into a table load. Bit-identical by construction: every
+    /// entry is the exact `powi` result the uncached path computes.
+    pows: Vec<f64>,
 }
 
-/// Apply `k` owed steps of `x <- scale*x - eta*g` in closed form.
+/// Memo entries are only kept for `k` below this; larger gaps (rare —
+/// they need ~CAP consecutive misses of a coordinate) fall back to the
+/// identical direct `powi`.
+const POW_CACHE_CAP: usize = 4096;
+
+/// Apply `k` owed steps of `x <- scale*x - eta*g` in closed form, with
+/// `sk == (scale as f64).powi(k)` supplied by the caller (memoized or
+/// direct — bitwise the same either way).
 #[inline]
-fn catch_coord(x: &mut f32, g: f32, k: u32, scale: f32, eta: f32) {
+fn catch_coord(x: &mut f32, g: f32, k: u32, sk: f64, scale: f32, eta: f32) {
     if scale == 1.0 {
         // no decay: k identical increments collapse to one f64 product
         // (bitwise no-op when g == 0, i.e. plain SGD at lam = 0)
@@ -77,7 +91,6 @@ fn catch_coord(x: &mut f32, g: f32, k: u32, scale: f32, eta: f32) {
         return;
     }
     let s = scale as f64;
-    let sk = s.powi(k as i32);
     if g == 0.0 {
         *x = (*x as f64 * sk) as f32;
     } else {
@@ -102,6 +115,22 @@ impl LazyIterate {
         self.last.resize(d, 0);
         self.scale = 1.0 - 2.0 * eta * lam;
         self.eta = eta;
+        self.pows.clear();
+    }
+
+    /// `scale^k` through the memo table (exact `powi` values; see the
+    /// `pows` field). Never consulted on the `scale == 1.0` fast path.
+    #[inline]
+    fn pow_scale(&mut self, k: u32) -> f64 {
+        let ku = k as usize;
+        if ku >= POW_CACHE_CAP {
+            return (self.scale as f64).powi(k as i32);
+        }
+        let s = self.scale as f64;
+        while self.pows.len() <= ku {
+            self.pows.push(s.powi(self.pows.len() as i32));
+        }
+        self.pows[ku]
     }
 
     /// The per-step decay factor currently armed (tests / diagnostics).
@@ -123,7 +152,8 @@ impl LazyIterate {
             let k = self.t - self.last[j];
             if k > 0 {
                 let g = if gbar.is_empty() { 0.0 } else { gbar[j] };
-                catch_coord(&mut x[j], g, k, self.scale, self.eta);
+                let sk = if self.scale == 1.0 { 1.0 } else { self.pow_scale(k) };
+                catch_coord(&mut x[j], g, k, sk, self.scale, self.eta);
                 self.last[j] = self.t;
             }
         }
@@ -156,6 +186,27 @@ impl LazyIterate {
         }
     }
 
+    /// One mini-batched step on the *union* support of a B-sample batch:
+    /// `acc` holds the batch's accumulated data term packed in `indices`
+    /// order, and `inv_b` (`1/B`) averages it. The whole batch advances
+    /// the clock by exactly ONE tick — coordinates outside the union owe
+    /// one more deferred decay, exactly as if the B averaged gradients
+    /// were a single sample whose support is the union. Arithmetically
+    /// this *is* [`LazyIterate::step_support`] with `values = acc` and
+    /// `coef = inv_b`; the alias exists so batched epoch arms read as
+    /// what they mean. The union must already be caught up.
+    #[inline]
+    pub fn step_union(
+        &mut self,
+        x: &mut [f32],
+        gbar: &[f32],
+        indices: &[u32],
+        acc: &[f32],
+        inv_b: f32,
+    ) {
+        self.step_support(x, gbar, indices, acc, inv_b);
+    }
+
     /// Materialize every coordinate at the current clock. Must run before
     /// anyone reads `x` wholesale (epoch/round boundaries: uploads,
     /// `gtilde`/`gbar` swaps, parity checks). Idempotent: a second flush
@@ -165,7 +216,8 @@ impl LazyIterate {
             let k = self.t - self.last[j];
             if k > 0 {
                 let g = if gbar.is_empty() { 0.0 } else { gbar[j] };
-                catch_coord(xj, g, k, self.scale, self.eta);
+                let sk = if self.scale == 1.0 { 1.0 } else { self.pow_scale(k) };
+                catch_coord(xj, g, k, sk, self.scale, self.eta);
                 self.last[j] = self.t;
             }
         }
@@ -334,6 +386,60 @@ mod tests {
         let snap = x.clone();
         lz.flush(&mut x, &gbar);
         assert_eq!(x, snap, "second flush must be a bitwise no-op");
+    }
+
+    #[test]
+    fn pow_cache_is_bitwise_identical_to_direct_powi() {
+        // the memo table stores the exact powi values, so a trajectory
+        // that exercises many distinct gaps must land on the same bits
+        // as an instance whose cache is cold at every access
+        let (d, steps) = (40usize, 300usize);
+        let (eta, lam) = (0.05f32, 2e-3f32);
+        let mut r = Pcg64::new(31);
+        let x0 = randvec(&mut r, d);
+        let gbar = randvec(&mut r, d);
+        let mut schedule = Vec::new();
+        for _ in 0..steps {
+            let j = (r.next_u64() % d as u64) as u32;
+            schedule.push((vec![j], vec![r.normal() as f32], 0.2 * r.normal() as f32));
+        }
+        let run = |reuse: bool| {
+            let mut x = x0.clone();
+            let mut lz = LazyIterate::new();
+            lz.begin(d, eta, lam);
+            for (indices, values, coef) in &schedule {
+                if !reuse {
+                    // cold cache at every step: recompute from scratch
+                    lz.pows.clear();
+                }
+                lz.catch_up(&mut x, &gbar, indices);
+                lz.step_support(&mut x, &gbar, indices, values, *coef);
+            }
+            lz.flush(&mut x, &gbar);
+            x
+        };
+        assert_eq!(run(true), run(false), "memoized powi drifted from direct");
+    }
+
+    #[test]
+    fn step_union_equals_step_support_on_packed_batch() {
+        let d = 24;
+        let mut r = Pcg64::new(33);
+        let x0 = randvec(&mut r, d);
+        let gbar = randvec(&mut r, d);
+        let idx = [1u32, 4, 9, 17];
+        let acc = [0.8f32, -0.3, 1.1, 0.05];
+        let inv_b = 1.0 / 8.0;
+        let mut xa = x0.clone();
+        let mut la = LazyIterate::new();
+        la.begin(d, 0.04, 1e-3);
+        la.step_union(&mut xa, &gbar, &idx, &acc, inv_b);
+        let mut xb = x0.clone();
+        let mut lb = LazyIterate::new();
+        lb.begin(d, 0.04, 1e-3);
+        lb.step_support(&mut xb, &gbar, &idx, &acc, inv_b);
+        assert_eq!(xa, xb, "step_union must be the step_support fma shape");
+        assert_eq!(la.steps(), 1, "a whole batch costs one clock tick");
     }
 
     #[test]

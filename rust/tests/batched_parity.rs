@@ -1,0 +1,248 @@
+//! Mini-batch (`--batch B`) parity suite (ISSUE 10).
+//!
+//! The contract under test, layer by layer:
+//!
+//! * the batched CSR epoch is the *eager averaging oracle* — B dloss
+//!   coefficients at one fixed iterate, one averaged VR step, table
+//!   post-updates after the step — to 1e-5 against a dense re-derivation
+//!   (the dense arm is pinned bitwise in `exec::engine`'s unit tests;
+//!   here the lazy union-support path meets the same oracle);
+//! * the budget ledger: batching divides parameter updates by B
+//!   (`updates_for`) while the gradient-evaluation budget — the paper's
+//!   x-axis — stays exactly fixed, for every engine-epoch algorithm on
+//!   both storage layouts;
+//! * all three drivers (threads, discrete-event simulator, real TCP
+//!   loopback) agree on the B=32 trajectory to 1e-5, ragged tail
+//!   included (48-sample shards chunk as 32+16);
+//! * the simulator's any-thread-width bit-identity survives batching.
+//!
+//! B=1 bit-identity needs no test here: `with_batch(1)` dispatches to
+//! the per-sample code path verbatim (pinned in `exec::engine`), so the
+//! existing parity suites ARE the B=1 contract.
+
+use std::net::TcpListener;
+use std::thread;
+
+use centralvr::config::schema::Algorithm;
+use centralvr::data::shard::ShardedDataset;
+use centralvr::data::synth;
+use centralvr::dist::transport::{self, ServeConfig};
+use centralvr::dist::DistConfig;
+use centralvr::exec::engine::{EpochEngine, NativeEngine};
+use centralvr::exec::simulator::{self, SimParams};
+use centralvr::exec::threads;
+use centralvr::model::glm::Problem;
+use centralvr::util::math;
+
+const P: usize = 4;
+const N_PER: usize = 48;
+const D: usize = 8;
+
+fn dense_shards() -> ShardedDataset {
+    ShardedDataset::from_shards(synth::toy_least_squares_per_worker(P, N_PER, D, 11))
+}
+
+fn csr_shards() -> ShardedDataset {
+    let ds = synth::sparse_classification(N_PER * P, D, 0.15, 11);
+    assert!(ds.is_sparse(), "suite must exercise the CSR path");
+    ShardedDataset::split(&ds, P, 11)
+}
+
+fn cfg(algorithm: Algorithm, batch: usize) -> DistConfig {
+    DistConfig {
+        algorithm,
+        p: P,
+        eta: 0.01,
+        tau: 16,
+        max_rounds: 8,
+        tol: 0.0, // fixed budget: every driver does the full schedule
+        seed: 29,
+        record_every: 2,
+        ps_batch: 8,
+        batch,
+        ..Default::default()
+    }
+}
+
+/// The batched CSR CentralVR epoch against the eager averaging oracle,
+/// re-derived here from the dense kernels on the densified twin: per
+/// chunk, every dloss coefficient is taken at the chunk's fixed iterate
+/// (correction `alpha[i]` as of the start of the batch), the averaged
+/// update lands in ONE `vr_step` with coef `1/chunk_len`, and the
+/// `alpha`/`gtilde` post-updates run after the step in row order. The
+/// lazy union-support path only differs from this by sparse-dot
+/// summation order, so 1e-5 bounds it. `gbar` is nonzero so the lazy
+/// catch-up actually moves off-support coordinates.
+#[test]
+fn batched_csr_epoch_matches_eager_averaging_oracle() {
+    let (n, d, b) = (40usize, 24usize, 8usize);
+    let sp = synth::sparse_classification(n, d, 0.2, 13);
+    assert!(sp.is_sparse());
+    let dn = sp.to_dense();
+    let p = Problem::Logistic;
+    let (eta, lam) = (0.05f32, 1e-3f32);
+    let inv_n = 1.0 / n as f32;
+    // reversed perm with a ragged tail: chunks of 8,8,8,8,4
+    let perm: Vec<u32> = (0..36u32).rev().collect();
+    let x0: Vec<f32> = (0..d).map(|j| 0.05 * (j as f32 - 3.0)).collect();
+    let alpha0: Vec<f32> = (0..n).map(|i| 0.01 * i as f32).collect();
+    let gbar: Vec<f32> = (0..d).map(|j| 0.002 * (j % 5) as f32).collect();
+
+    let mut eng = NativeEngine::with_batch(b);
+    let mut x = x0.clone();
+    let mut alpha = alpha0.clone();
+    let mut gtilde = vec![0.0f32; d];
+    eng.centralvr_epoch(p, &sp, &perm, &mut x, &mut alpha, &gbar, &mut gtilde, eta, lam);
+
+    let (mut xo, mut ao) = (x0, alpha0);
+    let mut gto = vec![0.0f32; d];
+    for chunk in perm.chunks(b) {
+        let mut acc = vec![0.0f32; d];
+        let mut cs = Vec::new();
+        for &iu in chunk {
+            let i = iu as usize;
+            let c = p.dloss(math::dot(dn.row(i), &xo), dn.label(i));
+            math::axpy(c - ao[i], dn.row(i), &mut acc);
+            cs.push(c);
+        }
+        math::vr_step(&mut xo, &acc, &gbar, 1.0 / chunk.len() as f32, eta, lam);
+        for (&iu, &c) in chunk.iter().zip(&cs) {
+            let i = iu as usize;
+            ao[i] = c;
+            math::axpy(c * inv_n, dn.row(i), &mut gto);
+        }
+    }
+    assert!(
+        math::max_abs_diff(&x, &xo) < 1e-5,
+        "CSR batched iterate drifted from the eager oracle: {}",
+        math::max_abs_diff(&x, &xo)
+    );
+    assert!(math::max_abs_diff(&alpha, &ao) < 1e-5, "alpha table drifted");
+    assert!(math::max_abs_diff(&gtilde, &gto) < 1e-5, "gtilde drifted");
+}
+
+/// The budget contract of `--batch`: for every algorithm whose local
+/// work routes through the engine epochs (PS-SVRG's server-side steps
+/// are already mini-batched by `ps_batch` and ignore the knob), B=8
+/// charges EXACTLY the per-sample gradient budget while performing
+/// strictly fewer parameter updates — and actually changes the
+/// trajectory (averaged steps are not per-sample steps).
+#[test]
+fn batching_keeps_grad_budget_and_divides_updates() {
+    let engine_algos = [
+        Algorithm::CentralVrSync,
+        Algorithm::CentralVrAsync,
+        Algorithm::DistSvrg,
+        Algorithm::DistSaga,
+        Algorithm::Easgd,
+    ];
+    for (data, problem, layout) in [
+        (dense_shards(), Problem::Ridge, "dense"),
+        (csr_shards(), Problem::Logistic, "csr"),
+    ] {
+        for algo in engine_algos {
+            let what = format!("{layout}/{}", algo.name());
+            let r1 = simulator::run(problem, &data, cfg(algo, 1), SimParams::analytic(D));
+            let r8 = simulator::run(problem, &data, cfg(algo, 8), SimParams::analytic(D));
+            assert_eq!(
+                r1.trace.grad_evals, r8.trace.grad_evals,
+                "{what}: the gradient-evaluation budget must not depend on B"
+            );
+            assert!(
+                r8.trace.iterations < r1.trace.iterations,
+                "{what}: B=8 must perform fewer updates ({} vs {})",
+                r8.trace.iterations,
+                r1.trace.iterations
+            );
+            assert_ne!(
+                r1.trace.x, r8.trace.x,
+                "{what}: batched steps must actually average (identical trajectory)"
+            );
+            assert!(r8.trace.x.iter().all(|v| v.is_finite()), "{what}: diverged");
+        }
+    }
+}
+
+/// The simulator's thread-width bit-identity contract survives batched
+/// compute halves: B=8 runs are bitwise identical at widths 1 and 4 for
+/// every engine-epoch algorithm on both layouts.
+#[test]
+fn batched_runs_stay_bit_identical_across_sim_widths() {
+    for (data, problem, layout) in [
+        (dense_shards(), Problem::Ridge, "dense"),
+        (csr_shards(), Problem::Logistic, "csr"),
+    ] {
+        for algo in [
+            Algorithm::CentralVrSync,
+            Algorithm::CentralVrAsync,
+            Algorithm::DistSaga,
+            Algorithm::Easgd,
+        ] {
+            let c = cfg(algo, 8);
+            let serial = simulator::run(problem, &data, c, SimParams::analytic(D));
+            let wide = simulator::run(problem, &data, c, SimParams::analytic(D).with_threads(4));
+            let what = format!("{layout}/{}", algo.name());
+            assert_eq!(serial.trace.x, wide.trace.x, "{what}: final iterate");
+            assert_eq!(serial.counters, wide.counters, "{what}: counters");
+        }
+    }
+}
+
+/// All three drivers on one B=32 CVR-Sync config (48-sample shards:
+/// ragged 32+16 chunks every epoch). The threads driver and the
+/// simulator service barrier rounds in worker order, the TCP server
+/// collects the same barrier over real sockets; endpoints agree to 1e-5.
+#[test]
+fn three_drivers_agree_at_batch_32() {
+    let data = dense_shards();
+    let c = cfg(Algorithm::CentralVrSync, 32);
+    let sim = simulator::run(Problem::Ridge, &data, c, SimParams::analytic(D));
+    let thr = threads::run(Problem::Ridge, &data, c);
+    assert!(
+        math::max_abs_diff(&thr.x, &sim.trace.x) <= 1e-5,
+        "threads vs simulator at B=32: {}",
+        math::max_abs_diff(&thr.x, &sim.trace.x)
+    );
+    assert_eq!(sim.trace.grad_evals, thr.grad_evals, "grad budgets must match");
+    assert_eq!(sim.trace.iterations, thr.iterations, "update counts must match");
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let scfg = ServeConfig {
+        p: P,
+        easgd_beta: c.easgd_beta,
+        read_timeout: None,
+        wire: c.wire,
+        servers: 1,
+        server_id: 0,
+    };
+    let rep = thread::scope(|scope| {
+        let server = scope.spawn(move || transport::serve(listener, scfg).unwrap());
+        let workers: Vec<_> = (0..P)
+            .map(|s| {
+                let addr = addr.clone();
+                let data = &data;
+                scope.spawn(move || {
+                    transport::run_worker(
+                        &addr,
+                        s,
+                        Problem::Ridge,
+                        data.shard(s),
+                        data.n_total(),
+                        c,
+                    )
+                    .unwrap()
+                })
+            })
+            .collect();
+        for h in workers {
+            h.join().unwrap();
+        }
+        server.join().unwrap()
+    });
+    assert!(
+        math::max_abs_diff(&rep.x, &sim.trace.x) <= 1e-5,
+        "TCP vs simulator at B=32: {}",
+        math::max_abs_diff(&rep.x, &sim.trace.x)
+    );
+}

@@ -96,6 +96,32 @@ fn cvr_async_int8_with_ef_matches_f32_and_no_ef_is_worse() {
     );
 }
 
+/// Mini-batching and quantization compose: at `--batch 32 --wire int8`
+/// with error feedback, the final loss must stay within the same 1e-3
+/// relative budget of the f32 run *at the same batch*. Batching changes
+/// the trajectory (fewer, averaged steps), so the f32 reference must be
+/// batched too — comparing against the B=1 f32 endpoint would conflate
+/// quantization error with the batching schedule change.
+#[test]
+fn batch_32_int8_with_ef_matches_batched_f32_final_loss() {
+    let data = data();
+    for algo in [Algorithm::CentralVrSync, Algorithm::CentralVrAsync] {
+        let mut f32_cfg = cfg(algo, WireFormat::F32, true);
+        f32_cfg.batch = 32;
+        let mut i8_cfg = cfg(algo, WireFormat::I8, true);
+        i8_cfg.batch = 32;
+        let (f32_loss, f32_x) = final_loss(&data, f32_cfg);
+        let (i8_loss, i8_x) = final_loss(&data, i8_cfg);
+        let r = rel(i8_loss, f32_loss);
+        assert!(
+            r <= 1e-3,
+            "{algo:?}: batch=32 int8+EF drifted {r:.3e} from f32 ({f32_loss} vs {i8_loss})"
+        );
+        // and the quantizer must actually be in the loop at B>1
+        assert_ne!(f32_x, i8_x, "{algo:?}: int8 run bit-identical to f32 at B=32");
+    }
+}
+
 /// f16 is a much finer grid than int8; with EF it must sit at least as
 /// close to the f32 endpoint as the 1e-3 budget, for both algorithms.
 #[test]

@@ -177,6 +177,36 @@ fn async_heterogeneous_speeds_stay_bit_identical() {
     }
 }
 
+/// Batch-boundary lookahead: a straggler's arrive that cannot affect a
+/// pending reply's compute is processed inline during the drain, letting
+/// later replies join the same compute batch. The shard imbalance makes
+/// the engagement deterministic (worker 1 computes ~200x longer per
+/// round, so its arrives land inside worker 0's reply windows), and the
+/// contract is the usual one: widths 1, 3, and 8 are bit-identical —
+/// including the `lookahead_arrives` counter itself.
+#[test]
+fn lookahead_batches_are_bit_identical_at_widths_1_3_8() {
+    let mut shards = synth::toy_least_squares_per_worker(2, 48, D, 11);
+    shards[1] = synth::toy_least_squares_per_worker(1, 9600, D, 12).remove(0);
+    let data = ShardedDataset::from_shards(shards);
+    let mut c = cfg(Algorithm::CentralVrAsync);
+    c.p = 2;
+    let serial = simulator::run(Problem::Ridge, &data, c, SimParams::analytic(D));
+    assert!(
+        serial.counters.lookahead_arrives > 0,
+        "straggler run must engage the lookahead for this test to mean anything"
+    );
+    for threads in [3usize, 8] {
+        let parallel = simulator::run(
+            Problem::Ridge,
+            &data,
+            c,
+            SimParams::analytic(D).with_threads(threads),
+        );
+        assert_identical(&serial, &parallel, &format!("lookahead threads={threads}"));
+    }
+}
+
 /// Convergence-based early stop clears the event queue mid-run; the
 /// parallel driver must cut off at exactly the same event.
 #[test]

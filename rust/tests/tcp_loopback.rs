@@ -13,6 +13,11 @@
 //! is lossless on grid-aligned values, so the in-process reference and
 //! the TCP run stay in lockstep at every wire format. CI re-runs the
 //! suite once at `CENTRALVR_WIRE=int8`.
+//!
+//! It likewise honors `CENTRALVR_BATCH=<B>`: mini-batching happens
+//! entirely inside the engine's epoch loop, below the wire, so every
+//! parity check here must hold unchanged at any batch size. CI re-runs
+//! the suite once at `CENTRALVR_BATCH=32`.
 
 use std::net::TcpListener;
 use std::thread;
@@ -45,6 +50,13 @@ fn wire_from_env() -> WireFormat {
     }
 }
 
+fn batch_from_env() -> usize {
+    match std::env::var("CENTRALVR_BATCH") {
+        Ok(v) => v.parse().expect("CENTRALVR_BATCH must be a positive integer"),
+        Err(_) => 1,
+    }
+}
+
 fn cfg(algorithm: Algorithm) -> DistConfig {
     DistConfig {
         algorithm,
@@ -55,6 +67,7 @@ fn cfg(algorithm: Algorithm) -> DistConfig {
         seed: 33,
         record_every: P,
         wire: wire_from_env(),
+        batch: batch_from_env(),
         ..Default::default()
     }
 }

@@ -3,34 +3,47 @@
 
 Usage: bench_diff.py <results_dir> <baselines_dir> [bench ...]
 
-Tracks three artifacts (all of them by default):
+Tracks four artifacts (all of them by default):
 
   * BENCH_sparse_steps.json  — lazy/eager/dense CentralVR epoch times
+  * BENCH_batched_steps.json — mini-batched round throughput (B sweep)
+    plus the measured gradient/update budget split in its "exact" block
   * BENCH_parallel_sim.json  — parallel-simulator wall-clock scaling
   * BENCH_wire_bytes.json    — exact quantized-payload frame sizes
 
 Two severities, chosen by what the number is:
 
   * EXACT quantities — everything under an artifact's "exact" block
-    (byte counts, frame sizes) plus ratios derived from them — are
-    deterministic integers: any drift from the committed baseline is a
-    codec change, not runner noise, so the script prints FAIL and exits
-    1. A missing artifact for a bench whose baseline carries an "exact"
-    block also fails: CI runs that section, so absence means breakage.
-    The same goes for any bench named explicitly on the command line —
-    asking for it and getting nothing is a failure, not a skip.
-  * TIME quantities (t_epoch_s, t_serial_s, t_parallel_s) are noisy on
-    shared runners: ratios above TIME_RATIO_WARN print WARN but never
-    fail the build.
+    (byte counts, frame sizes, gradient/update budgets) plus ratios
+    derived from them — are deterministic integers: any drift from the
+    committed baseline is a code change, not runner noise, so the
+    script prints FAIL and exits 1. A missing artifact for a bench
+    whose baseline carries an "exact" block also fails: CI runs that
+    section, so absence means breakage. The same goes for any bench
+    named explicitly on the command line — asking for it and getting
+    nothing is a failure, not a skip.
+  * TIME quantities (t_epoch_s, t_rounds_s, t_serial_s, t_parallel_s)
+    are noisy on shared runners: ratios above TIME_RATIO_WARN print
+    WARN but never fail the build.
 
-Floors: metrics["speedup_lazy_vs_eager"] below SPEEDUP_FLOOR warns (the
-PR-7 acceptance target); metrics["delta_dense_f32_over_int8"] below
-WIRE_RATIO_FLOOR fails (the PR-8 acceptance target — a pure function of
-frame layout, immune to runner noise).
+Floors: metrics["speedup_lazy_vs_eager"] below SPEEDUP_FLOOR and
+metrics["batched_speedup_csr_b32"] below BATCH_SPEEDUP_FLOOR warn (the
+PR-7 / PR-10 acceptance targets, wall-clock-derived and so runner-
+noisy); metrics["delta_dense_f32_over_int8"] below WIRE_RATIO_FLOOR
+fails (the PR-8 acceptance target — a pure function of frame layout,
+immune to runner noise).
 
-Unseeded time baselines (empty "runs" — placeholders committed because
-honest numbers must come from a real runner) print seeding instructions
-instead of diffing.
+Seeded vs placeholder baselines, per metric class: every artifact the
+bench writes carries "seeded": true; a committed baseline whose time
+entries never came from a real runner carries "seeded": false with an
+empty "runs" list. Exact quantities are authoritative either way and
+are always diffed. Time quantities are only diffed against a seeded
+baseline; a placeholder prints seeding instructions instead. An
+INCONSISTENT marker is a hard failure, not a warning: "seeded": true
+with no runs means CI has been silently diffing times against a
+placeholder since seeding supposedly happened, and "seeded": false
+with runs present means someone seeded without flipping the marker —
+either way the baseline is lying about what its numbers mean.
 """
 
 import json
@@ -39,10 +52,11 @@ import sys
 
 TIME_RATIO_WARN = 1.25
 SPEEDUP_FLOOR = 5.0
+BATCH_SPEEDUP_FLOOR = 2.0
 WIRE_RATIO_FLOOR = 3.5
 
-BENCHES = ["sparse_steps", "parallel_sim", "wire_bytes"]
-TIME_KEYS = ("t_epoch_s", "t_serial_s", "t_parallel_s")
+BENCHES = ["sparse_steps", "batched_steps", "parallel_sim", "wire_bytes"]
+TIME_KEYS = ("t_epoch_s", "t_rounds_s", "t_serial_s", "t_parallel_s")
 
 
 def load(path):
@@ -62,17 +76,34 @@ def run_key(run):
 
 
 def diff_times(name, cur, base):
-    """Warn-only wall-clock comparison; returns nothing fatal."""
+    """Wall-clock comparison: warn-only on ratios, but an inconsistent
+    seeded marker is a hard failure. Returns failure count."""
     if "runs" not in base and "runs" not in cur:
-        return  # purely exact artifact (wire_bytes): nothing timed
+        return 0  # purely exact artifact (wire_bytes): nothing timed
+    seeded = base.get("seeded")
+    if seeded is True and not base.get("runs"):
+        print(
+            f"bench_diff: FAIL {name}: baseline claims \"seeded\": true but carries "
+            "no timing runs — CI has been diffing times against a placeholder. "
+            "Re-seed the baseline or mark it \"seeded\": false."
+        )
+        return 1
+    if seeded is False and base.get("runs"):
+        print(
+            f"bench_diff: FAIL {name}: baseline is marked \"seeded\": false but "
+            "carries timing runs — flip the marker to true if these numbers came "
+            "from a real runner, or drop them if they did not."
+        )
+        return 1
     if not base.get("runs"):
         print(
-            f"bench_diff: {name}: baseline is unseeded (no runs). Seed from a real "
-            f"runner:\n    cargo bench --bench hot_paths -- {name}\n"
+            f"bench_diff: {name}: baseline is an unseeded placeholder. Seed from a "
+            f"real runner:\n    cargo bench --bench hot_paths -- {name}\n"
             f"    cp results/BENCH_{name}.json rust/benches/baselines/BENCH_{name}.json\n"
-            "and commit the result."
+            "and commit the result (the bench already stamps \"seeded\": true into "
+            "the artifact it writes)."
         )
-        return
+        return 0
     base_by_key = {run_key(r): r for r in base.get("runs", [])}
     for run in cur.get("runs", []):
         ref = base_by_key.get(run_key(run))
@@ -94,6 +125,7 @@ def diff_times(name, cur, base):
                     f"bench_diff: ok {name}/{run_key(run)} {key}: "
                     f"{t_cur:.4f}s vs {t_base:.4f}s ({ratio:.2f}x)"
                 )
+    return 0
 
 
 def diff_exact(name, cur, base):
@@ -108,13 +140,13 @@ def diff_exact(name, cur, base):
         elif key not in base_exact:
             print(
                 f"bench_diff: FAIL {name}: exact key {key!r} has no baseline "
-                "(new frame kind? update the committed baseline in the same PR)"
+                "(new case? update the committed baseline in the same PR)"
             )
             failures += 1
         elif cur_exact[key] != base_exact[key]:
             print(
                 f"bench_diff: FAIL {name}: {key} = {cur_exact[key]} but baseline "
-                f"says {base_exact[key]} (frame layout changed)"
+                f"says {base_exact[key]} (deterministic quantity drifted)"
             )
             failures += 1
     if not failures and base_exact:
@@ -137,6 +169,18 @@ def check_floors(name, cur):
             print(
                 f"bench_diff: ok {name}: speedup_lazy_vs_eager = {speedup:.2f}x "
                 f"(floor {SPEEDUP_FLOOR:.0f}x)"
+            )
+    batched = metrics.get("batched_speedup_csr_b32")
+    if batched is not None:
+        if batched < BATCH_SPEEDUP_FLOOR:
+            print(
+                f"bench_diff: WARN {name}: batched_speedup_csr_b32 = {batched:.2f}x "
+                f"is below the {BATCH_SPEEDUP_FLOOR:.0f}x acceptance floor"
+            )
+        else:
+            print(
+                f"bench_diff: ok {name}: batched_speedup_csr_b32 = {batched:.2f}x "
+                f"(floor {BATCH_SPEEDUP_FLOOR:.0f}x)"
             )
     ratio = metrics.get("delta_dense_f32_over_int8")
     if ratio is not None:
@@ -191,7 +235,7 @@ def main() -> int:
             continue
         failures += diff_exact(name, cur, base)
         failures += check_floors(name, cur)
-        diff_times(name, cur, base)
+        failures += diff_times(name, cur, base)
 
     if failures:
         print(f"bench_diff: {failures} hard failure(s)")
